@@ -1,0 +1,202 @@
+"""Shared benchmark substrate.
+
+- trains (once, cached) a small-but-real DiT on the synthetic latent
+  dataset with the exact DDPM objective,
+- calibrates every quantization scheme once per bit-width (cached),
+- samples with each scheme and scores FD / sFD / IS-proxy + noise-MSE,
+  the CPU-scale stand-ins for FID / sFID / IS (see repro.core.metrics).
+
+All artifacts land under experiments/ so table benchmarks are re-runnable
+and individually cheap.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_dit_calibration, dit_loss_fn,
+                        make_quant_context, run_ptq)
+from repro.core.baselines import SCHEMES
+from repro.core.metrics import ClassProxy, FeatureNet, fd_score, sfd_score, \
+    inception_score_proxy
+from repro.data import LatentPipeline
+from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule, q_sample
+from repro.models import DiTCfg, dit_apply, dit_init
+from repro.optim import adamw, apply_updates, cosine_schedule
+
+EXP = os.environ.get("REPRO_EXP_DIR",
+                     os.path.join(os.path.dirname(__file__), "..",
+                                  "experiments"))
+
+# 64 tokens so post-softmax probs (~1/64) sit BELOW the W6A6 uniform step
+# (1/31) — the regime where the paper's MRQ is structurally necessary —
+# and 6 layers so per-op quantization errors compound through the stack.
+BENCH_DIT = DiTCfg(img_size=16, in_ch=4, patch=2, d_model=160, n_layers=6,
+                   n_heads=4, n_classes=8)
+DIF = DiffusionCfg(T=1000, tgq_groups=10)
+TRAIN_STEPS = int(os.environ.get("REPRO_DIT_STEPS", 450))
+N_EVAL_REAL = 1024
+N_GEN = int(os.environ.get("REPRO_N_GEN", 128))
+GEN_BATCH = 64
+
+
+def pipeline() -> LatentPipeline:
+    return LatentPipeline(BENCH_DIT.img_size, BENCH_DIT.in_ch,
+                          BENCH_DIT.n_classes, seed=11, noise=0.3)
+
+
+def trained_dit(force: bool = False):
+    """Train (or load) the benchmark DiT. Returns (cfg, params)."""
+    os.makedirs(EXP, exist_ok=True)
+    path = os.path.join(EXP, f"dit_bench_{TRAIN_STEPS}.pkl")
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            return BENCH_DIT, pickle.load(f)
+
+    cfg = BENCH_DIT
+    key = jax.random.PRNGKey(0)
+    params = dit_init(key, cfg)
+    sched = make_schedule(DIF)
+    pipe = pipeline()
+    opt = adamw(cosine_schedule(2e-3, 50, TRAIN_STEPS), weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, x0, t, y, noise):
+        xt = q_sample(sched, x0, t, noise)
+        eps = dit_apply(p, cfg, xt, t, y)
+        return jnp.mean(jnp.square(eps - noise))
+
+    @jax.jit
+    def step(p, o, x0, t, y, noise):
+        l, g = jax.value_and_grad(loss_fn)(p, x0, t, y, noise)
+        u, o = opt.update(g, o, p)
+        return l, apply_updates(p, u), o
+
+    B = 64
+    t0 = time.time()
+    for i in range(TRAIN_STEPS):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x0, y = pipe.sample(B, k1)
+        t = jax.random.randint(k2, (B,), 0, DIF.T)
+        noise = jax.random.normal(k3, x0.shape)
+        l, params, opt_state = step(params, opt_state, x0, t, y, noise)
+        if i % 100 == 0 or i == TRAIN_STEPS - 1:
+            print(f"  [dit-train] step {i} loss {float(l):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    host = jax.tree.map(np.asarray, params)
+    with open(path, "wb") as f:
+        pickle.dump(host, f)
+    return cfg, host
+
+
+def calibration_set(params, cfg, n_per_group=32, batch=8, seed=3):
+    sched = make_schedule(DIF)
+    pipe = pipeline()
+    return build_dit_calibration(
+        params, cfg, DIF, sched, lambda n, k: pipe.sample(n, k)[0],
+        jax.random.PRNGKey(seed), n_per_group=n_per_group, batch=batch)
+
+
+def calibrate(scheme: str, bits: int, params, cfg, calib=None,
+              force: bool = False, **overrides):
+    """Run (or load) one scheme's PTQ. Returns (qparams, report)."""
+    path = os.path.join(EXP, f"qparams_{scheme.replace('+','p')}_w{bits}a{bits}"
+                             f"_{TRAIN_STEPS}.pkl")
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            d = pickle.load(f)
+        return d["qparams"], d["report"]
+    calib = calib or calibration_set(params, cfg)
+    over = {"tgq_groups": DIF.tgq_groups, "n_alpha": 8,
+            "rounds": 2, "max_rows_per_batch": 96}
+    over.update(overrides)
+    qcfg = SCHEMES[scheme](bits, bits, **over)
+    qp, rep = run_ptq(dit_loss_fn(params, cfg), calib, qcfg)
+    with open(path, "wb") as f:
+        pickle.dump({"qparams": qp, "report": rep}, f)
+    return qp, rep
+
+
+def generate(params, cfg, ctx=None, steps=50, n=N_GEN, seed=123):
+    """Sample n latents with the (possibly quantized) model."""
+    from repro.nn.ctx import FPContext
+    ctx = ctx or FPContext()
+    sched = make_schedule(DIF)
+    eps = lambda x, t, y, c: dit_apply(params, cfg, x, t, y, ctx=c)
+    outs, labels = [], []
+    key = jax.random.PRNGKey(seed)
+    for s in range(0, n, GEN_BATCH):
+        b = min(GEN_BATCH, n - s)
+        key, k1, k2 = jax.random.split(key, 3)
+        y = jax.random.randint(k1, (b,), 0, cfg.n_classes)
+        x = ddpm_sample(eps, DIF, sched, (b, cfg.img_size, cfg.img_size,
+                                          cfg.in_ch), y, k2, steps=steps,
+                        ctx=ctx)
+        outs.append(np.asarray(x))
+        labels.append(np.asarray(y))
+    return np.concatenate(outs), np.concatenate(labels)
+
+
+_EVAL_CACHE = {}
+
+
+def eval_assets():
+    """(real latents, labels, feature net, class proxy) — cached."""
+    if "assets" not in _EVAL_CACHE:
+        pipe = pipeline()
+        real, labels = pipe.labeled_set(N_EVAL_REAL, jax.random.PRNGKey(999))
+        net = FeatureNet.make(int(np.prod(real.shape[1:])), seed=1234)
+        proxy = ClassProxy.fit(real, labels, BENCH_DIT.n_classes)
+        _EVAL_CACHE["assets"] = (real, labels, net, proxy)
+    return _EVAL_CACHE["assets"]
+
+
+def score(gen: np.ndarray) -> dict:
+    real, _, net, proxy = eval_assets()
+    return {
+        "FD": round(fd_score(real, gen, net), 3),
+        "sFD": round(sfd_score(real, gen), 3),
+        "IS*": round(inception_score_proxy(gen, proxy), 3),
+    }
+
+
+def noise_mse(params, cfg, ctx, n=128, seed=55) -> float:
+    """Quantized-vs-FP noise prediction MSE across timestep groups."""
+    sched = make_schedule(DIF)
+    pipe = pipeline()
+    key = jax.random.PRNGKey(seed)
+    tot = 0.0
+    cnt = 0
+    for g in range(DIF.tgq_groups):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x0, y = pipe.sample(n // DIF.tgq_groups, k1)
+        t = jax.random.randint(k2, (x0.shape[0],),
+                               g * DIF.T // DIF.tgq_groups,
+                               (g + 1) * DIF.T // DIF.tgq_groups)
+        noise = jax.random.normal(k3, x0.shape)
+        xt = q_sample(sched, x0, t, noise)
+        fp = dit_apply(params, cfg, xt, t, y)
+        qt = dit_apply(params, cfg, xt, t, y, ctx=ctx.with_tgroup(g))
+        tot += float(jnp.mean((fp - qt) ** 2))
+        cnt += 1
+    return tot / cnt
+
+
+def emit(table: str, rows: list) -> None:
+    """Print CSV rows and append to experiments/results.json."""
+    os.makedirs(EXP, exist_ok=True)
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    path = os.path.join(EXP, "results.json")
+    data = {}
+    if os.path.exists(path):
+        data = json.load(open(path))
+    data[table] = [list(r) for r in rows]
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)

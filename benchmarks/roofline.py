@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# Roofline analysis (EXPERIMENTS.md section "Roofline").
+#
+# Methodology: cost_analysis() counts a lax.scan body ONCE and XLA:CPU
+# stages bf16 compute through f32 buffers, so the raw dry-run numbers need
+# care. We therefore lower each (arch x shape) UNROLLED (scan off) at
+# n_layers=1 and n_layers=2 on the production mesh; the L2-L1 diff is the
+# exact per-layer cost, and total = base + L x per-layer. Collective bytes
+# are parsed from the compiled HLO text the same way. Cross-checked against
+# the 6ND model-FLOPs identity (the MODEL/HLO ratio column).
+#
+# Terms (TPU v5e, per chip): compute = FLOPs / 197e12, memory =
+# bytes / 819e9, collective = coll_bytes / 50e9 (ICI). The dominant term
+# is the bottleneck; the roofline fraction = compute / dominant.
+#
+# Run: PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S]
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def measure(arch, shape_id, overrides=None, force_micro=1):
+    """Lower+compile at L=1 and L=2 (unrolled), return per-layer stats."""
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.launch.hlo_stats import collective_stats
+
+    mesh = make_production_mesh(multi_pod=False)
+    out = {}
+    for L in (1, 2):
+        over = {"n_layers": L, "scan_layers": False, "remat": False,
+                "grad_accum": 1}
+        if arch == "whisper-tiny":
+            over["n_enc_layers"] = L
+        if arch == "hymba-1.5b":
+            over["global_layers"] = ()
+        over.update(overrides or {})
+        cell = build_cell(arch, shape_id, mesh, cfg_overrides=over,
+                          force_micro=force_micro)
+        with mesh:
+            lowered = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                              donate_argnums=cell["donate_argnums"])\
+                .lower(*cell["args"])
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        colls = collective_stats(compiled.as_text())
+        out[L] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(sum(v["bytes"] for v in colls.values())),
+            "coll_by_kind": {k: v["bytes"] for k, v in colls.items()},
+            "meta": cell["meta"],
+        }
+    return out
+
+
+HW = {"flops": 197e12, "hbm": 819e9, "ici": 50e9}
+N_DEV = 256
+TP = 16
+
+
+def analytic_bytes(cfg, kind: str, batch: int, seq: int, tp: int = TP
+                   ) -> float:
+    """Napkin per-device HBM traffic (bytes/step) for the TPU target.
+
+    XLA:CPU's 'bytes accessed' counts every unfused op's operands at f32,
+    inflating the memory term ~100-200x vs a fused TPU execution, so the
+    memory TERM uses this analytic model (params + cache + activation
+    traffic under standard fusion assumptions); HLO bytes are reported
+    alongside for reference.
+    """
+    from repro.models import DiTCfg
+    if isinstance(cfg, DiTCfg):
+        n_par = cfg.n_params()
+        tok_loc = batch * cfg.n_tokens / tp       # batch sharded on "data"
+        p_dev = n_par * 2 / tp                    # bf16 TP shard per pass
+        if kind == "dit_train":
+            act = 2 * cfg.n_layers * tok_loc * cfg.d_model * 2 * 2
+            return 2 * 2 * p_dev + (4 + 16) * n_par * 4 / N_DEV + act
+        return 2 * p_dev + 4 * tok_loc * cfg.d_model * 2
+    n_act = cfg.n_active_params()
+    p_dev = n_act * 2 / tp                        # bf16 weights, TP-sharded
+    tok_loc = batch * seq / tp
+    d = cfg.d_model
+
+    # decode-cache bytes (read once per step)
+    if cfg.block_type == "ssm_only":
+        cache = cfg.n_layers * batch * (cfg.d_inner * cfg.ssm_state * 4)
+    elif cfg.attn_type == "mla":
+        cache = cfg.n_layers * batch * seq * (cfg.kv_lora + cfg.rope_dim) * 2
+    else:
+        cache = cfg.n_layers * batch * seq * 2 * cfg.n_kv_heads \
+            * cfg.head_dim * 2
+        if cfg.block_type == "hymba":
+            cache += cfg.n_layers * batch * (cfg.d_inner * cfg.ssm_state * 4)
+
+    if kind == "train":
+        # fwd+bwd weight reads, grad write (f32), AdamW/Adafactor state rw,
+        # remat carries written+read, logits path
+        opt = (4 + 16) * cfg.n_params() * 4 / N_DEV
+        act = 2 * cfg.n_layers * tok_loc * d * 2 * 2
+        logits = tok_loc * (cfg.vocab / tp) * 10
+        return 2 * 2 * p_dev + opt + act + logits
+    if kind == "prefill":
+        act = 4 * cfg.n_layers * tok_loc * d * 2
+        return 2 * p_dev + act + cache / N_DEV
+    # decode: weights + cache dominate
+    return 2 * p_dev + cache / N_DEV + batch * cfg.vocab / tp * 2
+
+
+def model_flops(meta, cfg) -> float:
+    """6ND (train) / 2ND (inference) useful-FLOPs identity, global."""
+    from repro.configs import SHAPES, DIT_SHAPES
+    from repro.models import DiTCfg
+    kind = meta["kind"]
+    if isinstance(cfg, DiTCfg):
+        n = cfg.n_params()
+        sh = DIT_SHAPES["train_256" if kind == "dit_train" else "sample_128"]
+        toks = sh["batch"] * cfg.n_tokens
+        return (6 if kind == "dit_train" else 2) * n * toks
+    n = cfg.n_active_params()
+    sh = SHAPES[meta["shape"]] if "shape" in meta else None
+    if kind == "train":
+        return 6 * n * meta_tokens(meta)
+    if kind == "prefill":
+        return 2 * n * meta_tokens(meta)
+    return 2 * n * meta["batch_"]          # decode: one token per sequence
+
+
+def meta_tokens(meta):
+    return meta["batch_"] * meta["seq_"]
+
+
+def analyse(arch, shape_id, rec, n_devices=256, tp=TP):
+    """Extrapolate L1/L2 to the full config and compute the three terms."""
+    from repro.configs import get as get_cfg
+    from repro.models import DiTCfg
+    cfg = get_cfg(arch)
+    L = cfg.n_layers
+    per = {k: rec[2][k] - rec[1][k] for k in ("flops", "bytes", "coll")}
+    tot = {k: rec[1][k] + (L - 1) * per[k] for k in per}
+
+    meta = dict(rec[1]["meta"])
+    from repro.configs import SHAPES, DIT_SHAPES
+    sh = (DIT_SHAPES if arch == "dit-xl-2" else SHAPES)[shape_id]
+    meta["batch_"] = sh["batch"]
+    meta["seq_"] = sh.get("seq", 0)
+    meta["shape"] = shape_id
+
+    t_comp = tot["flops"] / HW["flops"]
+    t_mem_hlo = tot["bytes"] / HW["hbm"]
+    an_bytes = analytic_bytes(cfg, meta["kind"], meta["batch_"],
+                              meta["seq_"] or 1, tp=tp)
+    t_mem = an_bytes / HW["hbm"]
+    t_coll = tot["coll"] / HW["ici"]
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])
+    mf = model_flops(meta, cfg)
+    hlo_global = tot["flops"] * n_devices
+    return {
+        "arch": arch, "shape": shape_id,
+        "flops_dev": tot["flops"], "bytes_dev_hlo": tot["bytes"],
+        "bytes_dev_analytic": an_bytes, "coll_dev": tot["coll"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_hlo_s": t_mem_hlo, "t_collective_s": t_coll,
+        "bottleneck": dom[0],
+        "roofline_frac": t_comp / dom[1] if dom[1] > 0 else 1.0,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "model_over_hlo": mf / hlo_global if hlo_global else 0.0,
+        "n_micro": rec[1]["meta"].get("n_micro", 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, cells
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results if "error" not in r}
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    for arch in archs:
+        for shape_id, _ in cells(arch):
+            if args.shape and shape_id != args.shape:
+                continue
+            if (arch, shape_id) in done:
+                continue
+            t0 = time.time()
+            try:
+                rec = measure(arch, shape_id)
+                r = analyse(arch, shape_id, rec)
+                r["measure_s"] = round(time.time() - t0, 1)
+                dom_t = max(r["t_compute_s"], r["t_memory_s"],
+                            r["t_collective_s"])
+                print(f"[roofline] {arch} x {shape_id}: "
+                      f"comp={r['t_compute_s']*1e3:.2f}ms "
+                      f"mem={r['t_memory_s']*1e3:.2f}ms "
+                      f"coll={r['t_collective_s']*1e3:.2f}ms "
+                      f"-> {r['bottleneck']} "
+                      f"(frac={r['roofline_frac']:.2f}, "
+                      f"model/hlo={r['model_over_hlo']:.2f})", flush=True)
+            except Exception as e:  # noqa: BLE001
+                r = {"arch": arch, "shape": shape_id,
+                     "error": f"{type(e).__name__}: {e}",
+                     "trace": traceback.format_exc()[-1500:]}
+                print(f"[roofline] FAIL {arch} x {shape_id}: {r['error']}",
+                      flush=True)
+            results.append(r)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table3,fig2
+  REPRO_DIT_STEPS=200 REPRO_N_GEN=128 ... --fast       # reduced budgets
+
+The roofline matrix is heavyweight (512-device compiles) and runs as its
+own module: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,fig2,"
+                         "fig3,kernel_micro")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sampling budget (CI-scale)")
+    args = ap.parse_args()
+
+    if args.fast:
+        os.environ.setdefault("REPRO_DIT_STEPS", "200")
+        os.environ.setdefault("REPRO_N_GEN", "128")
+
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("fig2"):
+        from benchmarks import fig2_distributions
+        print("== Fig 2: value distributions ==", flush=True)
+        fig2_distributions.main()
+    if want("fig3"):
+        from benchmarks import fig3_time_variance
+        print("== Fig 3: timestep variance ==", flush=True)
+        fig3_time_variance.main()
+    if want("kernel_micro"):
+        from benchmarks import kernel_micro
+        print("== kernel micro ==", flush=True)
+        kernel_micro.main()
+    if want("table4"):
+        from benchmarks import table4_efficiency
+        print("== Table IV: calibration efficiency ==", flush=True)
+        table4_efficiency.main()
+    if want("table3"):
+        from benchmarks import table3_ablation
+        print("== Table III: ablation (W6A6) ==", flush=True)
+        table3_ablation.main()
+    if want("table1"):
+        from benchmarks import table1_quality
+        print("== Table I: quality (long schedule) ==", flush=True)
+        table1_quality.main()
+    if want("table2"):
+        from benchmarks import table2_quality
+        print("== Table II: quality (short schedule) ==", flush=True)
+        table2_quality.main()
+    print(f"== all done in {time.time()-t0:.0f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table I: W8A8 / W6A6 quality comparison at the LONG sampling schedule
+(paper: 250 DDPM steps; CPU-scale: 50 respaced steps, recorded deviation).
+
+Schemes: Q-Diffusion-like, PTQD-like, PTQ4DiT-like, TQ-DiT, vs FP.
+Metrics: FD / sFD / IS* (stand-ins preserving Table-I orderings).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common as C
+from repro.core import make_quant_context
+
+STEPS = 40
+SCHEMES = ["q_diffusion", "ptqd", "ptq4dit", "tq_dit"]
+
+
+def main(bits_list=(8, 6), steps=STEPS, table="table1") -> None:
+    cfg, params = C.trained_dit()
+    calib = C.calibration_set(params, cfg)
+
+    rows = [("bits", "method", "FD", "sFD", "IS*", "noiseMSE")]
+    gen, _ = C.generate(params, cfg, steps=steps)
+    s = C.score(gen)
+    rows.append(("32/32", "FP", s["FD"], s["sFD"], s["IS*"], 0.0))
+    print(f"[{table}] FP: {s}", flush=True)
+
+    for bits in bits_list:
+        for scheme in SCHEMES:
+            qp, rep = C.calibrate(scheme, bits, params, cfg, calib)
+            ctx = make_quant_context(qp)
+            gen, _ = C.generate(params, cfg, ctx=ctx, steps=steps)
+            s = C.score(gen)
+            mse = C.noise_mse(params, cfg, ctx)
+            rows.append((f"{bits}/{bits}", scheme, s["FD"], s["sFD"],
+                         s["IS*"], round(mse, 6)))
+            print(f"[{table}] W{bits}A{bits} {scheme}: {s} mse={mse:.2e}",
+                  flush=True)
+    C.emit(table, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Table II: same comparison at the SHORT sampling schedule (paper: 100
+steps; CPU-scale: 25 respaced steps)."""
+from benchmarks import table1_quality
+
+
+def main() -> None:
+    table1_quality.main(bits_list=(8, 6), steps=20, table="table2")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Table III: component ablation at W6A6 — Baseline, +HO, +HO+MRQ,
++HO+MRQ+TGQ (full TQ-DiT)."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import make_quant_context
+
+STEPS = 40
+ABLATION = ["baseline", "+HO", "+HO+MRQ", "tq_dit"]
+
+
+def main() -> None:
+    cfg, params = C.trained_dit()
+    calib = C.calibration_set(params, cfg)
+
+    rows = [("method", "FD", "sFD", "IS*", "noiseMSE")]
+    gen, _ = C.generate(params, cfg, steps=STEPS)
+    s = C.score(gen)
+    rows.append(("FP", s["FD"], s["sFD"], s["IS*"], 0.0))
+    print(f"[table3] FP: {s}", flush=True)
+
+    for scheme in ABLATION:
+        qp, _ = C.calibrate(scheme, 6, params, cfg, calib)
+        ctx = make_quant_context(qp)
+        gen, _ = C.generate(params, cfg, ctx=ctx, steps=STEPS)
+        s = C.score(gen)
+        mse = C.noise_mse(params, cfg, ctx)
+        rows.append((scheme, s["FD"], s["sFD"], s["IS*"], round(mse, 6)))
+        print(f"[table3] {scheme}: {s} mse={mse:.2e}", flush=True)
+    C.emit("table3", rows)
+
+
+if __name__ == "__main__":
+    main()

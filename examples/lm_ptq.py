@@ -1,0 +1,44 @@
+"""Beyond-paper transfer: apply the TQ-DiT quantization stack to an
+assigned LM architecture (qwen3 family — SwiGLU + GQA + qk-norm).
+
+The technique maps as: per-channel weight quant + HO search (unchanged),
+MRQ-softmax on attention probabilities (unchanged), MRQ-signed on the
+SiLU gate (the GELU two-lobe construction transfers; DESIGN §5), TGQ
+disabled (no diffusion timestep). Measures CE-loss drift at W8A8/W6A6.
+
+Run:  PYTHONPATH=src python examples/lm_ptq.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import (build_lm_calibration, lm_loss_fn, make_quant_context,
+                        run_ptq)
+from repro.core.baselines import SCHEMES
+from repro.data import TokenPipeline
+from repro.models import lm_init
+from repro.nn.ctx import FPContext
+
+cfg = get_smoke("qwen3-1.7b")
+key = jax.random.PRNGKey(0)
+params = lm_init(key, cfg)
+
+pipe = TokenPipeline(vocab=cfg.vocab, seq_len=64, batch=4, seed=5)
+calib = build_lm_calibration([pipe.batch_at(i)["tokens"] for i in range(6)])
+evalb = build_lm_calibration([pipe.batch_at(100 + i)["tokens"]
+                              for i in range(4)])
+loss = lm_loss_fn(params, cfg)
+fp = sum(float(loss(FPContext(), b)) for b, _ in evalb) / len(evalb)
+print(f"FP eval CE: {fp:.4f}")
+
+for bits in (8, 6):
+    for scheme in ("baseline", "tq_dit"):
+        t0 = time.time()
+        qp, rep = run_ptq(loss, calib,
+                          SCHEMES[scheme](bits, bits, n_alpha=10, rounds=2))
+        ctx = make_quant_context(qp)
+        q = sum(float(loss(ctx, b)) for b, _ in evalb) / len(evalb)
+        print(f"W{bits}A{bits} {scheme:9s}: CE {q:.4f} "
+              f"(drift {q-fp:+.4f}, calib {rep['wall_s']:.0f}s)")

@@ -1,0 +1,87 @@
+"""End-to-end driver: train a DiT with the production substrate — sharded
+train step (pjit), async fault-tolerant checkpointing, resume, data
+pipeline — then sample a grid of class-conditional latents.
+
+This is the paper's training-side substrate at CPU scale; the identical
+code path scales to the 256-chip mesh via --data/--model (see
+launch/train.py for the full launcher and launch/dryrun.py for the
+production-mesh proof).
+
+Run:  PYTHONPATH=src python examples/train_dit.py [--steps 300]
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt
+from repro.data import LatentPipeline
+from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule
+from repro.distributed import param_specs
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import make_dit_train_step
+from repro.models import DiTCfg, dit_apply, dit_init
+from repro.optim import adamw, cosine_schedule
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=32)
+ap.add_argument("--ckpt", default="/tmp/dit_example_ckpt")
+args = ap.parse_args()
+
+cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=96, n_layers=3,
+             n_heads=4, n_classes=8)
+dif = DiffusionCfg(T=1000, tgq_groups=10)
+sched = make_schedule(dif)
+mesh = make_debug_mesh(1, 1)
+pipe = LatentPipeline(cfg.img_size, cfg.in_ch, cfg.n_classes, seed=7)
+
+key = jax.random.PRNGKey(0)
+params = dit_init(key, cfg)
+opt = adamw(cosine_schedule(2e-3, 30, args.steps))
+opt_state = opt.init(params)
+
+start = ckpt.latest_step(args.ckpt) or 0
+if start:
+    state = ckpt.restore(args.ckpt, {"p": params, "o": opt_state})
+    params, opt_state = state["p"], state["o"]
+    print(f"resumed from step {start}")
+
+pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      param_specs(params, mesh))
+step_fn = make_dit_train_step(cfg, opt, sched)
+
+with mesh:
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+    t0 = time.time()
+    for i in range(start, args.steps):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x0, y = pipe.sample(args.batch, k1)
+        batch = {"x0": x0, "y": y,
+                 "t": jax.random.randint(k2, (args.batch,), 0, dif.T),
+                 "noise": jax.random.normal(k3, x0.shape)}
+        loss, params, opt_state = jstep(params, opt_state, batch)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0)/(i-start+1)*1000:.0f} ms/step)",
+                  flush=True)
+        if (i + 1) % 100 == 0:
+            ckpt.save_async(args.ckpt, i + 1, {"p": params, "o": opt_state})
+    ckpt.wait_async()
+    ckpt.save(args.ckpt, args.steps, {"p": params, "o": opt_state})
+
+# sample one latent per class
+eps = lambda x, t, y, ctx: dit_apply(params, cfg, x, t, y)
+y = jnp.arange(cfg.n_classes)
+out = ddpm_sample(eps, dif, sched, (cfg.n_classes, 8, 8, 4), y,
+                  jax.random.PRNGKey(1), steps=50)
+real, _ = pipe.sample(cfg.n_classes, jax.random.PRNGKey(2))
+print("per-class sample/real correlation:")
+for c in range(cfg.n_classes):
+    g = np.asarray(out[c]).ravel()
+    r = np.asarray(pipe.patterns[c]).ravel()
+    print(f"  class {c}: corr={np.corrcoef(g, r)[0, 1]:.3f}")

@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, SHAPES, DIT_SHAPES, SUBQUADRATIC, cells, get, get_smoke

@@ -1,0 +1,20 @@
+"""TQ-DiT core — the paper's contribution: time-aware post-training
+quantization for diffusion transformers (MRQ + TGQ + HO, Algorithm 1)."""
+from repro.core.quantizers import (
+    UniformQ, ChannelQ, MRQSoftmaxQ, MRQSignedQ, TGQ,
+    uniform_qdq, symmetric_qdq, mrq_softmax_qdq, mrq_signed_qdq,
+    apply_quantizer, uniform_params_from_range, channel_scale_from_absmax,
+    weight_absmax,
+)
+from repro.core.contexts import (
+    OpInfo, RecordingContext, CalibrationContext, TapContext, ShapeContext,
+    QuantContext, stable_seed,
+)
+from repro.core.fisher import discover_tap_shapes, make_fisher_fn
+from repro.core.search import SearchCfg, search_linear, search_einsum
+from repro.core.ptq import PTQConfig, run_ptq, make_quant_context
+from repro.core.calib import (
+    build_dit_calibration, dit_loss_fn, build_lm_calibration, lm_loss_fn,
+)
+from repro.core import baselines
+from repro.core import metrics

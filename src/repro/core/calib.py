@@ -1,0 +1,106 @@
+"""Phase 1 of Algorithm 1 — calibration dataset construction with time
+grouping (§III-A), plus the loss closures used for calibration capture and
+Fisher backprop.
+
+Default protocol: tuples (x_t, t, y) are built by FORWARD diffusion of
+dataset latents with a KNOWN noise target, so the DDPM loss (Eq. 11) and
+its gradients are exactly defined for every tuple. Timesteps are drawn
+uniformly within each group G_i = [(i-1)T/G, iT/G); n samples per group.
+
+An alternative sampler-trajectory harvest (Q-Diffusion protocol) is
+available via ``harvest_trajectory=True``; it reuses
+``repro.diffusion.collect_xt_dataset`` and pairs each harvested x_t with a
+synthetic forward-consistent noise target.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diffusion import (
+    DiffusionCfg, collect_xt_dataset, make_schedule, q_sample, tgroup_of,
+)
+from repro.models.dit import DiTCfg, dit_apply
+
+
+def build_dit_calibration(params, dcfg: DiTCfg, dif: DiffusionCfg, sched,
+                          x0_source: Callable[[int, Any], jnp.ndarray],
+                          key, n_per_group: int = 32, batch: int = 8,
+                          n_classes: Optional[int] = None,
+                          harvest_trajectory: bool = False,
+                          steps: Optional[int] = None
+                          ) -> List[Tuple[Dict[str, Any], int]]:
+    """Returns [(batch_dict, group)] with n_per_group samples per group.
+
+    x0_source(n, key) -> (n, H, W, C) latents from the data pipeline.
+    batch_dict = {'xt', 't', 'y', 'noise'}.
+    """
+    G, T = dif.tgq_groups, dif.T
+    n_classes = n_classes or dcfg.n_classes
+    out: List[Tuple[Dict[str, Any], int]] = []
+
+    if harvest_trajectory:
+        eps_fn = lambda x, t, y, ctx: dit_apply(params, dcfg, x, t, y)
+        for g in range(G):
+            key, k1, k2 = jax.random.split(key, 3)
+            want = np.array([int((g + 0.5) * T / G)])
+            y = jax.random.randint(k1, (n_per_group,), 0, n_classes)
+            shape = (n_per_group, dcfg.img_size, dcfg.img_size, dcfg.in_ch)
+            tuples = collect_xt_dataset(eps_fn, dif, sched, shape, y, k2,
+                                        steps or T, want)
+            for xt, t, yy in tuples:
+                key, kn = jax.random.split(key)
+                noise = jax.random.normal(kn, xt.shape)
+                for s in range(0, n_per_group, batch):
+                    sl = slice(s, s + batch)
+                    out.append(({"xt": jnp.asarray(xt[sl]),
+                                 "t": jnp.full((xt[sl].shape[0],), t, jnp.int32),
+                                 "y": jnp.asarray(yy[sl]),
+                                 "noise": noise[sl]}, g))
+        return out
+
+    for g in range(G):
+        lo, hi = g * T // G, (g + 1) * T // G
+        for s in range(0, n_per_group, batch):
+            b = min(batch, n_per_group - s)
+            key, k1, k2, k3, k4 = jax.random.split(key, 5)
+            x0 = x0_source(b, k1)
+            t = jax.random.randint(k2, (b,), lo, hi)
+            y = jax.random.randint(k3, (b,), 0, n_classes)
+            noise = jax.random.normal(k4, x0.shape)
+            xt = q_sample(sched, x0, t, noise)
+            out.append(({"xt": xt, "t": t, "y": y, "noise": noise}, g))
+    return out
+
+
+def dit_loss_fn(params, dcfg: DiTCfg) -> Callable:
+    """DDPM noise-prediction loss (Eq. 11) routing ops through ctx."""
+    def loss(ctx, batch):
+        eps = dit_apply(params, dcfg, batch["xt"], batch["t"], batch["y"],
+                        ctx=ctx)
+        return jnp.mean(jnp.square(eps - batch["noise"]))
+    return loss
+
+
+def build_lm_calibration(token_batches: List[jnp.ndarray]
+                         ) -> List[Tuple[Dict[str, Any], int]]:
+    """LM calibration: [(batch, 0)] — no diffusion timestep, so a single
+    TGQ group (the technique's time axis is inapplicable; DESIGN §5)."""
+    out = []
+    for toks in token_batches:
+        labels = jnp.concatenate(
+            [toks[:, 1:], jnp.full((toks.shape[0], 1), -1, toks.dtype)], axis=1)
+        out.append(({"tokens": toks, "labels": labels}, 0))
+    return out
+
+
+def lm_loss_fn(params, cfg) -> Callable:
+    from repro.models.lm import lm_loss_fn as _lm_loss
+
+    def loss(ctx, batch):
+        l, _ = _lm_loss(params, cfg, batch, ctx=ctx)
+        return l
+    return loss

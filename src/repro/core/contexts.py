@@ -1,0 +1,307 @@
+"""OpContext implementations for the PTQ engine.
+
+Pipeline (Algorithm 1):
+  1. ``RecordingContext``    — one FP forward; discovers every quantizable
+     op, its einsum spec, shapes, and input PROVENANCE (whether operand A
+     is a marked post-softmax / post-GELU / post-SiLU tensor).
+  2. ``CalibrationContext``  — eager FP forwards over the calibration set;
+     stores (batch-subsampled) operand tensors per op, tagged with the
+     TGQ timestep group.
+  3. ``TapContext``          — jitted forward with additive zero "taps" on
+     every op output; ``jax.grad`` w.r.t. the taps yields exactly
+     dL/dz^(l), the Fisher weights of Hessian-guided optimization.
+  4. ``QuantContext``        — applies the calibrated quantizers
+     (simulated quant-dequant). ``kernel=True`` routes W8A8 linears
+     through the int8 Pallas kernel instead.
+
+Provenance tracking uses tensor identity: ``act(name, x, kind)`` marks
+``id(x)`` so the directly-consuming matmul knows its operand is the
+specially-distributed tensor the paper treats with MRQ/TGQ. This works
+both eagerly (concrete arrays) and under a single trace (tracer ids are
+stable within a trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.ctx import OpContext
+from repro.core.quantizers import TGQ, apply_quantizer
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str                    # 'linear' | 'einsum'
+    spec: Optional[str] = None   # einsum spec (einsum ops)
+    b_is_weight: bool = False    # einsum operand b is a parameter tensor
+    a_kind: str = "plain"        # 'plain' | 'post_softmax' | 'post_gelu' | 'post_silu'
+    x_shape: tuple = ()
+    w_shape: tuple = ()
+    out_shape: tuple = ()
+    n_calls: int = 0             # calls per forward (shared-name ops)
+
+
+@dataclasses.dataclass
+class RecordingContext(OpContext):
+    """Discovers the op graph. Execution is full-precision.
+
+    ``acts`` records every act hook (name -> kind). Hooks whose tensor is
+    DIRECTLY consumed by a matmul (post-softmax probs, post-GELU hidden)
+    are quantized at the consumer (where the HO objective lives); hooks
+    that feed elementwise ops first (SwiGLU's silu gate, multiplied by
+    ``up`` before the down-proj) are quantized AT THE HOOK — the paper's
+    two-lobe asymmetry exists on the silu output, not on the product.
+    """
+    registry: Dict[str, OpInfo] = dataclasses.field(default_factory=dict)
+    acts: Dict[str, str] = dataclasses.field(default_factory=dict)
+    _marks: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def _reg(self, name, **kw):
+        if name in self.registry:
+            self.registry[name].n_calls += 1
+            return self.registry[name]
+        info = OpInfo(name=name, **kw)
+        info.n_calls = 1
+        self.registry[name] = info
+        return info
+
+    def linear(self, name, x, w, b=None):
+        self._reg(name, kind="linear", a_kind=self._marks.get(id(x), "plain"),
+                  x_shape=tuple(x.shape), w_shape=tuple(w.shape))
+        y = x @ w
+        if b is not None:
+            y = y + b
+        self.registry[name].out_shape = tuple(y.shape)
+        return y
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        self._reg(name, kind="einsum", spec=spec, b_is_weight=b_is_weight,
+                  a_kind=self._marks.get(id(a), "plain"),
+                  x_shape=tuple(a.shape), w_shape=tuple(b.shape))
+        y = jnp.einsum(spec, a, b)
+        self.registry[name].out_shape = tuple(y.shape)
+        return y
+
+    def act(self, name, x, kind):
+        self._marks[id(x)] = kind
+        self.acts[name] = kind
+        return x
+
+
+# ---------------------------------------------------------------------------
+# calibration capture
+# ---------------------------------------------------------------------------
+def stable_seed(name: str, base: int = 0) -> int:
+    """Deterministic per-op seed (hash() is salted per process)."""
+    import zlib
+    return base + (zlib.crc32(name.encode()) & 0xFFFF)
+
+
+def _subsample_rows(x, max_rows, seed):
+    """Flatten leading dims to rows and subsample; returns np.ndarray."""
+    x = np.asarray(x)
+    rows = x.reshape(-1, x.shape[-1])
+    if rows.shape[0] > max_rows:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(rows.shape[0], max_rows, replace=False)
+        rows = rows[idx]
+    return rows
+
+
+@dataclasses.dataclass
+class CalibrationContext(OpContext):
+    """Stores calibration tensors per op. Run EAGERLY (not under jit).
+
+    store[name] = list of dicts per batch:
+      linear: {'x': rows, 'g': fisher rows or None, 'tg': int}
+      einsum: {'a': array, 'b': array (unless b_is_weight), 'g': ..., 'tg': int}
+    Weights are captured once in ``weights[name]``.
+    """
+    registry: Dict[str, OpInfo] = dataclasses.field(default_factory=dict)
+    store: Dict[str, List[dict]] = dataclasses.field(default_factory=dict)
+    act_store: Dict[str, List[np.ndarray]] = dataclasses.field(
+        default_factory=dict)
+    hook_acts: frozenset = frozenset()    # act names quantized at the hook
+    weights: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    max_rows_per_batch: int = 256
+    max_batch_sub: int = 4        # batch-dim subsample for einsum operands
+    _marks: Dict[int, str] = dataclasses.field(default_factory=dict)
+    _seen: set = dataclasses.field(default_factory=set)
+    seed: int = 0
+
+    def begin_batch(self):
+        """Reset per-forward dedup (only the FIRST call site of a shared
+        op name is stored, matching the fisher tap alignment)."""
+        self._seen.clear()
+
+    def _tg(self):
+        return int(self.tgroup) if self.tgroup is not None else 0
+
+    def linear(self, name, x, w, b=None):
+        if name not in self._seen:
+            self._seen.add(name)
+            if name not in self.weights:
+                self.weights[name] = np.asarray(w)
+            rows = _subsample_rows(x, self.max_rows_per_batch,
+                                   stable_seed(name, self.seed))
+            self.store.setdefault(name, []).append({"x": rows, "tg": self._tg()})
+        y = x @ w
+        if b is not None:
+            y = y + b
+        return y
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        if name not in self._seen:
+            self._seen.add(name)
+            sub = slice(0, self.max_batch_sub)
+            rec = {"a": np.asarray(a[sub]), "tg": self._tg()}
+            if b_is_weight:
+                if name not in self.weights:
+                    self.weights[name] = np.asarray(b)
+            else:
+                rec["b"] = np.asarray(b[sub])
+            self.store.setdefault(name, []).append(rec)
+        return jnp.einsum(spec, a, b)
+
+    def act(self, name, x, kind):
+        self._marks[id(x)] = kind
+        if name in self.hook_acts and name not in self._seen:
+            self._seen.add(name)
+            self.act_store.setdefault(name, []).append(_subsample_rows(
+                x, self.max_rows_per_batch, stable_seed(name, self.seed)))
+        return x
+
+
+# ---------------------------------------------------------------------------
+# fisher taps
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TapContext(OpContext):
+    """Adds ``taps[name]`` to every op output; grad w.r.t. taps = dL/dz."""
+    taps: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def _tap(self, name, y):
+        t = self.taps.get(name)
+        # shape guard: ops sharing a name across call sites with different
+        # shapes (e.g. meta-token KV) only tap the recorded-shape site.
+        if t is not None and tuple(t.shape) == tuple(y.shape):
+            y = y + t
+        return y
+
+    def linear(self, name, x, w, b=None):
+        y = x @ w
+        if b is not None:
+            y = y + b
+        return self._tap(name, y)
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        return self._tap(name, jnp.einsum(spec, a, b))
+
+    def act(self, name, x, kind):
+        return x
+
+
+@dataclasses.dataclass
+class ShapeContext(OpContext):
+    """Records op OUTPUT shapes only (to build zero taps)."""
+    shapes: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+
+    def linear(self, name, x, w, b=None):
+        y = x @ w
+        if b is not None:
+            y = y + b
+        self.shapes.setdefault(name, (tuple(y.shape), y.dtype))
+        return y
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        y = jnp.einsum(spec, a, b)
+        self.shapes.setdefault(name, (tuple(y.shape), y.dtype))
+        return y
+
+    def act(self, name, x, kind):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# quantized execution
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class QuantContext(OpContext):
+    """Applies calibrated quantizers (fake-quant by default).
+
+    qparams[name] = {
+      'w': ChannelQ | None,            # weight / operand-b quantizer
+      'x': UniformQ | MRQ* | TGQ | None,  # input / operand-a quantizer
+      'x_prescale': array | None,      # PTQ4DiT-like channel balancing
+      'out_bias': array | None,        # PTQD-like bias correction
+    }
+    kernel=True routes plain W8A8 linears through the int8 Pallas kernel.
+    """
+    qparams: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    kernel: bool = False
+
+    def _q_in(self, qp, x):
+        q = qp.get("x")
+        pre = qp.get("x_prescale")
+        if pre is not None:
+            x = x / pre
+        x = apply_quantizer(q, x, tgroup=self.tgroup)
+        return x
+
+    def _q_w(self, qp, w):
+        pre = qp.get("x_prescale")
+        if pre is not None:
+            # fold the balancing factor into the weight's input dim
+            w = w * pre.reshape((-1,) + (1,) * (w.ndim - 1)) if w.ndim >= 1 else w
+        return apply_quantizer(qp.get("w"), w, tgroup=self.tgroup)
+
+    def linear(self, name, x, w, b=None):
+        qp = self.qparams.get(name)
+        if qp is None:
+            y = x @ w
+            return y + b if b is not None else y
+        if self.kernel and qp.get("int8") is not None:
+            from repro.kernels import ops as kops
+            y = kops.int8_linear(x, qp["int8"], bias=b)
+            ob = qp.get("out_bias")
+            return y + ob if ob is not None else y
+        if self.kernel and qp.get("int8_mrq") is not None:
+            from repro.kernels import ops as kops
+            y = kops.int8_linear_mrq(x, qp["int8_mrq"], bias=b)
+            ob = qp.get("out_bias")
+            return y + ob if ob is not None else y
+        x = self._q_in(qp, x)
+        w = self._q_w(qp, w)
+        y = x @ w
+        if b is not None:
+            y = y + b
+        ob = qp.get("out_bias")
+        return y + ob if ob is not None else y
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        qp = self.qparams.get(name)
+        if qp is None:
+            return jnp.einsum(spec, a, b)
+        a = self._q_in(qp, a)
+        bq = qp.get("w") if b_is_weight else qp.get("b")
+        b = apply_quantizer(bq, b, tgroup=self.tgroup)
+        y = jnp.einsum(spec, a, b)
+        ob = qp.get("out_bias")
+        return y + ob if ob is not None else y
+
+    def act(self, name, x, kind):
+        # post-softmax / post-GELU quantize at the consuming matmul (where
+        # the HO objective is defined); hook-quantized acts (SwiGLU silu
+        # gates, which feed an elementwise product first) quantize here.
+        qp = self.qparams.get(name)
+        if qp is not None and "act" in qp:
+            return apply_quantizer(qp["act"], x, tgroup=self.tgroup)
+        return x

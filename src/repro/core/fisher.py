@@ -1,0 +1,58 @@
+"""Hessian-guided optimization (HO) — Fisher weight computation (§III-B).
+
+The pre-activation Hessian is approximated by the diagonal empirical
+Fisher diag((dL/dz)^2) (Eq. 15). We obtain dL/dz for EVERY op output z in
+one backward pass by injecting additive zero "taps" at each op output and
+differentiating the loss w.r.t. the taps — no framework surgery, fully
+jittable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contexts import ShapeContext, TapContext, stable_seed
+
+
+def discover_tap_shapes(loss_fn: Callable, batch) -> Dict[str, tuple]:
+    """One forward through the loss with a ShapeContext. Returns
+    {op_name: (shape, dtype)} for every op output."""
+    ctx = ShapeContext()
+    loss_fn(ctx, batch)
+    return ctx.shapes
+
+
+def make_fisher_fn(loss_fn: Callable, tap_shapes: Dict[str, tuple],
+                   jit: bool = True):
+    """Returns fisher(batch) -> {name: dL/dz array} (NOT squared)."""
+    def zero_taps():
+        return {n: jnp.zeros(s, d) for n, (s, d) in tap_shapes.items()}
+
+    def grads(taps, batch):
+        def f(t):
+            return loss_fn(TapContext(taps=t), batch)
+        return jax.grad(f)(taps)
+
+    if jit:
+        grads = jax.jit(grads)
+
+    def fisher(batch):
+        return grads(zero_taps(), batch)
+
+    return fisher
+
+
+def subsample_rows_like(g, max_rows: int, seed: int) -> np.ndarray:
+    """Mirror of CalibrationContext._subsample_rows: flatten leading dims to
+    rows and take the SAME seeded subset so fisher rows align with the
+    stored activation rows of the corresponding op."""
+    g = np.asarray(g)
+    rows = g.reshape(-1, g.shape[-1])
+    if rows.shape[0] > max_rows:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(rows.shape[0], max_rows, replace=False)
+        rows = rows[idx]
+    return rows

@@ -1,0 +1,180 @@
+"""Quantizer primitives for TQ-DiT.
+
+Fake-quant (quantize-dequantize) functions plus the parameter containers
+the PTQ engine calibrates. All are simple pytree dataclasses so they can
+be captured inside jitted serving functions, checkpointed, and stacked
+along a leading TGQ-group axis.
+
+Conventions:
+  - weights: per-output-channel SYMMETRIC int-k (matches the MXU s8 path
+    of the int8 Pallas kernel — no weight zero-point),
+  - activations: per-tensor ASYMMETRIC affine (scale + zero point),
+  - post-softmax: MRQ two-region [0, 2^{k-1}s1) / [2^{k-1}s1, 1] with the
+    paper's fixed s2 = 1/2^{k-1} (§III-C),
+  - post-GELU/SiLU: MRQ signed two-region with independent negative /
+    positive step sizes (§III-C),
+  - TGQ: any activation quantizer stacked along a leading (G,) axis,
+    selected by the diffusion timestep group (§III-A).
+
+Region select is branch-free (mask + where): TPU VPU has no per-element
+divergence, so both regions are computed and selected on 8x128 lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# primitive fake-quant math
+# ---------------------------------------------------------------------------
+def _round(x):
+    return jnp.round(x)
+
+
+def uniform_qdq(x, scale, zero, bits: int):
+    """Asymmetric affine: xhat = s*(clip(round(x/s)+z, 0, 2^k-1) - z)."""
+    n = 2 ** bits - 1
+    q = jnp.clip(_round(x / scale) + zero, 0, n)
+    return scale * (q - zero)
+
+
+def symmetric_qdq(x, scale, bits: int):
+    """Symmetric signed: q in [-2^{k-1}, 2^{k-1}-1] (int-k two's complement)."""
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.clip(_round(x / scale), lo, hi)
+    return scale * q
+
+
+def mrq_softmax_qdq(x, s1, bits: int):
+    """Two-region quantizer for post-softmax values in [0, 1] (§III-C).
+
+    R1 = [0, 2^{k-1} s1) with searched step s1 (k-1 bit codes);
+    R2 = [2^{k-1} s1, 1] with fixed step s2 = 1/2^{k-1}.
+    """
+    half = 2 ** (bits - 1)
+    s2 = 1.0 / half
+    thr = half * s1
+    q1 = jnp.clip(_round(x / s1), 0, half - 1) * s1
+    q2 = jnp.clip(_round(x / s2), 0, half) * s2
+    return jnp.where(x < thr, q1, q2)
+
+
+def mrq_signed_qdq(x, s_neg, s_pos, bits: int):
+    """Two-region quantizer for post-GELU/SiLU (§III-C).
+
+    R1 = [-2^{k-1} s_neg, 0] (bounded negative lobe), R2 = [0, 2^{k-1} s_pos),
+    with independently calibrated step sizes.
+    """
+    half = 2 ** (bits - 1)
+    qn = jnp.clip(_round(x / s_neg), -half, 0) * s_neg
+    qp = jnp.clip(_round(x / s_pos), 0, half - 1) * s_pos
+    return jnp.where(x < 0, qn, qp)
+
+
+# ---------------------------------------------------------------------------
+# parameter containers (pytrees)
+# ---------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["scale", "zero"], meta_fields=["bits"])
+@dataclasses.dataclass
+class UniformQ:
+    """Per-tensor asymmetric activation quantizer. scale/zero may carry a
+    leading TGQ group axis (select with .at_group)."""
+    scale: Any
+    zero: Any
+    bits: int = 8
+
+    def __call__(self, x):
+        return uniform_qdq(x, self.scale, self.zero, self.bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["scale"], meta_fields=["bits", "axes"])
+@dataclasses.dataclass
+class ChannelQ:
+    """Per-output-channel symmetric weight quantizer. ``axes`` is the set
+    of REDUCED axes used at calibration (kept broadcastable in scale)."""
+    scale: Any
+    bits: int = 8
+    axes: tuple = ()
+
+    def __call__(self, w):
+        return symmetric_qdq(w, self.scale, self.bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["s1"], meta_fields=["bits"])
+@dataclasses.dataclass
+class MRQSoftmaxQ:
+    s1: Any
+    bits: int = 8
+
+    def __call__(self, x):
+        return mrq_softmax_qdq(x, self.s1, self.bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["s_neg", "s_pos"], meta_fields=["bits"])
+@dataclasses.dataclass
+class MRQSignedQ:
+    s_neg: Any
+    s_pos: Any
+    bits: int = 8
+
+    def __call__(self, x):
+        return mrq_signed_qdq(x, self.s_neg, self.s_pos, self.bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["inner"], meta_fields=[])
+@dataclasses.dataclass
+class TGQ:
+    """Time-grouped wrapper: ``inner`` holds a quantizer whose array leaves
+    are stacked (G, ...); ``select(g)`` gathers group g (g may be traced)."""
+    inner: Any
+
+    def select(self, g):
+        return jax.tree.map(lambda a: jnp.take(a, g, axis=0), self.inner)
+
+    def __call__(self, x, g=None):
+        q = self.inner if g is None else self.select(g)
+        return q(x)
+
+
+def apply_quantizer(q, x, tgroup=None):
+    """Dispatch helper: applies q to x, resolving TGQ group selection."""
+    if q is None:
+        return x
+    if isinstance(q, TGQ):
+        if tgroup is None:
+            # no group info (e.g. non-diffusion eval): use group 0
+            tgroup = 0
+        return q(x, tgroup)
+    return q(x)
+
+
+# ---------------------------------------------------------------------------
+# calibration helpers: closed-form initial params from ranges
+# ---------------------------------------------------------------------------
+def uniform_params_from_range(lo, hi, bits: int):
+    """(scale, zero) covering [lo, hi]."""
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    scale = jnp.maximum((hi - lo) / (2 ** bits - 1), 1e-8)
+    zero = _round(-lo / scale)
+    return scale, zero
+
+
+def channel_scale_from_absmax(absmax, bits: int):
+    return jnp.maximum(absmax / (2 ** (bits - 1) - 1), 1e-8)
+
+
+def weight_absmax(w, channel_axis: int = -1):
+    """Per-output-channel absmax, keepdims (broadcastable against w)."""
+    axes = tuple(i for i in range(w.ndim) if i != channel_axis % w.ndim)
+    return jnp.max(jnp.abs(w), axis=axes, keepdims=True)

@@ -1,0 +1,143 @@
+"""Seeded synthetic data pipelines (no external datasets in the container).
+
+Token streams (LMs): a class of order-2 Markov sources with per-stream
+mixing — enough structure that CE training visibly learns, fully
+deterministic per (seed, host) so multi-host sharding never duplicates
+samples.
+
+Latents (DiT): class-conditional spatially-structured Gaussian mixtures —
+each class is a fixed smooth pattern (low-frequency Fourier mix) plus
+scaled noise. Classes are linearly separable in feature space, so the
+FD / IS-proxy metrics (repro.core.metrics) produce meaningful orderings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token pipeline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    batch: int                      # per-host batch
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    order: int = 2
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = min(self.vocab, 512)     # transition table over a vocab head
+        self._v = v
+        # sparse-ish row-stochastic transition logits
+        self._trans = rng.normal(0, 1.5, (v, v)).astype(np.float32)
+
+    def batches(self, key: Optional[jax.Array] = None) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a global step (host-sharded)."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * self.n_hosts + self.host_id)
+        v = self._v
+        toks = np.empty((self.batch, self.seq_len), np.int64)
+        toks[:, 0] = rng.integers(0, v, self.batch)
+        logits = self._trans
+        for t in range(1, self.seq_len):
+            row = logits[toks[:, t - 1] % v]
+            row = row - row.max(axis=1, keepdims=True)
+            p = np.exp(row)
+            p /= p.sum(axis=1, keepdims=True)
+            cum = p.cumsum(axis=1)
+            u = rng.random((self.batch, 1))
+            toks[:, t] = (u < cum).argmax(axis=1)
+        toks = toks % self.vocab
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((self.batch, 1), -1, np.int64)], axis=1)
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# DiT latent pipeline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LatentPipeline:
+    img_size: int
+    channels: int
+    n_classes: int
+    seed: int = 0
+    noise: float = 0.35
+    n_modes: int = 4                 # Fourier modes per class pattern
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        H = self.img_size
+        yy, xx = np.meshgrid(np.arange(H), np.arange(H), indexing="ij")
+        pats = []
+        for _ in range(self.n_classes):
+            pat = np.zeros((H, H, self.channels), np.float32)
+            for _ in range(self.n_modes):
+                fx, fy = rng.uniform(0.5, 2.5, 2)
+                ph = rng.uniform(0, 2 * np.pi, self.channels)
+                amp = rng.uniform(0.4, 1.0, self.channels)
+                for c in range(self.channels):
+                    pat[..., c] += amp[c] * np.sin(
+                        2 * np.pi * (fx * xx + fy * yy) / H + ph[c])
+            pats.append(pat / max(self.n_modes, 1) * 1.6)
+        self.patterns = np.stack(pats)           # (K, H, H, C)
+
+    def sample(self, n: int, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x0 (n,H,H,C), labels (n,))."""
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (n,), 0, self.n_classes)
+        base = jnp.asarray(self.patterns)[y]
+        eps = jax.random.normal(k2, base.shape) * self.noise
+        return base + eps, y
+
+    def x0_source(self, n: int, key) -> jnp.ndarray:
+        return self.sample(n, key)[0]
+
+    def labeled_set(self, n: int, key) -> Tuple[np.ndarray, np.ndarray]:
+        x, y = self.sample(n, key)
+        return np.asarray(x), np.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered prefetch
+# ---------------------------------------------------------------------------
+def prefetch(iterator: Iterator, depth: int = 2) -> Iterator:
+    """Host-side prefetch: keeps ``depth`` batches materialized ahead
+    (device transfer overlaps the previous step's compute)."""
+    import collections
+    import threading
+    import queue
+
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def producer():
+        try:
+            for item in iterator:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

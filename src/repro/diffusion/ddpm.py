@@ -1,0 +1,234 @@
+"""DDPM substrate: noise schedules, forward process, training loss, and the
+respaced ancestral sampler used by the paper (T_train=1000 linear schedule;
+inference respaced to 100/250 steps as in DiT / TQ-DiT §IV-A).
+
+All samplers thread the TGQ timestep-group index through the model context
+(``ctx.with_tgroup(g)``) so time-grouped quantizers select the right
+parameter set at each step — the inference-side half of the paper's TGQ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.ctx import FPContext
+
+_FP = FPContext()
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionCfg:
+    T: int = 1000                  # training timesteps
+    beta_start: float = 1e-4
+    beta_end: float = 0.02
+    schedule: str = "linear"       # linear | cosine
+    tgq_groups: int = 10           # G in the paper (group index fed to ctx)
+
+
+def make_schedule(cfg: DiffusionCfg):
+    """Returns dict of (T,) float32 schedule arrays."""
+    if cfg.schedule == "linear":
+        betas = np.linspace(cfg.beta_start, cfg.beta_end, cfg.T, dtype=np.float64)
+    elif cfg.schedule == "cosine":
+        s = 0.008
+        ts = np.arange(cfg.T + 1, dtype=np.float64) / cfg.T
+        f = np.cos((ts + s) / (1 + s) * np.pi / 2) ** 2
+        betas = np.clip(1 - f[1:] / f[:-1], 0, 0.999)
+    else:
+        raise ValueError(cfg.schedule)
+    alphas = 1.0 - betas
+    abar = np.cumprod(alphas)
+    abar_prev = np.concatenate([[1.0], abar[:-1]])
+    post_var = betas * (1.0 - abar_prev) / (1.0 - abar)   # q(x_{t-1}|x_t,x_0)
+    j = lambda a: jnp.asarray(a, jnp.float32)
+    return {
+        "betas": j(betas), "alphas": j(alphas), "abar": j(abar),
+        "abar_prev": j(abar_prev),
+        "sqrt_abar": j(np.sqrt(abar)),
+        "sqrt_1m_abar": j(np.sqrt(1 - abar)),
+        "post_var": j(post_var),
+        "post_logvar": j(np.log(np.maximum(post_var, 1e-20))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward process + loss
+# ---------------------------------------------------------------------------
+def q_sample(sched, x0, t, noise):
+    """x_t = sqrt(abar_t) x0 + sqrt(1-abar_t) eps; t: (B,) int32."""
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    a = sched["sqrt_abar"][t].reshape(shape)
+    b = sched["sqrt_1m_abar"][t].reshape(shape)
+    return a * x0 + b * noise
+
+
+def ddpm_loss(eps_fn: Callable, sched, x0, t, y, key):
+    """E ||eps - eps_theta(x_t, t)||^2 (Eq. 11)."""
+    noise = jax.random.normal(key, x0.shape, x0.dtype)
+    xt = q_sample(sched, x0, t, noise)
+    pred = eps_fn(xt, t, y)
+    return jnp.mean(jnp.square(pred - noise))
+
+
+# ---------------------------------------------------------------------------
+# respacing (DDPM T=1000 -> 100/250 inference steps)
+# ---------------------------------------------------------------------------
+def respaced_timesteps(T: int, steps: int) -> np.ndarray:
+    """Evenly respaced subset of {0..T-1}, descending (sampling order)."""
+    ts = np.linspace(0, T - 1, steps).round().astype(np.int64)
+    return np.unique(ts)[::-1].copy()
+
+
+def respaced_schedule(sched, use_ts: np.ndarray):
+    """Rebuild alphas/betas over the respaced chain (Nichol & Dhariwal)."""
+    abar = np.asarray(sched["abar"])[use_ts[::-1]]        # ascending
+    abar_prev = np.concatenate([[1.0], abar[:-1]])
+    alphas = abar / abar_prev
+    betas = 1.0 - alphas
+    post_var = betas * (1.0 - abar_prev) / (1.0 - abar)
+    j = lambda a: jnp.asarray(a, jnp.float32)
+    return {
+        "betas": j(betas), "alphas": j(alphas), "abar": j(abar),
+        "abar_prev": j(abar_prev),
+        "sqrt_abar": j(np.sqrt(abar)), "sqrt_1m_abar": j(np.sqrt(1 - abar)),
+        "post_var": j(post_var),
+        "post_logvar": j(np.log(np.maximum(post_var, 1e-20))),
+    }
+
+
+def tgroup_of(t, T: int, G: int):
+    """TGQ group index g(t) = floor(t*G/T) for original-chain timestep t."""
+    return jnp.clip((t * G) // T, 0, G - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# ancestral sampler
+# ---------------------------------------------------------------------------
+def ddpm_sample(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y, key,
+                steps: Optional[int] = None, ctx=_FP, guidance: float = 0.0,
+                clip_x0: Optional[float] = None):
+    """Ancestral DDPM sampling with respacing.
+
+    eps_fn(x, t, y, ctx) -> predicted noise, where t is the ORIGINAL-chain
+    timestep (the model was trained on it). The context receives the TGQ
+    group of t at every step.
+    Returns x_0 samples of ``shape``.
+    """
+    steps = steps or cfg.T
+    use_ts = respaced_timesteps(cfg.T, steps)             # descending
+    rsched = respaced_schedule(sched, use_ts)
+    n = len(use_ts)
+    use_ts_j = jnp.asarray(use_ts.copy(), jnp.int32)
+
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape, jnp.float32)
+
+    def step(carry, i):
+        x, key = carry
+        key, kn = jax.random.split(key)
+        t_orig = use_ts_j[i]                              # original-chain t
+        idx = n - 1 - i                                   # respaced index (asc)
+        tb = jnp.full((shape[0],), t_orig, jnp.int32)
+        g = tgroup_of(t_orig, cfg.T, cfg.tgq_groups)
+        eps = eps_fn(x, tb, y, ctx.with_tgroup(g))
+
+        abar = rsched["abar"][idx]
+        abar_prev = rsched["abar_prev"][idx]
+        beta = rsched["betas"][idx]
+        alpha = rsched["alphas"][idx]
+
+        # predict x0, clip, then q(x_{t-1} | x_t, x0) mean
+        x0 = (x - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        if clip_x0 is not None:
+            x0 = jnp.clip(x0, -clip_x0, clip_x0)
+        mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        noise = jax.random.normal(kn, shape, jnp.float32)
+        nonzero = (idx > 0).astype(jnp.float32)
+        x = mean + nonzero * jnp.sqrt(rsched["post_var"][idx]) * noise
+        return (x, key), None
+
+    (x, _), _ = jax.lax.scan(step, (x, key), jnp.arange(n))
+    return x
+
+
+def ddpm_sample_python(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y,
+                       key, steps: Optional[int] = None, ctx=_FP,
+                       clip_x0: Optional[float] = None):
+    """Python-loop sampler (for calibration capture: the PTQ engine's eager
+    contexts record per-step activations, which lax.scan would hide)."""
+    steps = steps or cfg.T
+    use_ts = respaced_timesteps(cfg.T, steps)
+    rsched = respaced_schedule(sched, use_ts)
+    rsched = jax.tree.map(np.asarray, rsched)
+    n = len(use_ts)
+
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape, jnp.float32)
+    for i in range(n):
+        key, kn = jax.random.split(key)
+        t_orig = int(use_ts[i])
+        idx = n - 1 - i
+        tb = jnp.full((shape[0],), t_orig, jnp.int32)
+        g = int(tgroup_of(jnp.int32(t_orig), cfg.T, cfg.tgq_groups))
+        eps = eps_fn(x, tb, y, ctx.with_tgroup(g))
+
+        abar = rsched["abar"][idx]
+        abar_prev = rsched["abar_prev"][idx]
+        beta = rsched["betas"][idx]
+        alpha = rsched["alphas"][idx]
+        x0 = (x - np.sqrt(1 - abar) * eps) / np.sqrt(abar)
+        if clip_x0 is not None:
+            x0 = jnp.clip(x0, -clip_x0, clip_x0)
+        mean = (np.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + np.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        if idx > 0:
+            x = mean + np.sqrt(rsched["post_var"][idx]) * jax.random.normal(
+                kn, shape, jnp.float32)
+        else:
+            x = mean
+    return x
+
+
+def collect_xt_dataset(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y,
+                       key, steps: int, want_ts: np.ndarray, ctx=_FP):
+    """Run the sampler and harvest (x_t, t, y) tuples at the requested
+    original-chain timesteps — Phase 1 of Algorithm 1 (calibration set
+    built from the model's OWN sampling trajectory, matching Q-Diffusion/
+    TQ-DiT protocol).
+    """
+    steps = steps or cfg.T
+    use_ts = respaced_timesteps(cfg.T, steps)
+    rsched = jax.tree.map(np.asarray, respaced_schedule(sched, use_ts))
+    n = len(use_ts)
+    want = set(int(t) for t in want_ts)
+    out = []
+
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape, jnp.float32)
+    for i in range(n):
+        key, kn = jax.random.split(key)
+        t_orig = int(use_ts[i])
+        idx = n - 1 - i
+        if t_orig in want:
+            out.append((np.asarray(x), t_orig, np.asarray(y)))
+        tb = jnp.full((shape[0],), t_orig, jnp.int32)
+        g = int(tgroup_of(jnp.int32(t_orig), cfg.T, cfg.tgq_groups))
+        eps = eps_fn(x, tb, y, ctx.with_tgroup(g))
+        abar = rsched["abar"][idx]
+        abar_prev = rsched["abar_prev"][idx]
+        beta = rsched["betas"][idx]
+        alpha = rsched["alphas"][idx]
+        x0 = (x - np.sqrt(1 - abar) * eps) / np.sqrt(abar)
+        mean = (np.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + np.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        if idx > 0:
+            x = mean + np.sqrt(rsched["post_var"][idx]) * jax.random.normal(
+                kn, shape, jnp.float32)
+        else:
+            x = mean
+    return out

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots:
+
+  - int8_matmul  — W8A8 MXU matmul with fused dequant epilogue,
+  - softmax_mrq  — fused softmax -> MRQ two-region quantization,
+  - act_mrq      — fused GELU/SiLU -> MRQ signed quantization.
+
+``ops`` exposes jit'd wrappers (interpret=True on CPU); ``ref`` holds the
+pure-jnp oracles tests compare against.
+"""
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.softmax_mrq import softmax_mrq
+from repro.kernels.act_mrq import act_mrq
+from repro.kernels import ops, ref

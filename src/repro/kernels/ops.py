@@ -1,0 +1,155 @@
+"""Public jit'd wrappers around the Pallas kernels + the int8 deployment
+converter that turns calibrated ``qparams`` + FP weights into packed int8
+parameters consumed by ``QuantContext(kernel=True)``.
+
+On this CPU container the wrappers run with ``interpret=True`` (kernel
+body executed in Python for correctness); on a real TPU backend the same
+calls compile to Mosaic. ``INTERPRET`` flips automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import ChannelQ, MRQSignedQ, UniformQ
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.softmax_mrq import softmax_mrq
+from repro.kernels.act_mrq import act_mrq
+from repro.kernels import ref
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# int8 deployment path
+# ---------------------------------------------------------------------------
+def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack one linear op for the int8 kernel. Requires a per-tensor
+    UniformQ activation quantizer and a ChannelQ weight quantizer (ops
+    with MRQ-signed inputs use pack_int8_mrq_linear's two-matmul
+    decomposition instead; see DESIGN §4)."""
+    if not isinstance(qp.get("x"), UniformQ) or not isinstance(
+            qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    xq_q: UniformQ = qp["x"]
+    if np.asarray(xq_q.scale).ndim != 0 or wq_q.bits != 8 or xq_q.bits != 8:
+        return None
+    sw = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)     # (N,)
+    w = jnp.asarray(w, jnp.float32)
+    if sw.shape[0] != w.shape[-1] or w.ndim != 2:
+        return None
+    codes = jnp.clip(jnp.round(w / sw[None, :]), -127, 127).astype(jnp.int8)
+    z_eff = jnp.round(xq_q.zero).astype(jnp.int32) - 128
+    corr = z_eff * jnp.sum(codes.astype(jnp.int32), axis=0)
+    return {
+        "wq": codes,
+        "scale": sw * jnp.asarray(xq_q.scale, jnp.float32),
+        "corr": corr,
+        "sx": jnp.asarray(xq_q.scale, jnp.float32),
+        "zx": jnp.asarray(xq_q.zero, jnp.float32),
+    }
+
+
+def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack a linear whose input is MRQ-signed (post-GELU fc2): the
+    two-region codes decompose into TWO int8 matmuls —
+    y = s_neg*(qn_masked @ Wq)*sw + s_pos*(qp_masked @ Wq)*sw —
+    the PTQ4ViT twin-uniform deployment trick on the MXU (DESIGN §4)."""
+    if not isinstance(qp.get("x"), MRQSignedQ) or not isinstance(
+            qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    xq_q: MRQSignedQ = qp["x"]
+    if wq_q.bits != 8 or xq_q.bits != 8:
+        return None
+    sw = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)
+    w = jnp.asarray(w, jnp.float32)
+    if w.ndim != 2 or sw.shape[0] != w.shape[-1]:
+        return None
+    codes = jnp.clip(jnp.round(w / sw[None, :]), -127, 127).astype(jnp.int8)
+    return {
+        "wq": codes,
+        "scale_neg": sw * jnp.asarray(xq_q.s_neg, jnp.float32),
+        "scale_pos": sw * jnp.asarray(xq_q.s_pos, jnp.float32),
+        "s_neg": jnp.asarray(xq_q.s_neg, jnp.float32),
+        "s_pos": jnp.asarray(xq_q.s_pos, jnp.float32),
+    }
+
+
+def convert_for_kernels(qparams: Dict[str, dict],
+                        weights: Dict[str, np.ndarray]) -> Dict[str, dict]:
+    """Adds an 'int8' / 'int8_mrq' pack to every eligible linear op."""
+    out = {}
+    for name, qp in qparams.items():
+        qp = dict(qp)
+        if name in weights:
+            pack = pack_int8_linear(qp, weights[name])
+            if pack is not None:
+                qp["int8"] = pack
+            else:
+                mpack = pack_int8_mrq_linear(qp, weights[name])
+                if mpack is not None:
+                    qp["int8_mrq"] = mpack
+        out[name] = qp
+    return out
+
+
+def quantize_int8(x, scale, zero):
+    """fp -> signed int8 codes (elementwise; XLA fuses this into the
+    producer — a separate Pallas kernel buys nothing on TPU)."""
+    return ref.quantize_int8_ref(x, scale, zero)
+
+
+def int8_linear(x, pack: dict, bias=None, out_dtype=None):
+    """Quantize x on the fly and run the int8 Pallas matmul."""
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    xm = x.reshape(-1, shape[-1])
+    xq = quantize_int8(xm, pack["sx"], pack["zx"])
+    y = int8_matmul(xq, pack["wq"], pack["scale"], pack["corr"],
+                    bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+                    out_dtype=out_dtype, interpret=INTERPRET)
+    return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
+
+
+def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None):
+    """MRQ-input linear as two masked int8 matmuls (region codes kept
+    int8; region select is the sign of x)."""
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    xm = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    half = 128
+    neg_mask = xm < 0
+    qn = jnp.where(neg_mask,
+                   jnp.clip(jnp.round(xm / pack["s_neg"]), -half, 0),
+                   0).astype(jnp.int8)
+    qp = jnp.where(neg_mask, 0,
+                   jnp.clip(jnp.round(xm / pack["s_pos"]), 0, half - 1)
+                   ).astype(jnp.int8)
+    zero_corr = jnp.zeros((pack["wq"].shape[1],), jnp.int32)
+    yn = int8_matmul(qn, pack["wq"], pack["scale_neg"], zero_corr,
+                     out_dtype=jnp.float32, interpret=INTERPRET)
+    yp = int8_matmul(qp, pack["wq"], pack["scale_pos"], zero_corr,
+                     bias=None if bias is None
+                     else jnp.asarray(bias, jnp.float32),
+                     out_dtype=jnp.float32, interpret=INTERPRET)
+    return (yn + yp).astype(out_dtype).reshape(
+        shape[:-1] + (pack["wq"].shape[1],))
+
+
+# ---------------------------------------------------------------------------
+# fused activation kernels (public API)
+# ---------------------------------------------------------------------------
+def softmax_mrq_op(scores, s1, bits: int = 8, out_dtype=jnp.float32):
+    return softmax_mrq(scores, s1, bits=bits, out_dtype=out_dtype,
+                       interpret=INTERPRET)
+
+
+def act_mrq_op(x, s_neg, s_pos, bits: int = 8, kind: str = "gelu",
+               out_dtype=jnp.float32):
+    return act_mrq(x, s_neg, s_pos, bits=bits, kind=kind, out_dtype=out_dtype,
+                   interpret=INTERPRET)

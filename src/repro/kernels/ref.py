@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` computes exactly what the corresponding kernel must produce;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import mrq_signed_qdq, mrq_softmax_qdq
+
+
+def quantize_int8_ref(x, scale, zero):
+    """Uniform affine int8 codes: q = clip(round(x/s)+z-128, -128, 127).
+
+    Codes are stored SIGNED (two's complement, offset by 128 from the
+    unsigned convention) so the MXU s8 path applies; the effective zero
+    point becomes (z - 128)."""
+    q = jnp.clip(jnp.round(x / scale) + zero - 128, -128, 127)
+    return q.astype(jnp.int8)
+
+
+def int8_matmul_ref(xq, wq, scale, corr, bias=None, out_dtype=jnp.float32):
+    """y = (xq @ wq - corr) * scale (+ bias).
+
+    xq: (M,K) int8; wq: (K,N) int8; scale: (N,) f32 combined s_x*s_w;
+    corr: (N,) int32 zero-point correction z_x_eff * colsum(wq).
+    """
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = (acc - corr[None, :]).astype(jnp.float32) * scale[None, :]
+    if bias is not None:
+        y = y + bias[None, :].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def softmax_mrq_ref(scores, s1, bits: int, out_dtype=jnp.float32):
+    """Row softmax (last axis, f32 accumulation) then MRQ two-region
+    quant-dequant (§III-C)."""
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return mrq_softmax_qdq(p, s1, bits).astype(out_dtype)
+
+
+def act_mrq_ref(x, s_neg, s_pos, bits: int, kind: str = "gelu",
+                out_dtype=jnp.float32):
+    """GELU/SiLU (f32) then MRQ signed two-region quant-dequant."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.gelu(xf, approximate=True) if kind == "gelu" else jax.nn.silu(xf)
+    return mrq_signed_qdq(h, s_neg, s_pos, bits).astype(out_dtype)

@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import pulls in jax: the
+# dry-run needs 512 placeholder devices so jax.make_mesh can build the
+# production meshes. Everything below is ordinary code.
+
+# Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh)
+# cell on the 16x16 single-pod and 2x16x16 multi-pod meshes, and dump
+# memory_analysis / cost_analysis / collective stats per cell.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun                 # full matrix
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+#       --shape decode_32k --mesh multi
+#   ... --out experiments/dryrun.json
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+
+def run_cell(arch: str, shape_id: str, mesh_kind: str) -> Dict[str, Any]:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.launch.hlo_stats import collective_stats
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.perf_counter()
+    cell = build_cell(arch, shape_id, mesh)
+    with mesh:
+        jitted = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                         donate_argnums=cell["donate_argnums"])
+        lowered = jitted.lower(*cell["args"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    colls = collective_stats(txt)
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_id, "mesh": mesh_kind,
+        "meta": cell["meta"],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0)
+        if cost else None,
+        "collectives": colls,
+        "collective_bytes_per_device": sum(v["bytes"] for v in colls.values()),
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            rec[k] = getattr(mem, k, None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi",
+                                                       "both"))
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, cells
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("ok", True)}
+
+    for arch in archs:
+        for shape_id, _ in cells(arch):
+            if args.shape and shape_id != args.shape:
+                continue
+            for mk in meshes:
+                if (arch, shape_id, mk) in done:
+                    continue
+                tag = f"{arch} x {shape_id} x {mk}"
+                try:
+                    rec = run_cell(arch, shape_id, mk)
+                    rec["ok"] = True
+                    gb = (rec.get("argument_size_in_bytes") or 0) / 2**30
+                    tmp = (rec.get("temp_size_in_bytes") or 0) / 2**30
+                    print(f"[OK]   {tag}: compile={rec['compile_s']}s "
+                          f"args={gb:.2f}GiB temp={tmp:.2f}GiB "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_device']/2**20:.1f}MiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    rec = {"arch": arch, "shape": shape_id, "mesh": mk,
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+                results.append(rec)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells compiled. -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

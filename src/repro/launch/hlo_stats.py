@@ -1,0 +1,56 @@
+"""HLO text parsing: collective bytes + op counts from lowered/compiled
+modules. cost_analysis() does not expose collective traffic, so the
+roofline's collective term comes from summing the output-shape bytes of
+every collective op in the HLO text.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,2048,128]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Returns {op_kind: {'count': int, 'bytes': int}} over the module.
+    Bytes are OUTPUT bytes of each collective op instance (per device)."""
+    out: Dict[str, dict] = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(shape_str)
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\b", hlo_text))

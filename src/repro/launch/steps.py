@@ -1,0 +1,404 @@
+"""Cell builders: (arch x input-shape x mesh) -> jittable step function +
+ShapeDtypeStruct inputs + shardings. Used by the multi-pod dry-run, the
+roofline calculator, and the real launchers.
+
+Shape kinds (assignment):
+  train_4k    -> train_step(params, opt_state, batch)      (training)
+  prefill_32k -> prefill(params, tokens[, frames])         (inference)
+  decode_32k  -> serve_step(params, token, cache, index)   (one new token)
+  long_500k   -> serve_step w/ 512k context, batch 1       (SSM/hybrid only)
+  dit_train / dit_sample -> the paper's own model.
+
+Sharding: params via repro.distributed rules (TP/EP on "model", FSDP on
+"data" for >=2B); batch dims on the DP super-axis (("pod","data") when
+multi-pod); long-context caches sequence-sharded on "data" (SP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get as get_cfg
+from repro.distributed import batch_axes, param_specs
+from repro.models import (
+    ModelCfg, lm_init, lm_loss_fn, lm_prefill, lm_decode_step, lm_cache_init,
+    encdec_init, encdec_loss_fn, encdec_prefill, encdec_decode_step,
+    encdec_cache_init, DiTCfg, dit_init, dit_apply,
+)
+from repro.optim import adamw, adafactor, apply_updates, cosine_schedule
+
+FSDP_THRESHOLD = 2e9
+ADAFACTOR_THRESHOLD = 3e9
+
+
+# ---------------------------------------------------------------------------
+# config policies per cell
+# ---------------------------------------------------------------------------
+def runtime_cfg(arch: str, kind: str, **extra) -> Any:
+    cfg = get_cfg(arch)
+    if isinstance(cfg, DiTCfg):
+        over = {"scan_layers": True, "remat": kind == "dit_train"}
+        over.update({k: v for k, v in extra.items()
+                     if k in DiTCfg.__dataclass_fields__})
+        return dataclasses.replace(cfg, **over)
+    over: Dict[str, Any] = {"scan_layers": True, "remat": kind == "train"}
+    if kind == "prefill":
+        over["attn_impl"] = "qchunk"
+        over["q_chunk"] = 2048
+    over.update(extra)
+    return dataclasses.replace(cfg, **over)
+
+
+def n_params_of(cfg) -> int:
+    return cfg.n_params()
+
+
+def pick_optimizer(cfg):
+    n = n_params_of(cfg)
+    lr = cosine_schedule(3e-4, 2000, 100_000)
+    if n > ADAFACTOR_THRESHOLD:
+        return adafactor(lr), "adafactor"
+    return adamw(lr, weight_decay=0.1), "adamw"
+
+
+def use_fsdp(cfg) -> bool:
+    return n_params_of(cfg) > FSDP_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp_size(mesh) -> int:
+    s = _sizes(mesh)
+    return int(np.prod([s[a] for a in batch_axes(mesh)]))
+
+
+def batch_sharding(mesh, shape, seq_shard: bool = False):
+    """Spec for an input whose dim0 is batch (guarded divisibility)."""
+    spec = [None] * len(shape)
+    if shape and shape[0] % _dp_size(mesh) == 0 and shape[0] > 1:
+        spec[0] = batch_axes(mesh)
+    return _ns(mesh, P(*spec))
+
+
+def cache_sharding(mesh, shapes_tree, *, shard_batch: bool, shard_seq: bool):
+    """Heuristic cache specs for stacked (L, B, S?, ...) cache leaves."""
+    sizes = _sizes(mesh)
+    model_n = sizes["model"]
+    data_n = sizes["data"]
+    dp = _dp_size(mesh)
+
+    def per(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        if nd >= 2 and shard_batch and shape[1] % dp == 0 and shape[1] > 1:
+            spec[1] = batch_axes(mesh)
+        if nd >= 3 and shard_seq and spec[1] is None and shape[2] % data_n == 0 \
+                and shape[2] >= data_n * 8:
+            spec[2] = "data"
+        # model axis: prefer the kv-head dim, fall back to the sequence dim
+        # (sequence-sharded KV decode — GSPMD inserts the softmax-stats
+        # all-reduce). NEVER shard the last (head/feature contraction) dim:
+        # it conflicts with the attention dot sharding and triggers
+        # involuntary full rematerialization of the cache.
+        for i in range(nd - 2, 1, -1):
+            if spec[i] is None and shape[i] % model_n == 0 \
+                    and shape[i] >= model_n:
+                spec[i] = "model"
+                break
+        return _ns(mesh, P(*spec))
+
+    return jax.tree.map(per, shapes_tree)
+
+
+def opt_state_shardings(opt_state_shapes, pspecs, mesh, opt_name: str):
+    """Optimizer-state shardings mirroring the parameter specs."""
+    rep = _ns(mesh, P())
+    if opt_name == "adamw":
+        ps = jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+        return {"step": rep, "mu": ps, "nu": ps}
+
+    # adafactor: {'step', 'v': tree of {'vr','vc'} or {'v'}}
+    def per(spec, vdict):
+        if "v" in vdict:
+            return {"v": _ns(mesh, spec)}
+        nd = len(vdict["vr"].shape) + 1              # param ndim
+        full = tuple(spec) + (None,) * (nd - len(tuple(spec)))
+        return {"vr": _ns(mesh, P(*full[:-1])),
+                "vc": _ns(mesh, P(*(full[:-2] + full[-1:])))}
+
+    flat_specs, tdef = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_v = tdef.flatten_up_to(opt_state_shapes["v"])
+    v_shard = tdef.unflatten([per(s, v) for s, v in zip(flat_specs, flat_v)])
+    return {"step": rep, "v": v_shard}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_train_step(cfg, opt, n_micro: int = 1):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    n_micro > 1 splits the global batch into microbatches accumulated via
+    lax.scan — bounds activation memory to one microbatch (the per-device
+    HBM budget decides n_micro; see _pick_micro)."""
+    if isinstance(cfg, DiTCfg):
+        raise ValueError("use make_dit_train_step")
+    if getattr(cfg, "encdec", False):
+        loss_fn = lambda p, b: encdec_loss_fn(p, cfg, b)
+    else:
+        loss_fn = lambda p, b: lm_loss_fn(p, cfg, b)
+
+    def step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return loss, apply_updates(params, updates), opt_state
+
+    return step
+
+
+def _pick_micro(cfg, batch: int, seq: int, mesh) -> int:
+    """Pick microbatch count so per-device activations fit ~9GB:
+    carry = L * tok_loc * d * 2B (bf16 residual per layer under remat-scan)
+    logits = tok_loc * (V / model) * 10B (fwd bf16 + f32 grad + lse)."""
+    sizes = _sizes(mesh)
+    dp = _dp_size(mesh)
+    tok_loc = batch * seq // dp
+    d = cfg.d_model
+    L = cfg.n_layers
+    v_loc = cfg.vocab / sizes["model"]
+    budget = 9e9
+    for n in (1, 2, 4, 8, 16, 32):
+        if batch % (dp * n) and n != 1:
+            continue
+        carry = L * (tok_loc / n) * d * 2
+        logits = (tok_loc / n) * v_loc * 10
+        moe = (16 * (tok_loc / n) * d * 2) if cfg.moe else 0
+        if carry + logits + moe < budget:
+            return n
+    return 32
+
+
+def make_dit_train_step(cfg: DiTCfg, opt, sched):
+    from repro.diffusion import q_sample
+
+    def loss_fn(params, batch):
+        xt = q_sample(sched, batch["x0"], batch["t"], batch["noise"])
+        eps = dit_apply(params, cfg, xt, batch["t"], batch["y"])
+        return jnp.mean(jnp.square(eps - batch["noise"]))
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return loss, apply_updates(params, updates), opt_state
+
+    return step
+
+
+def make_prefill(cfg, max_len):
+    if getattr(cfg, "encdec", False):
+        def step(params, tokens, frames):
+            return encdec_prefill(params, cfg, tokens, frames, max_len=max_len)
+    else:
+        def step(params, tokens):
+            return lm_prefill(params, cfg, tokens, max_len=max_len)
+    return step
+
+
+def make_decode(cfg):
+    if getattr(cfg, "encdec", False):
+        def step(params, token, cache, index):
+            return encdec_decode_step(params, cfg, token, cache, index)
+    else:
+        def step(params, token, cache, index):
+            return lm_decode_step(params, cfg, token, cache, index)
+    return step
+
+
+def make_dit_sample_step(cfg: DiTCfg, sched_len: int = 1000):
+    """One respaced ancestral denoise step (the serving unit of a DiT)."""
+    from repro.diffusion import DiffusionCfg, make_schedule
+    sched = make_schedule(DiffusionCfg(T=sched_len))
+
+    def step(params, x, t, y, noise):
+        eps = dit_apply(params, cfg, x, t, y)
+        abar = sched["abar"][t].reshape(-1, 1, 1, 1)
+        alpha = sched["alphas"][t].reshape(-1, 1, 1, 1)
+        beta = sched["betas"][t].reshape(-1, 1, 1, 1)
+        abar_prev = sched["abar_prev"][t].reshape(-1, 1, 1, 1)
+        x0 = (x - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        return mean + jnp.sqrt(sched["post_var"][t].reshape(-1, 1, 1, 1)) * noise
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_id: str, mesh: Mesh,
+               cfg_overrides: Optional[Dict[str, Any]] = None,
+               force_micro: Optional[int] = None,
+               replicate_params: bool = False) -> Dict[str, Any]:
+    """Returns {'fn', 'args' (ShapeDtypeStructs), 'in_shardings',
+    'donate_argnums', 'meta'} ready for jax.jit().lower(*args).
+    replicate_params=True serves with pure DP (no TP collectives)."""
+    from repro.configs import SHAPES, DIT_SHAPES
+    meta = (DIT_SHAPES if arch == "dit-xl-2" else SHAPES)[shape_id]
+    kind = meta["kind"]
+    cfg = runtime_cfg(arch, kind, **(cfg_overrides or {}))
+    key = jax.random.PRNGKey(0)
+
+    if isinstance(cfg, DiTCfg):
+        params = jax.eval_shape(lambda k: dit_init(k, cfg), key)
+    elif getattr(cfg, "encdec", False):
+        params = jax.eval_shape(lambda k: encdec_init(k, cfg), key)
+    else:
+        params = jax.eval_shape(lambda k: lm_init(k, cfg), key)
+    # FSDP only where the params need it: always for training (optimizer
+    # state), but at inference dense archs fit TP-sharded (chameleon-34b:
+    # 4.3 GB/device) and ZeRO's per-layer weight all-gather is pure decode
+    # overhead (measured 213 ms/step collective; EXPERIMENTS §Perf). MoE
+    # archs keep FSDP at inference: expert tables exceed HBM at EP=16.
+    if isinstance(cfg, DiTCfg):
+        fsdp = False
+    else:
+        fsdp = use_fsdp(cfg) and (kind == "train" or cfg.moe)
+    pspecs = param_specs(params, mesh, fsdp=fsdp)
+    if replicate_params:
+        pspecs = jax.tree.map(lambda s: P(), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    pshard = jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+
+    info = {"arch": arch, "shape": shape_id, "kind": kind, "fsdp": fsdp,
+            "n_params": n_params_of(cfg)}
+
+    if kind in ("train",):
+        opt, opt_name = pick_optimizer(cfg)
+        opt_state = jax.eval_shape(opt.init, params)
+        oshard = opt_state_shardings(opt_state, pspecs, mesh, opt_name)
+        B, S = meta["batch"], meta["seq"]
+        n_micro = force_micro or _pick_micro(cfg, B, S, mesh)
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        bshard = {k: batch_sharding(mesh, v.shape) for k, v in batch.items()}
+        if getattr(cfg, "encdec", False):
+            batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+            bshard["frames"] = batch_sharding(mesh, batch["frames"].shape)
+        fn = make_train_step(cfg, opt, n_micro=n_micro)
+        info["optimizer"] = opt_name
+        info["n_micro"] = n_micro
+        return {"fn": fn, "args": (params, opt_state, batch),
+                "in_shardings": (pshard, oshard, bshard),
+                "donate_argnums": (0, 1), "meta": info}
+
+    if kind == "prefill":
+        B, S = meta["batch"], meta["seq"]
+        fn = make_prefill(cfg, max_len=S)
+        tokens = _sds((B, S), jnp.int32)
+        args = [params, tokens]
+        shards = [pshard, batch_sharding(mesh, (B, S))]
+        if getattr(cfg, "encdec", False):
+            frames = _sds((B, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+            args.append(frames)
+            shards.append(batch_sharding(mesh, frames.shape))
+        return {"fn": fn, "args": tuple(args), "in_shardings": tuple(shards),
+                "donate_argnums": (), "meta": info}
+
+    if kind == "decode":
+        B, S = meta["batch"], meta["seq"]
+        fn = make_decode(cfg)
+        if getattr(cfg, "encdec", False):
+            cache = jax.eval_shape(
+                lambda: encdec_cache_init(cfg, B, S))
+        else:
+            cache = jax.eval_shape(lambda: lm_cache_init(cfg, B, S))
+        cshard = cache_sharding(mesh, cache, shard_batch=B > 1,
+                                shard_seq=B == 1)
+        token = _sds((B, 1), jnp.int32)
+        index = _sds((), jnp.int32)
+        return {"fn": fn,
+                "args": (params, token, cache, index),
+                "in_shardings": (pshard, batch_sharding(mesh, (B, 1)),
+                                 cshard, _ns(mesh, P())),
+                "donate_argnums": (2,), "meta": info}
+
+    if kind == "dit_train":
+        from repro.diffusion import DiffusionCfg, make_schedule
+        opt, opt_name = pick_optimizer_dit(cfg)
+        opt_state = jax.eval_shape(opt.init, params)
+        oshard = opt_state_shardings(opt_state, pspecs, mesh, opt_name)
+        sched = make_schedule(DiffusionCfg(T=1000))
+        B = meta["batch"]
+        batch = {
+            "x0": _sds((B, cfg.img_size, cfg.img_size, cfg.in_ch), jnp.float32),
+            "t": _sds((B,), jnp.int32),
+            "y": _sds((B,), jnp.int32),
+            "noise": _sds((B, cfg.img_size, cfg.img_size, cfg.in_ch),
+                          jnp.float32),
+        }
+        bshard = {k: batch_sharding(mesh, v.shape) for k, v in batch.items()}
+        fn = make_dit_train_step(cfg, opt, sched)
+        info["optimizer"] = opt_name
+        return {"fn": fn, "args": (params, opt_state, batch),
+                "in_shardings": (pshard, oshard, bshard),
+                "donate_argnums": (0, 1), "meta": info}
+
+    if kind == "dit_sample":
+        B = meta["batch"]
+        fn = make_dit_sample_step(cfg)
+        x = _sds((B, cfg.img_size, cfg.img_size, cfg.in_ch), jnp.float32)
+        t = _sds((B,), jnp.int32)
+        y = _sds((B,), jnp.int32)
+        noise = _sds((B, cfg.img_size, cfg.img_size, cfg.in_ch), jnp.float32)
+        bs = batch_sharding(mesh, x.shape)
+        return {"fn": fn, "args": (params, x, t, y, noise),
+                "in_shardings": (pshard, bs, batch_sharding(mesh, (B,)),
+                                 batch_sharding(mesh, (B,)), bs),
+                "donate_argnums": (1,), "meta": info}
+
+    raise ValueError(kind)
+
+
+def pick_optimizer_dit(cfg: DiTCfg):
+    lr = cosine_schedule(1e-4, 1000, 400_000)
+    return adamw(lr, weight_decay=0.0), "adamw"

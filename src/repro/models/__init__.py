@@ -1,0 +1,14 @@
+"""Model assembly: decoder-only LMs (all assigned families), the Whisper
+encoder-decoder backbone, and the DiT diffusion transformer."""
+from repro.models.config import ModelCfg
+from repro.models.lm import (
+    lm_init, lm_apply, lm_loss_fn, lm_prefill, lm_decode_step, lm_cache_init,
+    lm_generate, ce_loss,
+)
+from repro.models.encdec import (
+    encdec_init, encode, decode_train, encdec_loss_fn, encdec_prefill,
+    encdec_decode_step, encdec_cache_init,
+)
+from repro.models.dit import (
+    DiTCfg, dit_init, dit_apply, dit_apply_cfg_guidance, patchify, unpatchify,
+)

@@ -1,0 +1,219 @@
+"""Diffusion Transformer (DiT, Peebles & Xie 2023) with adaLN-Zero.
+
+Faithful block structure to DiT-XL/2: patchify -> N blocks of
+[adaLN-modulated MHSA, adaLN-modulated GELU-MLP] -> adaLN final layer ->
+unpatchify, conditioned on (timestep, class) embeddings. Every
+quantization-relevant op routes through the OpContext, and the context's
+``tgroup`` field carries the TGQ timestep-group index during sampling.
+
+The model operates on latents (B, H, W, C) — for the paper that is the
+32x32x4 SD-VAE latent of a 256x256 image; our CPU-scale experiments use
+smaller synthetic latents with identical code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+from repro.nn.layers import (
+    layernorm_apply, linear_init, sincos_2d, timestep_embedding,
+    embedding_init, embedding_apply,
+)
+
+_FP = FPContext()
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTCfg:
+    img_size: int = 32            # latent spatial size
+    in_ch: int = 4                # latent channels
+    patch: int = 2
+    d_model: int = 1152
+    n_layers: int = 28
+    n_heads: int = 16
+    mlp_ratio: float = 4.0
+    n_classes: int = 1000
+    dtype: str = "float32"
+    scan_layers: bool = False
+    remat: bool = False
+    # classifier-free guidance null class handled as extra embedding row
+    class_dropout: float = 0.1
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def n_tokens(self):
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def d_ff(self):
+        return int(self.d_model * self.mlp_ratio)
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def patch_dim(self):
+        return self.patch * self.patch * self.in_ch
+
+    def n_params(self) -> int:
+        d = self.d_model
+        per = 4 * d * d + 2 * d * self.d_ff + 6 * d * d  # attn + mlp + adaLN
+        n = self.patch_dim * d + d * self.patch_dim      # in/out proj
+        n += (self.n_classes + 1) * d + 256 * d + d * d  # class + t embed MLP
+        return n + self.n_layers * per
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: DiTCfg):
+    ks = jax.random.split(key, 7)
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    w = init.normal(0.02)
+    return {
+        "qkv": {"w": w(ks[0], (d, 3 * d), dt), "b": jnp.zeros((3 * d,), dt)},
+        "proj": {"w": w(ks[1], (d, d), dt), "b": jnp.zeros((d,), dt)},
+        "fc1": {"w": w(ks[2], (d, f), dt), "b": jnp.zeros((f,), dt)},
+        "fc2": {"w": w(ks[3], (f, d), dt), "b": jnp.zeros((d,), dt)},
+        # adaLN-Zero: 6 modulation vectors from conditioning; zero-init so
+        # each residual branch starts as identity (DiT §3.2).
+        "ada": {"w": jnp.zeros((d, 6 * d), dt), "b": jnp.zeros((6 * d,), dt)},
+    }
+
+
+def dit_init(key, cfg: DiTCfg):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    dt = cfg.jdtype
+    w = init.normal(0.02)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    grid = cfg.img_size // cfg.patch
+    return {
+        "x_proj": {"w": w(ks[1], (cfg.patch_dim, d), dt),
+                   "b": jnp.zeros((d,), dt)},
+        "pos": sincos_2d(d, grid, grid).astype(dt),      # fixed, non-trainable
+        "t_mlp1": {"w": w(ks[2], (256, d), dt), "b": jnp.zeros((d,), dt)},
+        "t_mlp2": {"w": w(ks[3], (d, d), dt), "b": jnp.zeros((d,), dt)},
+        "y_embed": embedding_init(ks[4], cfg.n_classes + 1, d, dt),
+        "blocks": jax.vmap(lambda k: _block_init(k, cfg))(layer_keys),
+        "final_ada": {"w": jnp.zeros((d, 2 * d), dt), "b": jnp.zeros((2 * d,), dt)},
+        "final": {"w": jnp.zeros((d, cfg.patch_dim), dt),
+                  "b": jnp.zeros((cfg.patch_dim,), dt)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# patchify
+# ---------------------------------------------------------------------------
+def patchify(x, patch):
+    """(B,H,W,C) -> (B, (H/p)*(W/p), p*p*C)"""
+    B, H, W, C = x.shape
+    p = patch
+    x = x.reshape(B, H // p, p, W // p, p, C)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(B, (H // p) * (W // p), p * p * C)
+
+
+def unpatchify(x, patch, img_size, ch):
+    B, N, _ = x.shape
+    p, g = patch, img_size // patch
+    x = x.reshape(B, g, g, p, p, ch)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(B, img_size, img_size, ch)
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def dit_block_apply(p, cfg: DiTCfg, x, c, *, ctx=_FP, name="blk"):
+    """x: (B,N,d); c: (B,d) conditioning. adaLN-Zero MHSA + MLP."""
+    B, N, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    mod = ctx.linear(f"{name}/ada", jax.nn.silu(c), p["ada"]["w"], p["ada"]["b"])
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+    # --- MHSA ---------------------------------------------------------------
+    h = _modulate(layernorm_apply({}, x), sh1, sc1)
+    qkv = ctx.linear(f"{name}/qkv", h, p["qkv"]["w"], p["qkv"]["b"])
+    q, k, v = jnp.split(qkv.reshape(B, N, 3, H, hd), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]          # (B,N,H,hd)
+    scores = ctx.einsum(f"{name}/attn/qk", "bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    probs = ctx.act(f"{name}/attn/probs", probs, "post_softmax")
+    o = ctx.einsum(f"{name}/attn/pv", "bhqk,bkhd->bqhd", probs, v)
+    o = ctx.linear(f"{name}/proj", o.reshape(B, N, d), p["proj"]["w"],
+                   p["proj"]["b"])
+    x = x + g1[:, None, :] * o
+
+    # --- MLP ------------------------------------------------------------------
+    h = _modulate(layernorm_apply({}, x), sh2, sc2)
+    h = ctx.linear(f"{name}/fc1", h, p["fc1"]["w"], p["fc1"]["b"])
+    h = jax.nn.gelu(h, approximate=True)
+    h = ctx.act(f"{name}/gelu", h, "post_gelu")
+    h = ctx.linear(f"{name}/fc2", h, p["fc2"]["w"], p["fc2"]["b"])
+    x = x + g2[:, None, :] * h
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def dit_apply(p, cfg: DiTCfg, x, t, y, *, ctx=_FP):
+    """Noise prediction. x: (B,H,W,C) latents; t: (B,) int timesteps;
+    y: (B,) int class labels (cfg.n_classes = null/uncond row)."""
+    B = x.shape[0]
+    tok = patchify(x.astype(cfg.jdtype), cfg.patch)
+    h = ctx.linear("x_proj", tok, p["x_proj"]["w"], p["x_proj"]["b"])
+    h = h + p["pos"][None]
+
+    temb = timestep_embedding(t, 256).astype(cfg.jdtype)
+    temb = ctx.linear("t_mlp1", temb, p["t_mlp1"]["w"], p["t_mlp1"]["b"])
+    temb = jax.nn.silu(temb)
+    temb = ctx.linear("t_mlp2", temb, p["t_mlp2"]["w"], p["t_mlp2"]["b"])
+    yemb = embedding_apply(p["y_embed"], y).astype(cfg.jdtype)
+    c = temb + yemb
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            bp, li = xs
+            return dit_block_apply(bp, cfg, carry, c, ctx=ctx.at_layer(li),
+                                   name="blk"), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, (p["blocks"], jnp.arange(cfg.n_layers)))
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], p["blocks"])
+            h = dit_block_apply(bp, cfg, h, c, ctx=ctx.at_layer(i), name=f"blk{i}")
+
+    mod = ctx.linear("final_ada", jax.nn.silu(c), p["final_ada"]["w"],
+                     p["final_ada"]["b"])
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(layernorm_apply({}, h), sh, sc)
+    out = ctx.linear("final", h, p["final"]["w"], p["final"]["b"])
+    return unpatchify(out, cfg.patch, cfg.img_size, cfg.in_ch)
+
+
+def dit_apply_cfg_guidance(p, cfg: DiTCfg, x, t, y, scale, *, ctx=_FP):
+    """Classifier-free guidance: eps = eps_u + s * (eps_c - eps_u)."""
+    null = jnp.full_like(y, cfg.n_classes)
+    xx = jnp.concatenate([x, x])
+    tt = jnp.concatenate([t, t])
+    yy = jnp.concatenate([y, null])
+    eps = dit_apply(p, cfg, xx, tt, yy, ctx=ctx)
+    eps_c, eps_u = jnp.split(eps, 2)
+    return eps_u + scale * (eps_c - eps_u)

@@ -1,0 +1,253 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: model inputs are precomputed frame embeddings
+``frames: (B, enc_seq, d_model)``. Decoder is a standard causal
+transformer with cross-attention into the encoder memory; GELU MLPs and
+LayerNorm (Whisper convention), learned decoder positions, fixed
+sinusoidal encoder positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+from repro.nn.attention import (
+    attention_init, attention_apply, attention_prefill, attention_decode,
+    kv_cache_init, cross_attention_cache, cross_attention_decode,
+)
+from repro.nn.layers import (
+    embedding_init, embedding_apply, embedding_logits,
+    layernorm_init, layernorm_apply, sincos_2d,
+)
+from repro.nn.mlp import mlp_init, mlp_apply
+from repro.models.config import ModelCfg
+from repro.models.lm import ce_loss
+
+_FP = FPContext()
+
+
+def _sincos_1d(d, n):
+    import numpy as np
+    omega = 1.0 / 10000 ** (np.arange(d // 2, dtype=np.float64) / (d / 2.0))
+    out = np.einsum("p,f->pf", np.arange(n, dtype=np.float64), omega)
+    return jnp.asarray(
+        np.concatenate([np.sin(out), np.cos(out)], axis=1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def enc_block_init(key, cfg: ModelCfg):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    return {
+        "norm1": layernorm_init(ks[0], cfg.d_model, dt),
+        "attn": attention_init(ks[1], cfg.attn_cfg(), dt),
+        "norm2": layernorm_init(ks[2], cfg.d_model, dt),
+        "mlp": mlp_init(ks[3], cfg.mlp_cfg(), dt),
+    }
+
+
+def dec_block_init(key, cfg: ModelCfg):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "norm1": layernorm_init(ks[0], cfg.d_model, dt),
+        "attn": attention_init(ks[1], cfg.attn_cfg(), dt),
+        "norm_x": layernorm_init(ks[2], cfg.d_model, dt),
+        "xattn": attention_init(ks[3], cfg.attn_cfg(cross=True), dt),
+        "norm2": layernorm_init(ks[4], cfg.d_model, dt),
+        "mlp": mlp_init(ks[5], cfg.mlp_cfg(), dt),
+    }
+
+
+def enc_block_apply(p, cfg: ModelCfg, x, *, ctx=_FP, name="enc"):
+    h = layernorm_apply(p["norm1"], x)
+    x = x + attention_apply(p["attn"], cfg.attn_cfg(), h, ctx=ctx,
+                            name=f"{name}/attn", causal=False, window=None)
+    h = layernorm_apply(p["norm2"], x)
+    x = x + mlp_apply(p["mlp"], cfg.mlp_cfg(), h, ctx=ctx, name=f"{name}/mlp")
+    return x
+
+
+def dec_block_apply(p, cfg: ModelCfg, x, memory, *, ctx=_FP, name="dec",
+                    positions=None):
+    h = layernorm_apply(p["norm1"], x)
+    x = x + attention_apply(p["attn"], cfg.attn_cfg(), h, ctx=ctx,
+                            name=f"{name}/attn", positions=positions)
+    h = layernorm_apply(p["norm_x"], x)
+    x = x + attention_apply(p["xattn"], cfg.attn_cfg(cross=True), h, ctx=ctx,
+                            name=f"{name}/xattn", kv_x=memory, causal=False)
+    h = layernorm_apply(p["norm2"], x)
+    x = x + mlp_apply(p["mlp"], cfg.mlp_cfg(), h, ctx=ctx, name=f"{name}/mlp")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+def encdec_init(key, cfg: ModelCfg):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": embedding_init(ks[2], cfg.vocab, cfg.d_model, dt),
+        "dec_pos": init.normal(0.01)(ks[3], (cfg.max_seq, cfg.d_model), dt),
+        "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg))(dec_keys),
+        "enc_norm": layernorm_init(ks[4], cfg.d_model, dt),
+        "dec_norm": layernorm_init(ks[5], cfg.d_model, dt),
+    }
+
+
+def encode(p, cfg: ModelCfg, frames, *, ctx=_FP):
+    """frames: (B, enc_seq, d) precomputed embeddings (frontend stub)."""
+    x = frames.astype(cfg.jdtype)
+    x = x + _sincos_1d(cfg.d_model, frames.shape[1]).astype(cfg.jdtype)[None]
+    if cfg.scan_layers:
+        def body(h, xs):
+            bp, li = xs
+            return enc_block_apply(bp, cfg, h, ctx=ctx.at_layer(li), name="enc"), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (p["enc_blocks"], jnp.arange(cfg.n_enc_layers)))
+    else:
+        for i in range(cfg.n_enc_layers):
+            bp = jax.tree.map(lambda a: a[i], p["enc_blocks"])
+            x = enc_block_apply(bp, cfg, x, ctx=ctx.at_layer(i), name=f"enc{i}")
+    return layernorm_apply(p["enc_norm"], x)
+
+
+def decode_train(p, cfg: ModelCfg, tokens, memory, *, ctx=_FP):
+    """Teacher-forced decoder forward to logits."""
+    B, S = tokens.shape
+    x = embedding_apply(p["embed"], tokens).astype(cfg.jdtype)
+    x = x + p["dec_pos"][:S][None]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.scan_layers:
+        def body(h, xs):
+            bp, li = xs
+            return dec_block_apply(bp, cfg, h, memory, ctx=ctx.at_layer(li),
+                                   name="dec", positions=positions), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (p["dec_blocks"], jnp.arange(cfg.n_layers)))
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], p["dec_blocks"])
+            x = dec_block_apply(bp, cfg, x, memory, ctx=ctx.at_layer(i),
+                                name=f"dec{i}", positions=positions)
+    x = layernorm_apply(p["dec_norm"], x)
+    return embedding_logits(p["embed"], x, ctx=ctx, name="lm_head")
+
+
+def encdec_loss_fn(p, cfg: ModelCfg, batch, *, ctx=_FP):
+    """batch: {'frames': (B,enc_seq,d), 'tokens': (B,S), 'labels': (B,S)}."""
+    memory = encode(p, cfg, batch["frames"], ctx=ctx)
+    logits = decode_train(p, cfg, batch["tokens"], memory, ctx=ctx)
+    loss = ce_loss(logits, batch["labels"])
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with self-KV cache and fixed cross-KV cache
+# ---------------------------------------------------------------------------
+def encdec_cache_init(cfg: ModelCfg, batch, max_len, dtype=None):
+    dtype = dtype or cfg.jdtype
+    one_kv = kv_cache_init(cfg.attn_cfg(), batch, max_len, dtype)
+    one_x = {
+        "k": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    L = cfg.n_layers
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), t)
+    return {"kv": stack(one_kv), "xkv": stack(one_x)}
+
+
+def encdec_prefill(p, cfg: ModelCfg, tokens, frames, *, ctx=_FP, max_len=None):
+    """Encode memory, precompute cross K/V, prefill decoder self-cache."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    memory = encode(p, cfg, frames, ctx=ctx)
+    x = embedding_apply(p["embed"], tokens).astype(cfg.jdtype)
+    x = x + p["dec_pos"][:S][None]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def one_layer(bp, h, li, name):
+        hh = layernorm_apply(bp["norm1"], h)
+        ya, kv = attention_prefill(bp["attn"], cfg.attn_cfg(), hh,
+                                   ctx=ctx.at_layer(li), name=f"{name}/attn",
+                                   positions=positions, max_len=max_len)
+        h = h + ya
+        hh = layernorm_apply(bp["norm_x"], h)
+        xkv = cross_attention_cache(bp["xattn"], cfg.attn_cfg(cross=True),
+                                    memory, ctx=ctx.at_layer(li), name=f"{name}/xattn")
+        h = h + cross_attention_decode(bp["xattn"], cfg.attn_cfg(cross=True), hh,
+                                       xkv, ctx=ctx.at_layer(li), name=f"{name}/xattn")
+        hh = layernorm_apply(bp["norm2"], h)
+        h = h + mlp_apply(bp["mlp"], cfg.mlp_cfg(), hh, ctx=ctx.at_layer(li),
+                          name=f"{name}/mlp")
+        return h, {"kv": kv, "xkv": xkv}
+
+    if cfg.scan_layers:
+        def body(h, xs):
+            bp, li = xs
+            return one_layer(bp, h, li, "dec")
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, cache = jax.lax.scan(body, x, (p["dec_blocks"], jnp.arange(cfg.n_layers)))
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], p["dec_blocks"])
+            x, c = one_layer(bp, x, i, f"dec{i}")
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    x = layernorm_apply(p["dec_norm"], x[:, -1:])
+    return embedding_logits(p["embed"], x, ctx=ctx, name="lm_head"), cache
+
+
+def encdec_decode_step(p, cfg: ModelCfg, token, cache, index, *, ctx=_FP):
+    """One decoder step against self-KV + fixed cross-KV caches."""
+    x = embedding_apply(p["embed"], token).astype(cfg.jdtype)
+    x = x + jax.lax.dynamic_slice_in_dim(p["dec_pos"], index, 1, axis=0)[None]
+
+    def one_layer(bp, h, c, li, name):
+        hh = layernorm_apply(bp["norm1"], h)
+        ya, kv = attention_decode(bp["attn"], cfg.attn_cfg(), hh, c["kv"], index,
+                                  ctx=ctx.at_layer(li), name=f"{name}/attn")
+        h = h + ya
+        hh = layernorm_apply(bp["norm_x"], h)
+        h = h + cross_attention_decode(bp["xattn"], cfg.attn_cfg(cross=True), hh,
+                                       c["xkv"], ctx=ctx.at_layer(li),
+                                       name=f"{name}/xattn")
+        hh = layernorm_apply(bp["norm2"], h)
+        h = h + mlp_apply(bp["mlp"], cfg.mlp_cfg(), hh, ctx=ctx.at_layer(li),
+                          name=f"{name}/mlp")
+        return h, {"kv": kv, "xkv": c["xkv"]}
+
+    if cfg.scan_layers:
+        def body(h, xs):
+            bp, c, li = xs
+            return one_layer(bp, h, c, li, "dec")
+        x, cache = jax.lax.scan(
+            body, x, (p["dec_blocks"], cache, jnp.arange(cfg.n_layers)))
+    else:
+        new = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], p["dec_blocks"])
+            c = jax.tree.map(lambda a: a[i], cache)
+            x, c = one_layer(bp, x, c, i, f"dec{i}")
+            new.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new)
+
+    x = layernorm_apply(p["dec_norm"], x)
+    return embedding_logits(p["embed"], x, ctx=ctx, name="lm_head"), cache

@@ -1,0 +1,21 @@
+"""Minimal functional NN substrate (no flax dependency).
+
+Modules are plain functions: ``*_init(key, ...) -> params`` returning a
+pytree of arrays, and ``*_apply(params, x, ...) -> y``. Every matmul-like
+op and every quantization-relevant activation routes through an
+:class:`~repro.nn.ctx.OpContext`, which is the interception point used by
+the TQ-DiT PTQ engine (calibration capture, fake-quant, int8 kernels).
+"""
+from repro.nn.ctx import OpContext, FPContext
+from repro.nn import initializers
+from repro.nn.layers import (
+    linear_init, linear_apply,
+    embedding_init, embedding_apply,
+    layernorm_init, layernorm_apply,
+    rmsnorm_init, rmsnorm_apply,
+    rope_freqs, rope_apply,
+    sincos_2d, timestep_embedding,
+)
+from repro.nn.attention import attention_init, attention_apply, mla_init, mla_apply
+from repro.nn.mlp import mlp_init, mlp_apply, moe_init, moe_apply
+from repro.nn.ssm import ssd_init, ssd_apply

@@ -1,0 +1,468 @@
+"""Attention layers: GQA (plain / q-chunked / windowed / decode) and MLA.
+
+All quantization-relevant matmuls route through the OpContext:
+  - ``{name}/qk``  : Q·K^T          (activation × activation)
+  - ``{name}/pv``  : P·V            (post-softmax activation × activation)
+  - ``{name}/{q,k,v,o,...}`` : the projections (activation × weight)
+and the post-softmax probabilities pass through ``ctx.act(..., 'post_softmax')``
+— the tensor TQ-DiT's MRQ + TGQ quantize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+from repro.nn.layers import linear_init, rmsnorm_init, rmsnorm_apply, rope_freqs, rope_apply
+
+_FP = FPContext()
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    window: Optional[int] = None        # sliding-window size (None = global)
+    q_chunk: int = 512                  # q-tile for the chunked impl
+    out_bias: bool = False
+    n_meta: int = 0                     # learnable prefix (meta) tokens (hymba)
+    # sequence-parallel attention: (batch_axes, seq_axis) mesh names, e.g.
+    # (("data",), "model"). Shards the q/scores/probs SEQ dim over the TP
+    # axis — the cure for head counts that do not divide the TP degree,
+    # where GSPMD otherwise all-reduces the quadratic (S,S) scores
+    # (measured: qwen2.5-14b train, DESIGN §7). Set by the launch layer.
+    sp_spec: Optional[tuple] = None
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def attention_init(key, cfg: AttnCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    H, Hk, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "q": linear_init(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": linear_init(ks[1], d, Hk * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": linear_init(ks[2], d, Hk * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": linear_init(ks[3], H * hd, d, bias=cfg.out_bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(ks[4], hd, dtype)
+        p["k_norm"] = rmsnorm_init(ks[4], hd, dtype)
+    if cfg.n_meta:
+        p["meta"] = init.normal(0.02)(ks[5], (cfg.n_meta, d), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _project_qkv(p, cfg, x, kv_x, positions, kv_positions, ctx, name):
+    """Project and shape q:(B,S,Hk,G,hd) k,v:(B,Skv,Hk,hd); apply rope/norm."""
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hk
+    q = ctx.linear(f"{name}/q", x, p["q"]["w"], p["q"].get("b"))
+    k = ctx.linear(f"{name}/k", kv_x, p["k"]["w"], p["k"].get("b"))
+    v = ctx.linear(f"{name}/v", kv_x, p["v"]["w"], p["v"].get("b"))
+    q = q.reshape(B, S, Hk * G, hd)
+    k = k.reshape(B, kv_x.shape[1], Hk, hd)
+    v = v.reshape(B, kv_x.shape[1], Hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    if cfg.rope:
+        inv = rope_freqs(hd, cfg.rope_theta)
+        q = rope_apply(q, positions, inv)
+        k = rope_apply(k, kv_positions, inv)
+    q = q.reshape(B, S, Hk, G, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, ctx, name, scale):
+    """Grouped scaled-dot-product attention.
+
+    q: (B,Sq,Hk,G,hd); k,v: (B,Skv,Hk,hd); mask: broadcastable to
+    (B,Hk,G,Sq,Skv) boolean (True = attend) or None.
+    """
+    scores = ctx.einsum(f"{name}/qk", "bqhgd,bkhd->bhgqk", q, k) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    probs = ctx.act(f"{name}/probs", probs, "post_softmax")
+    out = ctx.einsum(f"{name}/pv", "bhgqk,bkhd->bqhgd", probs, v)
+    return out
+
+
+def _causal_mask(q_pos, k_pos, window=None):
+    """(…,Sq,Skv) boolean mask from absolute positions."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill) — plain and q-chunked
+# --------------------------------------------------------------------------
+_UNSET = object()
+
+
+def attention_apply(p, cfg: AttnCfg, x, *, ctx=_FP, name="attn",
+                    positions=None, causal=True, kv_x=None,
+                    kv_positions=None, impl="plain", window=_UNSET):
+    """Full-sequence attention. Returns y:(B,S,d).
+
+    kv_x: if given, cross-attention onto that memory (no causal mask).
+    impl: 'plain' materializes (Sq,Skv) scores; 'qchunk' tiles queries to
+    bound transient memory for long sequences.
+    window: overrides cfg.window for masking; may be a TRACED scalar
+    (hybrid archs vary the window per layer under lax.scan).
+    """
+    window = cfg.window if window is _UNSET else window
+    B, S, _ = x.shape
+    cross = kv_x is not None
+    if kv_x is None:
+        kv_x = x
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if kv_positions is None:
+        kv_positions = (jnp.broadcast_to(jnp.arange(kv_x.shape[1]), (B, kv_x.shape[1]))
+                        if not cross else jnp.zeros((B, kv_x.shape[1]), jnp.int32))
+    q, k, v = _project_qkv(p, cfg, x, kv_x, positions, kv_positions, ctx, name)
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = hd ** -0.5
+
+    if cfg.sp_spec is not None and S > 1 and not cross:
+        from jax.sharding import PartitionSpec as _P
+        bt, sx = cfg.sp_spec
+        q = jax.lax.with_sharding_constraint(
+            q, _P(bt, sx, None, None, None))          # (B, Sq, Hk, G, hd)
+        k = jax.lax.with_sharding_constraint(k, _P(bt, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, _P(bt, None, None, None))
+
+    # learnable meta-token KV prefix (hymba): attended by every query.
+    n_meta = cfg.n_meta if not cross else 0
+    if n_meta:
+        meta = jnp.broadcast_to(p["meta"], (B, cfg.n_meta, cfg.d_model)).astype(x.dtype)
+        mk = ctx.linear(f"{name}/k", meta, p["k"]["w"], p["k"].get("b"))
+        mv = ctx.linear(f"{name}/v", meta, p["v"]["w"], p["v"].get("b"))
+        mk = mk.reshape(B, n_meta, Hk, hd)
+        mv = mv.reshape(B, n_meta, Hk, hd)
+        if cfg.qk_norm:
+            mk = rmsnorm_apply(p["k_norm"], mk)
+        k = jnp.concatenate([mk, k], axis=1)
+        v = jnp.concatenate([mv, v], axis=1)
+        kv_positions = jnp.concatenate(
+            [jnp.zeros((B, n_meta), kv_positions.dtype), kv_positions], axis=1)
+
+    masked = causal or (window is not None)
+
+    def _mask_for(qpos):
+        if cross:
+            return None
+        m = _causal_mask(qpos, kv_positions, window)       # (B,Sq,Skv)
+        if n_meta:
+            m = m.at[..., :n_meta].set(True)               # meta always visible
+        return m[:, None, None]                            # (B,1,1,Sq,Skv)
+
+    if impl == "plain" or S <= cfg.q_chunk:
+        out = _sdpa(q, k, v, _mask_for(positions) if masked else None,
+                    ctx, name, scale)
+    elif impl == "qchunk":
+        C = cfg.q_chunk
+        assert S % C == 0, f"seq {S} not divisible by q_chunk {C}"
+        qc = q.reshape(B, S // C, C, Hk, H // Hk, hd)
+        pc = positions.reshape(B, S // C, C)
+
+        def one_chunk(args):
+            qi, pi = args   # (B,C,Hk,G,hd), (B,C)
+            m = _mask_for(pi) if masked and not cross else None
+            return _sdpa(qi, k, v, m, ctx, name, scale)
+
+        # map over q-chunks keeps the (C, Skv) score tile bounded.
+        out = jax.lax.map(one_chunk, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, Hk, H // Hk, hd)
+    else:
+        raise ValueError(impl)
+
+    out = out.reshape(B, S, H * hd)
+    if cfg.sp_spec is not None and S > 1 and not cross:
+        # restore the batch-sharded layout before the o-projection so SP
+        # stays confined to the quadratic attention internals — leaving the
+        # residual S-sharded collides with TP-sharded MLP/vocab dims on the
+        # same mesh axis and forces (B,S,ff)/(B,S,V) gathers (measured).
+        from jax.sharding import PartitionSpec as _P
+        out = jax.lax.with_sharding_constraint(
+            out, _P(cfg.sp_spec[0], None, None))
+    return ctx.linear(f"{name}/o", out, p["o"]["w"], p["o"].get("b"))
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode)
+# --------------------------------------------------------------------------
+def kv_cache_init(cfg: AttnCfg, batch, max_len, dtype=jnp.float32):
+    """Ring buffer of size ``window`` when sliding-window, else ``max_len``."""
+    size = min(cfg.window, max_len) if cfg.window else max_len
+    Hk, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, Hk, hd), dtype),
+        "v": jnp.zeros((batch, size, Hk, hd), dtype),
+    }
+
+
+def attention_prefill(p, cfg: AttnCfg, x, *, ctx=_FP, name="attn", positions=None,
+                      impl="qchunk", max_len=None, window=_UNSET,
+                      full_cache=False):
+    """Run forward attention AND build the decode cache. Returns (y, cache).
+
+    full_cache=True allocates a full ``max_len`` cache even when windowed
+    (hybrid archs stack windowed + global layer caches uniformly)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y = attention_apply(p, cfg, x, ctx=ctx, name=name, positions=positions,
+                        impl=impl, window=window)
+    # recompute k/v once more for the cache (cheap relative to attention).
+    _, k, v = _project_qkv(p, cfg, x, x, positions, positions, ctx, name)
+    ring = cfg.window and not full_cache
+    size = min(cfg.window, max_len or S) if ring else (max_len or S)
+    if ring and S > size:
+        k, v = k[:, -size:], v[:, -size:]
+    elif size > S:
+        pad = size - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(p, cfg: AttnCfg, x, cache, index, *, ctx=_FP, name="attn",
+                     window=_UNSET):
+    """One decode step. x:(B,1,d); index: scalar int32 absolute position of
+    the new token. Ring-buffer writes when sliding-window (static
+    cfg.window); a dynamic ``window`` (possibly traced, full-size cache)
+    only tightens the mask. Returns (y, cache).
+    """
+    dyn_window = None if window is _UNSET else window
+    B = x.shape[0]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, pos, pos, ctx, name)
+    size = cache["k"].shape[1]
+    slot = (index % size) if cfg.window else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    # absolute positions held in each cache slot
+    slots = jnp.arange(size)
+    if cfg.window:
+        # ring: slot s holds the most recent position p with p % size == s, p <= index
+        k_pos = index - ((index - slots) % size)
+    else:
+        k_pos = slots
+    valid = (k_pos >= 0) & (k_pos <= index)
+    if cfg.window:
+        valid &= k_pos > index - cfg.window
+    if dyn_window is not None:
+        valid &= k_pos > index - dyn_window
+    mask = valid[None, None, None, None, :]     # (1,1,1,1,size)
+
+    if cfg.n_meta:
+        meta = jnp.broadcast_to(p["meta"], (B, cfg.n_meta, cfg.d_model)).astype(x.dtype)
+        mk = ctx.linear(f"{name}/k", meta, p["k"]["w"], p["k"].get("b")).reshape(B, cfg.n_meta, Hk, hd)
+        mv = ctx.linear(f"{name}/v", meta, p["v"]["w"], p["v"].get("b")).reshape(B, cfg.n_meta, Hk, hd)
+        if cfg.qk_norm:
+            mk = rmsnorm_apply(p["k_norm"], mk)
+        k_att = jnp.concatenate([mk, k], axis=1)
+        v_att = jnp.concatenate([mv, v], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((1, 1, 1, 1, cfg.n_meta), bool), mask], axis=-1)
+    else:
+        k_att, v_att = k, v
+
+    out = _sdpa(q, k_att, v_att, mask, ctx, name, hd ** -0.5)
+    out = out.reshape(B, 1, H * hd)
+    y = ctx.linear(f"{name}/o", out, p["o"]["w"], p["o"].get("b"))
+    return y, {"k": k, "v": v}
+
+
+def cross_attention_cache(p, cfg: AttnCfg, memory, *, ctx=_FP, name="xattn"):
+    """Precompute cross-attention K/V from encoder memory (whisper decode)."""
+    B, S, _ = memory.shape
+    Hk, hd = cfg.n_kv_heads, cfg.head_dim
+    k = ctx.linear(f"{name}/k", memory, p["k"]["w"], p["k"].get("b")).reshape(B, S, Hk, hd)
+    v = ctx.linear(f"{name}/v", memory, p["v"]["w"], p["v"].get("b")).reshape(B, S, Hk, hd)
+    if cfg.qk_norm:
+        k = rmsnorm_apply(p["k_norm"], k)
+    return {"k": k, "v": v}
+
+
+def cross_attention_decode(p, cfg: AttnCfg, x, xcache, *, ctx=_FP, name="xattn"):
+    """Cross-attention for one (or few) decoder positions against fixed memory."""
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ctx.linear(f"{name}/q", x, p["q"]["w"], p["q"].get("b")).reshape(B, S, Hk, H // Hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+    out = _sdpa(q, xcache["k"], xcache["v"], None, ctx, name, hd ** -0.5)
+    out = out.reshape(B, S, H * hd)
+    return ctx.linear(f"{name}/o", out, p["o"]["w"], p["o"].get("b"))
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2 family)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    q_lora: int = 0          # 0 = direct q projection
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+    q_chunk: int = 512
+
+
+def mla_init(key, cfg: MLACfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    H, d = cfg.n_heads, cfg.d_model
+    qd = cfg.nope_dim + cfg.rope_dim
+    p = {}
+    if cfg.q_lora:
+        p["q_a"] = linear_init(ks[0], d, cfg.q_lora, bias=False, dtype=dtype)
+        p["q_a_norm"] = rmsnorm_init(ks[1], cfg.q_lora, dtype)
+        p["q_b"] = linear_init(ks[2], cfg.q_lora, H * qd, bias=False, dtype=dtype)
+    else:
+        p["q"] = linear_init(ks[0], d, H * qd, bias=False, dtype=dtype)
+    p["kv_a"] = linear_init(ks[3], d, cfg.kv_lora + cfg.rope_dim, bias=False, dtype=dtype)
+    p["kv_a_norm"] = rmsnorm_init(ks[4], cfg.kv_lora, dtype)
+    p["kv_b"] = linear_init(ks[5], cfg.kv_lora, H * (cfg.nope_dim + cfg.v_dim),
+                            bias=False, dtype=dtype)
+    p["o"] = linear_init(ks[6], H * cfg.v_dim, d, bias=False, dtype=dtype)
+    return p
+
+
+def _mla_q(p, cfg, x, positions, ctx, name):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if cfg.q_lora:
+        cq = ctx.linear(f"{name}/q_a", x, p["q_a"]["w"])
+        cq = rmsnorm_apply(p["q_a_norm"], cq)
+        q = ctx.linear(f"{name}/q_b", cq, p["q_b"]["w"])
+    else:
+        q = ctx.linear(f"{name}/q", x, p["q"]["w"])
+    q = q.reshape(B, S, H, cfg.nope_dim + cfg.rope_dim)
+    q_nope, q_pe = q[..., : cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_pe = rope_apply(q_pe, positions, rope_freqs(cfg.rope_dim, cfg.rope_theta))
+    return q_nope, q_pe
+
+
+def _mla_ckv(p, cfg, x, positions, ctx, name):
+    B, S, _ = x.shape
+    ckv = ctx.linear(f"{name}/kv_a", x, p["kv_a"]["w"])
+    c_kv, k_pe = ckv[..., : cfg.kv_lora], ckv[..., cfg.kv_lora:]
+    c_kv = rmsnorm_apply(p["kv_a_norm"], c_kv)
+    k_pe = rope_apply(k_pe[:, :, None, :], positions,
+                      rope_freqs(cfg.rope_dim, cfg.rope_theta))[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def mla_apply(p, cfg: MLACfg, x, *, ctx=_FP, name="mla", positions=None,
+              causal=True, impl="plain"):
+    """Materialized MLA (train / prefill)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_pe = _mla_q(p, cfg, x, positions, ctx, name)
+    c_kv, k_pe = _mla_ckv(p, cfg, x, positions, ctx, name)
+    kv = ctx.linear(f"{name}/kv_b", c_kv, p["kv_b"]["w"])
+    kv = kv.reshape(B, S, H, cfg.nope_dim + cfg.v_dim)
+    k_nope, v = kv[..., : cfg.nope_dim], kv[..., cfg.nope_dim:]
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+
+    def _attend(qn, qp, qpos):
+        s = (ctx.einsum(f"{name}/qk_nope", "bqhd,bkhd->bhqk", qn, k_nope)
+             + ctx.einsum(f"{name}/qk_pe", "bqhd,bkd->bhqk", qp, k_pe)) * scale
+        if causal:
+            m = _causal_mask(qpos, positions)[:, None]
+            s = jnp.where(m, s, NEG_INF)
+        pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        pr = ctx.act(f"{name}/probs", pr, "post_softmax")
+        return ctx.einsum(f"{name}/pv", "bhqk,bkhd->bqhd", pr, v)
+
+    if impl == "plain" or S <= cfg.q_chunk:
+        out = _attend(q_nope, q_pe, positions)
+    else:
+        C = cfg.q_chunk
+        qn = jnp.moveaxis(q_nope.reshape(B, S // C, C, H, cfg.nope_dim), 1, 0)
+        qp = jnp.moveaxis(q_pe.reshape(B, S // C, C, H, cfg.rope_dim), 1, 0)
+        pp = jnp.moveaxis(positions.reshape(B, S // C, C), 1, 0)
+        out = jax.lax.map(lambda a: _attend(*a), (qn, qp, pp))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, cfg.v_dim)
+    out = out.reshape(B, S, H * cfg.v_dim)
+    return ctx.linear(f"{name}/o", out, p["o"]["w"])
+
+
+def mla_cache_init(cfg: MLACfg, batch, max_len, dtype=jnp.float32):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, cfg: MLACfg, x, *, ctx=_FP, name="mla", positions=None,
+                impl="qchunk", max_len=None):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y = mla_apply(p, cfg, x, ctx=ctx, name=name, positions=positions, impl=impl)
+    c_kv, k_pe = _mla_ckv(p, cfg, x, positions, ctx, name)
+    if max_len and max_len > S:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, max_len - S), (0, 0)))
+        k_pe = jnp.pad(k_pe, ((0, 0), (0, max_len - S), (0, 0)))
+    return y, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def mla_decode(p, cfg: MLACfg, x, cache, index, *, ctx=_FP, name="mla"):
+    """Absorbed-matmul decode: queries are folded into the latent (kv_lora)
+    space so attention runs against the *compressed* cache — the
+    production MLA decode path (no per-step K/V materialization).
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q_nope, q_pe = _mla_q(p, cfg, x, pos, ctx, name)          # (B,1,H,*)
+    c_new, kpe_new = _mla_ckv(p, cfg, x, pos, ctx, name)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, index, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], kpe_new, (0, index, 0))
+
+    wkv = p["kv_b"]["w"].reshape(cfg.kv_lora, H, cfg.nope_dim + cfg.v_dim)
+    w_k = wkv[..., : cfg.nope_dim]          # (lora, H, nope)
+    w_v = wkv[..., cfg.nope_dim:]           # (lora, H, v)
+    # absorb: q_abs[b,1,h,lora] = q_nope · w_k^T
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_k)
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    s = (ctx.einsum(f"{name}/qk_nope", "bqhl,bkl->bhqk", q_abs, c_kv)
+         + ctx.einsum(f"{name}/qk_pe", "bqhd,bkd->bhqk", q_pe, k_pe)) * scale
+    valid = jnp.arange(c_kv.shape[1]) <= index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    pr = ctx.act(f"{name}/probs", pr, "post_softmax")
+    ctx_lat = ctx.einsum(f"{name}/pv", "bhqk,bkl->bqhl", pr, c_kv)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx_lat, w_v).reshape(B, 1, H * cfg.v_dim)
+    y = ctx.linear(f"{name}/o", out, p["o"]["w"])
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

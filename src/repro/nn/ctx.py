@@ -1,0 +1,81 @@
+"""Op context — the interception seam between models and the PTQ engine.
+
+Every model in ``repro.models`` routes matmul-like computations and
+quantization-relevant activations through an :class:`OpContext`:
+
+- ``linear(name, x, w, b)``      — activation × weight projections,
+- ``einsum(name, spec, a, b)``   — activation × activation MatMuls
+                                   (attention QK^T and P·V),
+- ``act(name, x, kind)``         — identity hook on distributions the paper
+                                   treats specially (``post_softmax``,
+                                   ``post_gelu``, ``post_silu``).
+
+``FPContext`` is the no-op full-precision implementation. The PTQ engine
+(`repro.core`) provides:
+
+- ``CalibrationContext`` — records activation ranges / histograms and
+  (in a second pass) Fisher weights per op name,
+- ``QuantContext``       — applies the calibrated quantizers, either as
+  simulated quant-dequant (fidelity experiments) or via the int8 Pallas
+  kernels (deployment path),
+
+without any change to model code. ``name`` uniquely identifies the op
+within a layer; when models run their blocks in a Python loop the layer
+index is baked into the name (``blk3/attn/qk``), and when they run under
+``lax.scan`` the name is layer-invariant and contexts receive stacked
+per-layer parameters plus a traced ``layer`` index (see
+``OpContext.at_layer``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class OpContext:
+    """Base class. ``tgroup`` is the TGQ timestep-group index (traced scalar
+    or None outside diffusion); ``layer`` is the current layer index when the
+    caller runs blocks under ``lax.scan`` (traced scalar) or a concrete int.
+    """
+
+    tgroup: Optional[Any] = None
+    layer: Optional[Any] = None
+
+    def at_layer(self, layer) -> "OpContext":
+        return dataclasses.replace(self, layer=layer)
+
+    def with_tgroup(self, tgroup) -> "OpContext":
+        return dataclasses.replace(self, tgroup=tgroup)
+
+    # -- op seams ----------------------------------------------------------
+    def linear(self, name: str, x, w, b=None):
+        raise NotImplementedError
+
+    def einsum(self, name: str, spec: str, a, b, b_is_weight: bool = False):
+        """General matmul seam. ``b_is_weight`` marks operand b as a
+        parameter tensor (e.g. stacked per-expert weights) so quantized
+        contexts use a weight quantizer (per-channel) for it."""
+        raise NotImplementedError
+
+    def act(self, name: str, x, kind: str):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class FPContext(OpContext):
+    """Full-precision passthrough (the default for training and FP eval)."""
+
+    def linear(self, name, x, w, b=None):
+        y = x @ w
+        if b is not None:
+            y = y + b
+        return y
+
+    def einsum(self, name, spec, a, b, b_is_weight=False):
+        return jnp.einsum(spec, a, b)
+
+    def act(self, name, x, kind):
+        return x

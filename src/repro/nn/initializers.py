@@ -1,0 +1,38 @@
+"""Parameter initializers (jax.nn.initializers wrappers with sane defaults)."""
+import jax
+import jax.numpy as jnp
+
+
+def normal(stddev=0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+    return init
+
+
+def truncated_normal(stddev=0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(dtype)
+    return init
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def xavier_uniform():
+    def init(key, shape, dtype=jnp.float32):
+        fan_in, fan_out = shape[0], shape[-1]
+        limit = (6.0 / (fan_in + fan_out)) ** 0.5
+        return jax.random.uniform(key, shape, minval=-limit, maxval=limit).astype(dtype)
+    return init
+
+
+def lecun_normal():
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[0]
+        return (jax.random.normal(key, shape) * (1.0 / fan_in) ** 0.5).astype(dtype)
+    return init

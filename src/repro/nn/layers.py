@@ -1,0 +1,116 @@
+"""Core layers: linear, embedding, norms, RoPE, positional/timestep embeds."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+
+_FP = FPContext()
+
+
+# --------------------------------------------------------------------------
+# Linear / Embedding
+# --------------------------------------------------------------------------
+def linear_init(key, d_in, d_out, bias=True, dtype=jnp.float32, w_init=None):
+    w_init = w_init or init.normal(0.02)
+    p = {"w": w_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p, x, ctx=_FP, name="linear"):
+    return ctx.linear(name, x, p["w"], p.get("b"))
+
+
+def embedding_init(key, vocab, d, dtype=jnp.float32, stddev=0.02):
+    return {"emb": init.normal(stddev)(key, (vocab, d), dtype)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def embedding_logits(p, x, ctx=_FP, name="lm_head"):
+    """Tied-embedding output projection."""
+    return ctx.linear(name, x, p["emb"].T)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def layernorm_init(key, d, dtype=jnp.float32, affine=True):
+    if not affine:
+        return {}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if p:
+        y = y * p["scale"] + p["bias"]
+    return y
+
+
+def rmsnorm_init(key, d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim, theta=10000.0):
+    """Inverse frequencies for RoPE; shape (head_dim//2,)."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def rope_apply(x, positions, inv_freq):
+    """Apply rotary embedding.
+
+    x: (..., S, n_heads, head_dim); positions: (..., S) int32.
+    Uses the "split-half" convention (GPT-NeoX / llama style).
+    """
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# DiT positional / conditioning embeddings
+# --------------------------------------------------------------------------
+def sincos_2d(d, grid_h, grid_w):
+    """Fixed 2D sin-cos positional embedding, (grid_h*grid_w, d)."""
+    assert d % 4 == 0
+    def _1d(dim, pos):
+        omega = 1.0 / 10000 ** (np.arange(dim // 2, dtype=np.float64) / (dim / 2.0))
+        out = np.einsum("p,f->pf", pos, omega)
+        return np.concatenate([np.sin(out), np.cos(out)], axis=1)
+    gh = np.arange(grid_h, dtype=np.float64)
+    gw = np.arange(grid_w, dtype=np.float64)
+    eh = _1d(d // 2, np.repeat(gh, grid_w))
+    ew = _1d(d // 2, np.tile(gw, grid_h))
+    return jnp.asarray(np.concatenate([eh, ew], axis=1), dtype=jnp.float32)
+
+
+def timestep_embedding(t, d, max_period=10000.0):
+    """DDPM sinusoidal timestep embedding. t: (B,) -> (B, d)."""
+    half = d // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    if d % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb

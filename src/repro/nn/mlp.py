@@ -1,0 +1,201 @@
+"""Pointwise-feedforward layers: dense MLP (GELU / SwiGLU) and MoE.
+
+The MoE uses a sort-based "dropping" dispatch (argsort tokens by expert,
+capacity-truncated, batched expert matmuls) — the production JAX pattern
+whose cost is dominated by expert FLOPs, unlike dense one-hot dispatch
+whose dispatch einsum would dominate at hundreds of experts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+from repro.nn.layers import linear_init
+
+_FP = FPContext()
+
+
+# --------------------------------------------------------------------------
+# Dense MLP
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"          # 'gelu' | 'swiglu'
+    bias: bool = False
+
+
+def mlp_init(key, cfg: MLPCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {
+            "fc1": linear_init(ks[0], cfg.d_model, cfg.d_ff, bias=cfg.bias, dtype=dtype),
+            "fc2": linear_init(ks[1], cfg.d_ff, cfg.d_model, bias=cfg.bias, dtype=dtype),
+        }
+    return {
+        "gate": linear_init(ks[0], cfg.d_model, cfg.d_ff, bias=cfg.bias, dtype=dtype),
+        "up": linear_init(ks[1], cfg.d_model, cfg.d_ff, bias=cfg.bias, dtype=dtype),
+        "down": linear_init(ks[2], cfg.d_ff, cfg.d_model, bias=cfg.bias, dtype=dtype),
+    }
+
+
+def mlp_apply(p, cfg: MLPCfg, x, *, ctx=_FP, name="mlp"):
+    if cfg.act == "gelu":
+        h = ctx.linear(f"{name}/fc1", x, p["fc1"]["w"], p["fc1"].get("b"))
+        h = jax.nn.gelu(h, approximate=True)
+        h = ctx.act(f"{name}/gelu", h, "post_gelu")
+        return ctx.linear(f"{name}/fc2", h, p["fc2"]["w"], p["fc2"].get("b"))
+    g = ctx.linear(f"{name}/gate", x, p["gate"]["w"], p["gate"].get("b"))
+    u = ctx.linear(f"{name}/up", x, p["up"]["w"], p["up"].get("b"))
+    g = jax.nn.silu(g)
+    g = ctx.act(f"{name}/silu", g, "post_silu")
+    return ctx.linear(f"{name}/down", g * u, p["down"]["w"], p["down"].get("b"))
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_expert: int                # per-expert hidden dim
+    n_experts: int               # routed experts
+    top_k: int
+    n_shared: int = 0            # shared experts (each of size d_expert)
+    capacity_factor: float = 1.25
+    groups: int = 1              # dispatch groups; set = dp shards so the
+                                 # group axis shards cleanly on ("pod","data")
+    act: str = "swiglu"
+    norm_topk: bool = True       # renormalize top-k gates to sum 1
+    aux_loss_coef: float = 0.01
+    # EP dispatch sharding constraint (batch_axes, ep_axis): pins the
+    # (G, E, C, d) expert buffer to G@batch_axes x E@ep_axis — the
+    # all-to-all token-routing layout — instead of leaving GSPMD to
+    # resolve the scatter with giant cross-device collectives. Set by the
+    # launch layer when groups == dp size.
+    shard_spec: Optional[tuple] = None
+
+
+def moe_init(key, cfg: MoECfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    w = init.normal(0.02)
+    p = {
+        "router": {"w": w(ks[0], (d, E), jnp.float32)},   # router kept fp32
+        "gate": w(ks[1], (E, d, f), dtype),
+        "up": w(ks[2], (E, d, f), dtype),
+        "down": w(ks[3], (E, f, d), dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(
+            ks[4], MLPCfg(d, cfg.n_shared * f, act=cfg.act), dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoECfg) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    # round up to a multiple of 8 for TPU-friendly layouts; floor at top_k.
+    c = max(c, cfg.top_k, 1)
+    return int(-8 * (-c // 8))
+
+
+def moe_apply(p, cfg: MoECfg, x, *, ctx=_FP, name="moe"):
+    """x: (B, S, d) -> (y, aux) with aux = {'aux_loss', 'router_z'}.
+
+    Dispatch: tokens grouped into ``cfg.groups`` groups; within each group
+    tokens are argsorted by expert id, capacity-truncated, gathered into an
+    (E, C) buffer, run through batched expert matmuls, and combined back
+    with top-k gate weights. Dropped tokens fall through via the shared
+    experts / residual (standard dropping semantics).
+    """
+    B, S, d = x.shape
+    E, K, G = cfg.n_experts, cfg.top_k, cfg.groups
+    T = B * S
+    assert T % G == 0, f"tokens {T} not divisible by moe groups {G}"
+    N = T // G
+    xt = x.reshape(G, N, d)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = ctx.linear(f"{name}/router", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,N,E)
+    gates, eidx = jax.lax.top_k(probs, K)                       # (G,N,K)
+    if cfg.norm_topk:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch-style) + router z-loss
+    me = jnp.mean(probs, axis=1)                                # (G,E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=2), axis=1)
+    aux_loss = cfg.aux_loss_coef * E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    router_z = 1e-3 * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    C = _capacity(N, cfg)
+    slot_expert = eidx.reshape(G, N * K)                        # slot = token*K + j
+    order = jnp.argsort(slot_expert, axis=1, stable=True)       # (G,NK)
+    sorted_expert = jnp.take_along_axis(slot_expert, order, axis=1)
+    # rank of each sorted slot within its expert run
+    counts = jax.vmap(lambda se: jnp.bincount(se, length=E))(sorted_expert)
+    seg_start = jnp.cumsum(counts, axis=1) - counts             # (G,E)
+    rank = (jnp.arange(N * K)[None, :]
+            - jnp.take_along_axis(seg_start, sorted_expert, axis=1))
+    keep = rank < C
+    dest = jnp.where(keep, sorted_expert * C + rank, E * C)     # E*C = trash slot
+
+    # scatter tokens into (E*C [+1 trash]) buffer
+    token_of_sorted = order // K                                # (G,NK)
+    src = jnp.take_along_axis(xt, token_of_sorted[..., None], axis=1)  # (G,NK,d)
+    if cfg.shard_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        bt, ep = cfg.shard_spec
+        src = jax.lax.with_sharding_constraint(src, _P(bt, None, None))
+    buf = jnp.zeros((G, E * C + 1, d), x.dtype).at[
+        jnp.arange(G)[:, None], dest].set(src, mode="drop")
+    xb = buf[:, : E * C].reshape(G, E, C, d)
+    if cfg.shard_spec is not None:
+        # pin the all-to-all routing layout: groups on the DP axes, experts
+        # on the EP axis (tokens cross devices exactly once).
+        xb = jax.lax.with_sharding_constraint(
+            xb, _P(cfg.shard_spec[0], cfg.shard_spec[1], None, None))
+
+    # ---- expert computation (batched over E) --------------------------------
+    if cfg.act == "swiglu":
+        g = ctx.einsum(f"{name}/gate", "gecd,edf->gecf", xb, p["gate"], b_is_weight=True)
+        u = ctx.einsum(f"{name}/up", "gecd,edf->gecf", xb, p["up"], b_is_weight=True)
+        g = jax.nn.silu(g)
+        g = ctx.act(f"{name}/silu", g, "post_silu")
+        h = g * u
+    else:
+        h = ctx.einsum(f"{name}/gate", "gecd,edf->gecf", xb, p["gate"], b_is_weight=True)
+        h = jax.nn.gelu(h, approximate=True)
+        h = ctx.act(f"{name}/gelu", h, "post_gelu")
+    yb = ctx.einsum(f"{name}/down", "gecf,efd->gecd", h, p["down"], b_is_weight=True)
+    if cfg.shard_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        yb = jax.lax.with_sharding_constraint(
+            yb, _P(cfg.shard_spec[0], cfg.shard_spec[1], None, None))
+    yb = yb.reshape(G, E * C, d)
+
+    # ---- combine -------------------------------------------------------------
+    # invert the sort permutation: dest_by_slot[g, slot] = buffer position
+    dest_by_slot = jnp.zeros((G, N * K), jnp.int32).at[
+        jnp.arange(G)[:, None], order].set(dest.astype(jnp.int32))
+    slot_ok = dest_by_slot < E * C
+    y_slot = jnp.take_along_axis(
+        yb, jnp.minimum(dest_by_slot, E * C - 1)[..., None], axis=1)  # (G,NK,d)
+    y_slot = jnp.where(slot_ok[..., None], y_slot, 0.0)
+    gk = gates.reshape(G, N * K).astype(x.dtype)
+    y = jnp.sum((y_slot * gk[..., None]).reshape(G, N, K, d), axis=2)
+
+    if cfg.n_shared:
+        y = y + mlp_apply(p["shared"], MLPCfg(d, cfg.n_shared * cfg.d_expert,
+                                              act=cfg.act),
+                          xt, ctx=ctx, name=f"{name}/shared")
+    y = y.reshape(B, S, d)
+    return y, {"aux_loss": aux_loss, "router_z": router_z}

@@ -1,0 +1,201 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked-scan implementation.
+
+Forward runs the SSD algorithm: quadratic attention-like computation
+inside fixed-size chunks, linear recurrence across chunks (carried by a
+``lax.scan``), which is the production formulation (Dao & Gu 2024,
+arXiv:2405.21060). Decode is the O(1) per-token recurrence with a
+depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.ctx import FPContext
+from repro.nn.layers import linear_init, rmsnorm_init
+
+_FP = FPContext()
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDCfg:
+    d_model: int
+    d_inner: int                 # = n_heads * head_dim
+    d_state: int = 128
+    head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_ch(self):
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssd_init(key, cfg: SSDCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + H
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(ks[2], (H,))
+    dt = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, d_in_proj, bias=False, dtype=dtype),
+        "conv_w": init.normal(0.2)(ks[1], (cfg.d_conv, cfg.conv_ch), dtype),
+        "conv_b": jnp.zeros((cfg.conv_ch,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(ks[3], cfg.d_inner, dtype),
+        "out_proj": linear_init(ks[4], cfg.d_inner, cfg.d_model, bias=False, dtype=dtype),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d. xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_proj(cfg, zxbcdt):
+    H = cfg.n_heads
+    gs = cfg.n_groups * cfg.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.conv_ch], axis=-1)
+    return z, xBC, dt  # dt: (..., H)
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q); out[q,k] = sum_{i=k+1..q} a_i (q>=k) else -inf."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_apply(p, cfg: SSDCfg, x, *, ctx=_FP, name="ssd", initial_state=None,
+              return_state=False):
+    """Full-sequence SSD. x: (B,S,d). Returns y (and final state if asked).
+
+    State = {'h': (B,H,P,N), 'conv': (B,d_conv-1,conv_ch)}.
+    """
+    B, S, _ = x.shape
+    H, P, N, Gs, Q = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups, cfg.chunk
+    if S % Q:
+        # pad to a chunk multiple; padded tail only pollutes the final state,
+        # so the stateless path slices it off and the stateful path forbids it.
+        assert not return_state, f"seq {S} % chunk {Q} != 0 with return_state"
+        pad = Q - S % Q
+        y = ssd_apply(p, cfg, jnp.pad(x, ((0, 0), (0, pad), (0, 0))), ctx=ctx,
+                      name=name, initial_state=initial_state)
+        return y[:, :S]
+    nc = S // Q
+
+    zxbcdt = ctx.linear(f"{name}/in_proj", x, p["in_proj"]["w"])
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xBC[:, S - (cfg.d_conv - 1):, :]          # for decode handoff
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + Gs * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+
+    # chunked reshapes
+    xs = xs.reshape(B, nc, Q, H, P)
+    Bc = Bc.reshape(B, nc, Q, Gs, N)
+    Cc = Cc.reshape(B, nc, Q, Gs, N)
+    dt = dt.reshape(B, nc, Q, H)
+    hpg = H // Gs                                         # heads per group
+
+    dA = dt * A                                           # (B,nc,Q,H)
+    xdt = xs * dt[..., None].astype(xs.dtype)
+
+    h0 = (initial_state["h"] if initial_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dac = inp        # (B,Q,H,P) (B,Q,Gs,N) (B,Q,Gs,N) (B,Q,H)
+        cs = jnp.cumsum(dac, axis=1)                       # (B,Q,H)
+        L = jnp.exp(_segsum(jnp.moveaxis(dac, 1, -1)))     # (B,H,Q,Q)
+        CB = jnp.einsum("bqgn,bkgn->bgqk", cc, bc)         # (B,Gs,Q,Q)
+        CB = jnp.repeat(CB, hpg, axis=1)                   # (B,H,Q,Q)
+        Yd = jnp.einsum("bhqk,bkhp->bqhp", (CB * L).astype(xc.dtype), xc)
+        # contribution of carried state, and this chunk's state update
+        ccr = jnp.repeat(cc, hpg, axis=2)                  # (B,Q,H,N)
+        bcr = jnp.repeat(bc, hpg, axis=2)
+        sdec = jnp.exp(cs).astype(xc.dtype)                # (B,Q,H)
+        Yo = jnp.einsum("bqhn,bhpn,bqh->bqhp", ccr, h.astype(xc.dtype), sdec)
+        decay_state = jnp.exp(cs[:, -1:, :] - cs).astype(xc.dtype)
+        new_contrib = jnp.einsum("bqhn,bqh,bqhp->bhpn", bcr, decay_state, xc)
+        chunk_decay = jnp.exp(cs[:, -1, :])                # (B,H)
+        h_new = h * chunk_decay[..., None, None] + new_contrib.astype(jnp.float32)
+        return h_new, Yd + Yo
+
+    xs_c = jnp.moveaxis(xdt, 1, 0)
+    Bc_c = jnp.moveaxis(Bc, 1, 0)
+    Cc_c = jnp.moveaxis(Cc, 1, 0)
+    dA_c = jnp.moveaxis(dA, 1, 0)
+    h_fin, Y = jax.lax.scan(chunk_step, h0, (xs_c, Bc_c, Cc_c, dA_c))
+    Y = jnp.moveaxis(Y, 0, 1).reshape(B, S, H, P)
+    Y = Y + (p["D"][:, None].astype(Y.dtype) * xs.reshape(B, S, H, P))
+
+    # gated RMSNorm then output projection
+    y = Y.reshape(B, S, cfg.d_inner) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)) * p["norm"]["scale"]
+    out = ctx.linear(f"{name}/out_proj", y, p["out_proj"]["w"])
+    if return_state:
+        return out, {"h": h_fin, "conv": conv_tail}
+    return out
+
+
+def ssd_state_init(cfg: SSDCfg, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_ch), dtype),
+    }
+
+
+def ssd_decode(p, cfg: SSDCfg, x, state, *, ctx=_FP, name="ssd"):
+    """One-token recurrence. x: (B,1,d). Returns (y, state)."""
+    B = x.shape[0]
+    H, P, N, Gs = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxbcdt = ctx.linear(f"{name}/in_proj", x, p["in_proj"]["w"])
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    z, xBC, dt_raw = z[:, 0], xBC[:, 0], dt_raw[:, 0]
+
+    window = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC_a = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(xBC_a, [cfg.d_inner, cfg.d_inner + Gs * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    Bc = Bc.reshape(B, Gs, N)
+    Cc = Cc.reshape(B, Gs, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                                # (B,H)
+    Bh = jnp.repeat(Bc, H // Gs, axis=1)                                # (B,H,N)
+    Ch = jnp.repeat(Cc, H // Gs, axis=1)
+    h = (state["h"] * da[..., None, None]
+         + jnp.einsum("bhn,bhp,bh->bhpn", Bh.astype(jnp.float32),
+                      xs.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bhn->bhp", h.astype(xs.dtype), Ch)
+    y = y + p["D"][:, None].astype(y.dtype) * xs
+    y = y.reshape(B, 1, cfg.d_inner) * jax.nn.silu(z)[:, None, :]
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)) * p["norm"]["scale"]
+    out = ctx.linear(f"{name}/out_proj", y, p["out_proj"]["w"])
+    return out, {"h": h, "conv": window[:, 1:]}

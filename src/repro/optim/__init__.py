@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, adafactor, apply_updates, cosine_schedule,
+    constant_schedule, clip_by_global_norm, global_norm, accumulate_grads,
+    compress_grads_int8, init_error_state,
+)

@@ -1,0 +1,32 @@
+import os
+import sys
+
+# tests run against the real 1-CPU backend (the dry-run alone forces 512
+# placeholder devices, in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_dit():
+    """Small trained-ish DiT (perturbed from init so outputs are nonzero)."""
+    from repro.models import DiTCfg, dit_init
+    cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=64, n_layers=2,
+                 n_heads=4, n_classes=8)
+    p = dit_init(jax.random.PRNGKey(0), cfg)
+    p["final"]["w"] = jax.random.normal(
+        jax.random.PRNGKey(9), p["final"]["w"].shape) * 0.02
+    p["blocks"] = jax.tree.map(
+        lambda a: a + jax.random.normal(jax.random.PRNGKey(1), a.shape) * 0.01,
+        p["blocks"])
+    return cfg, p

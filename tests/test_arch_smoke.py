@@ -1,0 +1,87 @@
+"""Per-assigned-architecture smoke tests: instantiate the REDUCED config
+of the same family and run one forward + one train step on CPU, asserting
+output shapes and finiteness. The FULL configs are exercised by the
+dry-run (ShapeDtypeStruct only, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get, get_smoke
+from repro.models import (
+    DiTCfg, lm_init, lm_apply, lm_loss_fn, encdec_init, encdec_loss_fn,
+    dit_init, dit_apply,
+)
+from repro.optim import adamw, apply_updates
+
+LM_ARCHS = [a for a in ARCHS if a != "dit-xl-2"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates(arch):
+    cfg = get(arch)
+    assert cfg.n_layers >= 1
+    if not isinstance(cfg, DiTCfg):
+        assert cfg.vocab > 0 and cfg.d_model > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks,
+             "labels": jnp.concatenate(
+                 [toks[:, 1:], jnp.full((B, 1), -1, toks.dtype)], 1)}
+    if cfg.encdec:
+        p = encdec_init(key, cfg)
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+        loss_fn = lambda pp, bb: encdec_loss_fn(pp, cfg, bb)
+    else:
+        p = lm_init(key, cfg)
+        logits, _ = lm_apply(p, cfg, toks)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        loss_fn = lambda pp, bb: lm_loss_fn(pp, cfg, bb)
+
+    opt = adamw(1e-3)
+    st = opt.init(p)
+    (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    u, st = opt.update(g, st, p)
+    p2 = apply_updates(p, u)
+    (loss2, _), _ = jax.value_and_grad(loss_fn, has_aux=True)(p2, batch)
+    assert np.isfinite(float(loss2))
+
+
+def test_smoke_dit_train_step():
+    cfg = get_smoke("dit-xl-2")
+    from repro.diffusion import DiffusionCfg, make_schedule, ddpm_loss
+    key = jax.random.PRNGKey(0)
+    p = dit_init(key, cfg)
+    sched = make_schedule(DiffusionCfg(T=100))
+    x0 = jax.random.normal(key, (2, cfg.img_size, cfg.img_size, cfg.in_ch))
+    t = jnp.array([10, 90])
+    y = jnp.array([0, 3])
+
+    def loss_fn(pp):
+        return ddpm_loss(lambda x, tt, yy: dit_apply(pp, cfg, x, tt, yy),
+                         sched, x0, t, y, key)
+
+    loss, g = jax.value_and_grad(loss_fn)(p)
+    assert np.isfinite(float(loss))
+    opt = adamw(1e-3)
+    u, _ = opt.update(g, opt.init(p), p)
+    p2 = apply_updates(p, u)
+    assert np.isfinite(float(loss_fn(p2)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_matches_family(arch):
+    full, sm = get(arch), get_smoke(arch)
+    assert full.family == sm.family
+    assert full.block_type == sm.block_type
+    assert full.attn_type == sm.attn_type
+    assert full.moe == sm.moe
+    assert full.encdec == sm.encdec

@@ -1,0 +1,110 @@
+"""DDPM substrate: schedule identities, respacing, sampler determinism,
+TGQ group threading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import (
+    DiffusionCfg, ddpm_loss, ddpm_sample, ddpm_sample_python, make_schedule,
+    q_sample, respaced_schedule, respaced_timesteps, tgroup_of,
+)
+
+
+def test_schedule_identities():
+    cfg = DiffusionCfg(T=1000)
+    s = make_schedule(cfg)
+    np.testing.assert_allclose(s["alphas"], 1 - s["betas"], rtol=1e-6)
+    np.testing.assert_allclose(s["abar"], jnp.cumprod(s["alphas"]), rtol=1e-5)
+    assert float(s["abar"][-1]) < 0.01          # near-total noise at T
+    assert float(s["abar"][0]) > 0.99
+
+
+def test_cosine_schedule_valid():
+    s = make_schedule(DiffusionCfg(T=100, schedule="cosine"))
+    assert np.all(np.asarray(s["betas"]) > 0)
+    assert np.all(np.asarray(s["betas"]) < 1)
+
+
+def test_q_sample_snr_decreases():
+    cfg = DiffusionCfg(T=100)
+    s = make_schedule(cfg)
+    x0 = jnp.ones((1, 4, 4, 2))
+    noise = jax.random.normal(jax.random.PRNGKey(0), x0.shape)
+    lo = q_sample(s, x0, jnp.array([5]), noise)
+    hi = q_sample(s, x0, jnp.array([95]), noise)
+    # signal fraction at t=95 much lower than at t=5
+    assert float(jnp.abs(hi - noise).mean()) < float(jnp.abs(lo - noise).mean())
+
+
+def test_respacing_covers_endpoints():
+    ts = respaced_timesteps(1000, 100)
+    assert ts[0] == 999 and ts[-1] == 0
+    assert len(ts) == 100
+    assert np.all(np.diff(ts) < 0)
+
+
+def test_respaced_schedule_consistent():
+    cfg = DiffusionCfg(T=1000)
+    s = make_schedule(cfg)
+    use = respaced_timesteps(1000, 50)
+    rs = respaced_schedule(s, use)
+    np.testing.assert_allclose(
+        rs["abar"], np.asarray(s["abar"])[use[::-1]], rtol=1e-5)
+
+
+def test_tgroup_of_partition():
+    assert int(tgroup_of(jnp.int32(0), 100, 10)) == 0
+    assert int(tgroup_of(jnp.int32(99), 100, 10)) == 9
+    gs = [int(tgroup_of(jnp.int32(t), 250, 10)) for t in range(250)]
+    counts = np.bincount(gs)
+    assert len(counts) == 10
+    assert counts.min() == 25 and counts.max() == 25
+
+
+def test_samplers_agree_and_deterministic(tiny_dit):
+    cfg, p = tiny_dit
+    from repro.models import dit_apply
+    dif = DiffusionCfg(T=100, tgq_groups=10)
+    s = make_schedule(dif)
+    eps = lambda x, t, y, ctx: dit_apply(p, cfg, x, t, y)
+    y = jnp.array([1, 2])
+    key = jax.random.PRNGKey(5)
+    a = ddpm_sample(eps, dif, s, (2, 8, 8, 4), y, key, steps=10)
+    b = ddpm_sample(eps, dif, s, (2, 8, 8, 4), y, key, steps=10)
+    c = ddpm_sample_python(eps, dif, s, (2, 8, 8, 4), y, key, steps=10)
+    np.testing.assert_allclose(a, b, atol=0)
+    np.testing.assert_allclose(a, c, atol=1e-4)
+
+
+def test_sampler_threads_tgroups(tiny_dit):
+    cfg, p = tiny_dit
+    from repro.models import dit_apply
+    seen = []
+
+    class SpyCtx:
+        tgroup = None
+        def with_tgroup(self, g):
+            seen.append(int(g))
+            return self
+
+    dif = DiffusionCfg(T=100, tgq_groups=5)
+    s = make_schedule(dif)
+    eps = lambda x, t, y, ctx: dit_apply(p, cfg, x, t, y)
+    ddpm_sample_python(eps, dif, s, (1, 8, 8, 4), jnp.array([0]),
+                       jax.random.PRNGKey(0), steps=10, ctx=SpyCtx())
+    assert len(seen) == 10
+    assert seen[0] == 4 and seen[-1] == 0       # descending t -> groups
+    assert set(seen) == {0, 1, 2, 3, 4}
+
+
+def test_ddpm_loss_finite(tiny_dit):
+    cfg, p = tiny_dit
+    from repro.models import dit_apply
+    dif = DiffusionCfg(T=100)
+    s = make_schedule(dif)
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (4, 8, 8, 4))
+    l = ddpm_loss(lambda x, t, y: dit_apply(p, cfg, x, t, y), s, x0,
+                  jnp.array([5, 25, 50, 95]), jnp.array([0, 1, 2, 3]), key)
+    assert np.isfinite(float(l))

@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/bits sweeps in
+interpret mode (kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import act_mrq, int8_matmul, softmax_mrq
+from repro.kernels import ops, ref
+
+
+MM_SHAPES = [(8, 16, 8), (64, 96, 80), (128, 256, 128), (7, 13, 5),
+             (130, 257, 129), (256, 512, 384)]
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES)
+def test_int8_matmul_vs_ref(shape):
+    M, K, N = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M * K + N))
+    xq = jax.random.randint(k1, (M, K), -128, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+    scale = jax.random.uniform(k1, (N,)) * 0.01 + 1e-4
+    corr = 3 * jnp.sum(wq.astype(jnp.int32), axis=0)
+    bias = jax.random.normal(k2, (N,))
+    out = int8_matmul(xq, wq, scale, corr, bias, interpret=True)
+    want = ref.int8_matmul_ref(xq, wq, scale, corr, bias)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [(32, 64, 64), (128, 128, 256)])
+def test_int8_matmul_block_shapes(block):
+    bm, bn, bk = block
+    xq = jax.random.randint(jax.random.PRNGKey(0), (100, 300), -128, 128,
+                            jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(1), (300, 90), -128, 128,
+                            jnp.int32).astype(jnp.int8)
+    scale = jnp.full((90,), 1e-3)
+    corr = jnp.zeros((90,), jnp.int32)
+    out = int8_matmul(xq, wq, scale, corr, bm=bm, bn=bn, bk=bk,
+                      interpret=True)
+    want = ref.int8_matmul_ref(xq, wq, scale, corr)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_out_dtype(out_dtype):
+    xq = jnp.ones((16, 32), jnp.int8)
+    wq = jnp.ones((32, 16), jnp.int8)
+    out = int8_matmul(xq, wq, jnp.ones(16) * 0.5, jnp.zeros(16, jnp.int32),
+                      out_dtype=out_dtype, interpret=True)
+    assert out.dtype == out_dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), 16.0)
+
+
+SM_SHAPES = [(4, 16), (2, 3, 64), (2, 4, 8, 32), (5, 100)]
+
+
+@pytest.mark.parametrize("shape", SM_SHAPES)
+@pytest.mark.parametrize("bits", [8, 6])
+def test_softmax_mrq_vs_ref(shape, bits):
+    s = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 4
+    s1 = 0.25 / 2 ** (bits - 1)
+    out = softmax_mrq(s, s1, bits=bits, interpret=True)
+    want = ref.softmax_mrq_ref(s, s1, bits)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["gelu", "silu"])
+@pytest.mark.parametrize("bits", [8, 6])
+@pytest.mark.parametrize("shape", [(16, 100), (3, 5, 130), (64, 512),
+                                   (2048, 1024)])
+def test_act_mrq_vs_ref(kind, bits, shape):
+    x = jax.random.normal(jax.random.PRNGKey(bits), shape) * 3
+    out = np.asarray(act_mrq(x, 0.005, 0.03, bits=bits, kind=kind,
+                             interpret=True))
+    want = np.asarray(ref.act_mrq_ref(x, 0.005, 0.03, bits, kind))
+    # a 1-ulp difference in the activation can flip a round-half-even
+    # boundary -> allow one-step error on a vanishing fraction of elements
+    diff = np.abs(out - want)
+    assert diff.max() <= 0.03 + 1e-6
+    assert (diff > 1e-6).mean() < 1e-4
+
+
+def test_quantize_int8_codes_signed():
+    x = jnp.linspace(-1, 1, 101)
+    s = jnp.float32(2.0 / 255)
+    z = jnp.round(-(-1.0) / s)
+    q = ops.quantize_int8(x, s, z)
+    assert q.dtype == jnp.int8
+    deq = (q.astype(jnp.float32) - (z - 128)) * s
+    assert float(jnp.abs(deq - x).max()) <= float(s) / 2 + 1e-6
+
+
+def test_int8_linear_matches_fakequant():
+    from repro.core.contexts import QuantContext
+    from repro.core.quantizers import (ChannelQ, UniformQ,
+                                       channel_scale_from_absmax,
+                                       uniform_params_from_range,
+                                       weight_absmax)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 17, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48)) * 0.05
+    s, z = uniform_params_from_range(x.min(), x.max(), 8)
+    qp = {"lin": {
+        "x": UniformQ(s, z, 8),
+        "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8),
+    }}
+    y_fake = QuantContext(qparams=qp).linear("lin", x, w)
+    qp2 = ops.convert_for_kernels(qp, {"lin": np.asarray(w)})
+    assert "int8" in qp2["lin"]
+    y_kern = QuantContext(qparams=qp2, kernel=True).linear("lin", x, w)
+    np.testing.assert_allclose(y_fake, y_kern, rtol=1e-4, atol=1e-4)
+
+
+def test_mrq_input_ops_not_packed():
+    """MRQ-input linears must stay on the fake-quant path (two-region codes
+    do not fold into one MXU scale)."""
+    from repro.core.quantizers import MRQSignedQ, ChannelQ
+    qp = {"fc2": {"x": MRQSignedQ(jnp.float32(1e-3), jnp.float32(2e-3), 8),
+                  "w": ChannelQ(jnp.ones((1, 8)), 8)}}
+    out = ops.convert_for_kernels(qp, {"fc2": np.ones((4, 8), np.float32)})
+    assert "int8" not in out["fc2"]
+
+
+def test_int8_linear_mrq_matches_fakequant():
+    """MRQ-input linears deploy as two masked int8 matmuls (DESIGN §4)."""
+    from repro.core.contexts import QuantContext
+    from repro.core.quantizers import (ChannelQ, MRQSignedQ,
+                                       channel_scale_from_absmax,
+                                       weight_absmax)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 9, 48))
+    g = jax.nn.gelu(x)                                   # MRQ-shaped input
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 32)) * 0.05
+    qx = MRQSignedQ(s_neg=jnp.float32(-float(g.min()) / 128),
+                    s_pos=jnp.float32(float(g.max()) / 128), bits=8)
+    qw = ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8)
+    qp = {"fc2": {"x": qx, "w": qw}}
+    y_fake = QuantContext(qparams=qp).linear("fc2", g, w)
+    qp2 = ops.convert_for_kernels(qp, {"fc2": np.asarray(w)})
+    assert "int8_mrq" in qp2["fc2"]
+    y_kern = QuantContext(qparams=qp2, kernel=True).linear("fc2", g, w)
+    np.testing.assert_allclose(np.asarray(y_fake), np.asarray(y_kern),
+                               rtol=1e-3, atol=2e-3)

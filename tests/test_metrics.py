@@ -1,0 +1,64 @@
+"""Metric stand-ins: Fréchet distance identities, IS-proxy behaviour."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    ClassProxy, FeatureNet, fd_score, frechet_distance, gaussian_stats,
+    inception_score_proxy, sfd_score,
+)
+
+
+def test_frechet_zero_for_identical():
+    f = np.random.default_rng(0).normal(size=(500, 8))
+    mu, cov = gaussian_stats(f)
+    assert abs(frechet_distance(mu, cov, mu, cov)) < 1e-6
+
+
+def test_frechet_increases_with_mean_shift():
+    rng = np.random.default_rng(0)
+    f1 = rng.normal(size=(500, 8))
+    d = [frechet_distance(*gaussian_stats(f1), *gaussian_stats(f1 + s))
+         for s in (0.1, 0.5, 2.0)]
+    assert d[0] < d[1] < d[2]
+    np.testing.assert_allclose(d[2], 8 * 4.0, rtol=0.2)   # ||mu||^2 term
+
+
+def test_fd_score_orders_degradation():
+    rng = np.random.default_rng(1)
+    real = rng.normal(size=(400, 8, 8, 4)).astype(np.float32)
+    gen_good = real + 0.05 * rng.normal(size=real.shape).astype(np.float32)
+    gen_bad = real + 1.0 * rng.normal(size=real.shape).astype(np.float32)
+    assert fd_score(real, gen_good) < fd_score(real, gen_bad)
+
+
+def test_sfd_sensitive_to_spatial_scramble():
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=(300, 8, 8, 2)).astype(np.float32)
+    base[:, :4] += 2.0                                  # spatial structure
+    scram = base[:, rng.permutation(8)]                 # break rows
+    assert sfd_score(base, scram) > sfd_score(base, base + 1e-3)
+
+
+def test_is_proxy_separable_higher():
+    rng = np.random.default_rng(3)
+    K, N = 4, 400
+    labels = rng.integers(0, K, N)
+    centers = rng.normal(size=(K, 6, 6, 2)) * 3
+    real = centers[labels] + 0.3 * rng.normal(size=(N, 6, 6, 2))
+    proxy = ClassProxy.fit(real.astype(np.float32), labels, K)
+    well_sep = centers[rng.integers(0, K, 200)] + 0.3 * rng.normal(
+        size=(200, 6, 6, 2))
+    collapsed = centers[0][None] + 0.3 * rng.normal(size=(200, 6, 6, 2))
+    is_sep = inception_score_proxy(well_sep.astype(np.float32), proxy)
+    is_col = inception_score_proxy(collapsed.astype(np.float32), proxy)
+    assert is_sep > is_col
+    assert is_sep > 2.0                                  # diverse classes
+    assert is_col < 1.5                                  # mode collapse
+
+
+def test_feature_net_deterministic():
+    n1 = FeatureNet.make(64, seed=5)
+    n2 = FeatureNet.make(64, seed=5)
+    x = np.random.default_rng(0).normal(size=(10, 8, 8)).astype(np.float32)
+    np.testing.assert_array_equal(n1(x), n2(x))

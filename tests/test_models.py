@@ -1,0 +1,147 @@
+"""Model assembly invariants: scan==loop, prefill/decode==full forward,
+for every family; DiT structure; whisper enc-dec."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    ModelCfg, lm_init, lm_apply, lm_prefill, lm_decode_step, lm_generate,
+    encdec_init, encode, decode_train, encdec_prefill, encdec_decode_step,
+    DiTCfg, dit_init, dit_apply, patchify, unpatchify,
+)
+
+DENSE = ModelCfg(name="t", family="dense", n_layers=2, d_model=64, vocab=128,
+                 n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                 mlp_act="swiglu")
+# capacity_factor high enough that no token drops: the prefill==decode
+# invariant only holds without dropping (decode never drops its 1 token).
+MOE_MLA = ModelCfg(name="m", family="moe", n_layers=2, d_model=64, vocab=128,
+                   attn_type="mla", n_heads=4, kv_lora=32, q_lora=32,
+                   nope_dim=16, rope_dim=8, v_dim=16, moe=True, n_experts=8,
+                   top_k=2, n_shared=1, d_expert=32, d_ff=0,
+                   capacity_factor=8.0)
+SSM = ModelCfg(name="s", family="ssm", n_layers=2, d_model=64, vocab=128,
+               attn_type="none", block_type="ssm_only", ssm=True, d_inner=128,
+               ssm_state=16, ssm_head_dim=32, ssm_chunk=8, d_ff=0,
+               pos_embed="none")
+HYMBA = ModelCfg(name="h", family="hybrid", n_layers=3, d_model=64, vocab=128,
+                 n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                 block_type="hymba", ssm=True, d_inner=128, ssm_state=8,
+                 ssm_head_dim=32, ssm_chunk=8, window=8, global_layers=(0, 2),
+                 n_meta=4)
+
+
+@pytest.mark.parametrize("cfg", [DENSE, MOE_MLA, SSM, HYMBA],
+                         ids=["dense", "moe_mla", "ssm", "hymba"])
+def test_scan_equals_loop(cfg):
+    p = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    loop, _ = lm_apply(p, cfg, toks)
+    scan, _ = lm_apply(p, dataclasses.replace(cfg, scan_layers=True), toks)
+    np.testing.assert_allclose(loop, scan, atol=2e-5)
+    remat, _ = lm_apply(
+        p, dataclasses.replace(cfg, scan_layers=True, remat=True), toks)
+    np.testing.assert_allclose(loop, remat, atol=2e-5)
+
+
+@pytest.mark.parametrize("cfg", [DENSE, MOE_MLA, SSM, HYMBA],
+                         ids=["dense", "moe_mla", "ssm", "hymba"])
+def test_prefill_decode_match_full(cfg):
+    p = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)
+    full, _ = lm_apply(p, cfg, toks)
+    lg, cache = lm_prefill(p, cfg, toks[:, :16], max_len=17)
+    np.testing.assert_allclose(lg[:, 0], full[:, 15], atol=1e-3)
+    lg2, _ = lm_decode_step(p, cfg, toks[:, 16:17], cache, 16)
+    np.testing.assert_allclose(lg2[:, 0], full[:, 16], atol=1e-3)
+
+
+def test_generate_greedy_deterministic():
+    p = lm_init(jax.random.PRNGKey(0), DENSE)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+    a = lm_generate(p, DENSE, prompt, 6, max_len=14)
+    b = lm_generate(p, DENSE, prompt, 6, max_len=14)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 6)
+
+
+def test_qchunk_matches_plain():
+    cfg = dataclasses.replace(DENSE, q_chunk=4)
+    p = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    a, _ = lm_apply(p, cfg, toks)
+    b, _ = lm_apply(p, dataclasses.replace(cfg, attn_impl="qchunk"), toks)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_moe_aux_losses_finite_and_positive():
+    p = lm_init(jax.random.PRNGKey(0), MOE_MLA)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    _, aux = lm_apply(p, MOE_MLA, toks)
+    assert float(aux["aux_loss"]) > 0
+    assert np.isfinite(float(aux["aux_loss"]))
+
+
+# ---------------------------------------------------------------------------
+# whisper enc-dec
+# ---------------------------------------------------------------------------
+WHISPER = ModelCfg(name="w", family="audio", n_layers=2, d_model=64,
+                   vocab=128, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                   mlp_act="gelu", norm="layernorm", qkv_bias=True,
+                   encdec=True, n_enc_layers=2, enc_seq=30,
+                   pos_embed="learned", max_seq=64)
+
+
+def test_encdec_prefill_decode_consistency():
+    p = encdec_init(jax.random.PRNGKey(0), WHISPER)
+    frames = jax.random.normal(jax.random.PRNGKey(2), (2, 30, 64))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, 128)
+    mem = encode(p, WHISPER, frames)
+    full = decode_train(p, WHISPER, toks, mem)
+    lg, cache = encdec_prefill(p, WHISPER, toks[:, :16], frames, max_len=17)
+    np.testing.assert_allclose(lg[:, 0], full[:, 15], atol=1e-4)
+    lg2, _ = encdec_decode_step(p, WHISPER, toks[:, 16:17], cache, 16)
+    np.testing.assert_allclose(lg2[:, 0], full[:, 16], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DiT
+# ---------------------------------------------------------------------------
+def test_patchify_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4))
+    t = patchify(x, 2)
+    assert t.shape == (2, 16, 16)
+    np.testing.assert_allclose(unpatchify(t, 2, 8, 4), x, atol=1e-7)
+
+
+def test_dit_adaln_zero_identity_at_init():
+    """adaLN-Zero: zero-init gates -> output == final-layer(x) == 0."""
+    cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=64, n_layers=2,
+                 n_heads=4, n_classes=8)
+    p = dit_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 4))
+    eps = dit_apply(p, cfg, x, jnp.array([3, 7]), jnp.array([0, 1]))
+    np.testing.assert_allclose(eps, 0.0, atol=1e-6)
+
+
+def test_dit_scan_equals_loop(tiny_dit):
+    cfg, p = tiny_dit
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 4))
+    t, y = jnp.array([3, 7]), jnp.array([0, 1])
+    a = dit_apply(p, cfg, x, t, y)
+    b = dit_apply(p, dataclasses.replace(cfg, scan_layers=True), x, t, y)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    assert bool(jnp.any(a != 0))
+
+
+def test_dit_conditioning_matters(tiny_dit):
+    cfg, p = tiny_dit
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 4))
+    e1 = dit_apply(p, cfg, x, jnp.array([5]), jnp.array([0]))
+    e2 = dit_apply(p, cfg, x, jnp.array([90]), jnp.array([0]))
+    e3 = dit_apply(p, cfg, x, jnp.array([5]), jnp.array([3]))
+    assert float(jnp.abs(e1 - e2).max()) > 1e-7      # t-dependence
+    assert float(jnp.abs(e1 - e3).max()) > 1e-7      # class-dependence

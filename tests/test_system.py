@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the TQ-DiT system: quantized sampling
+pipeline, LM PTQ, HLO collective parsing, launcher smoke."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_quantized_sampler_end_to_end(tiny_dit):
+    """Calibrate TQ-DiT at W8A8 and sample: outputs stay close to FP."""
+    from repro.core import (run_ptq, make_quant_context,
+                            build_dit_calibration, dit_loss_fn)
+    from repro.core.baselines import tq_dit
+    from repro.diffusion import DiffusionCfg, make_schedule, ddpm_sample
+    from repro.models import dit_apply
+
+    cfg, p = tiny_dit
+    dif = DiffusionCfg(T=100, tgq_groups=4)
+    sched = make_schedule(dif)
+    calib = build_dit_calibration(
+        p, cfg, dif, sched, lambda n, k: jax.random.normal(k, (n, 8, 8, 4)),
+        jax.random.PRNGKey(3), n_per_group=4, batch=4)
+    qp, rep = run_ptq(dit_loss_fn(p, cfg), calib,
+                      tq_dit(8, 8, tgq_groups=4, n_alpha=6, rounds=1))
+    assert rep["n_quantized"] > 10
+
+    eps = lambda x, t, y, ctx: dit_apply(p, cfg, x, t, y, ctx=ctx)
+    key = jax.random.PRNGKey(7)
+    y = jnp.array([0, 1])
+    fp = ddpm_sample(eps, dif, sched, (2, 8, 8, 4), y, key, steps=10)
+    qt = ddpm_sample(eps, dif, sched, (2, 8, 8, 4), y, key, steps=10,
+                     ctx=make_quant_context(qp))
+    assert bool(jnp.all(jnp.isfinite(qt)))
+    rel = float(jnp.abs(fp - qt).mean() / (jnp.abs(fp).mean() + 1e-9))
+    assert rel < 0.15, f"W8A8 sampling drifted {rel:.3f} from FP"
+
+
+def test_lm_ptq_end_to_end():
+    """The technique transfers to an LM arch (MRQ-SiLU, no TGQ): W8A8
+    loss stays near FP."""
+    from repro.configs import get_smoke
+    from repro.core import (run_ptq, make_quant_context,
+                            build_lm_calibration, lm_loss_fn,
+                            RecordingContext)
+    from repro.core.baselines import tq_dit
+    from repro.models import lm_init
+    from repro.nn.ctx import FPContext
+
+    cfg = get_smoke("qwen3-1.7b")
+    p = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0, cfg.vocab)
+            for i in range(4)]
+    calib = build_lm_calibration(toks)
+    loss = lm_loss_fn(p, cfg)
+    qp, rep = run_ptq(loss, calib, tq_dit(8, 8, n_alpha=6, rounds=1))
+    fp_loss = float(loss(FPContext(), calib[0][0]))
+    q_loss = float(loss(make_quant_context(qp), calib[0][0]))
+    assert abs(q_loss - fp_loss) / fp_loss < 0.05
+    # post-silu hooks discovered (quantized AT the hook on swiglu archs —
+    # the gate feeds an elementwise product, not a matmul directly) and
+    # post-softmax provenance attributed to the consuming matmul.
+    rec = RecordingContext()
+    loss(rec, calib[0][0])
+    assert "post_silu" in set(rec.acts.values())
+    assert "post_softmax" in {i.a_kind for i in rec.registry.values()}
+    # hook quantizers present in qparams
+    assert any("act" in v for v in qp.values())
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_stats import collective_stats, total_collective_bytes
+    txt = """
+  %all-gather.3 = bf16[16,2048,128]{2,1,0} all-gather(%x), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%y)
+  %t = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(%a, %b)
+  %cp = u8[100]{0} collective-permute(%z)
+  %not_a_coll = f32[5]{0} add(%p, %q)
+"""
+    st = collective_stats(txt)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 2048 * 128 * 2
+    assert st["all-reduce"]["bytes"] == 4096
+    assert st["all-to-all"]["bytes"] == 2 * 8 * 4 * 4
+    assert st["collective-permute"]["bytes"] == 100
+    assert total_collective_bytes(txt) == (16 * 2048 * 128 * 2 + 4096
+                                           + 256 + 100)
+
+
+@pytest.mark.slow
+def test_train_launcher_smoke(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+         "--smoke", "--steps", "4", "--batch", "2", "--seq", "32",
+         "--ckpt_dir", str(tmp_path / "ck"), "--ckpt_every", "2"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done." in out.stdout
+    assert (tmp_path / "ck" / "latest").exists()
+
+
+@pytest.mark.slow
+def test_serve_launcher_smoke():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "mamba2-130m",
+         "--smoke", "--batch", "2", "--prompt_len", "16", "--gen", "4"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "generated" in out.stdout
