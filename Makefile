@@ -1,0 +1,12 @@
+.PHONY: verify verify-all kernel-micro
+
+# tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
+verify:
+	python -m pytest -x -q
+
+# include the multi-minute end-to-end runs
+verify-all:
+	python -m pytest -x -q -m ""
+
+kernel-micro:
+	PYTHONPATH=src python -m benchmarks.kernel_micro

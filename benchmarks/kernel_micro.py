@@ -2,23 +2,66 @@
 TPU benefit model for each Pallas kernel (wall-clock on CPU interpret mode
 is meaningless; the TPU win is structural and computed from traffic).
 
-  int8_matmul  : MXU int8 = 2x bf16 peak; weights at 1B vs 2B -> weight-
-                 bound decode speedup ~2x, epilogue fusion saves one HBM
-                 round trip of the (M,N) f32 output.
-  softmax_mrq  : probs tile stays in VMEM; saves read+write of the
-                 (rows, cols) f32 probs (8 bytes/element) per attention.
-  act_mrq      : saves read+write of the (tokens, d_ff) hidden tensor.
+  int8_matmul_fq     : fused-quantize prologue removes the standalone
+                       quantize pass (fp32 read + int8 write of the full
+                       activation through HBM) and the dequant round trip.
+  int8_matmul_mrq_fq : single W traversal for the MRQ twin-region linear
+                       (the old deployment paid TWO full int8 matmuls:
+                       2x weight bytes, two (M,N) f32 intermediates + add).
+  softmax_mrq        : probs tile stays in VMEM; saves read+write of the
+                       (rows, cols) f32 probs per attention.
+  act_mrq            : saves read+write of the (tokens, d_ff) hidden tensor.
+
+The traffic functions are importable (tests assert the structural-saving
+floors, e.g. >=1.5x for the MRQ linear).
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.kernels import act_mrq, int8_matmul, softmax_mrq, ref
+from repro.kernels import (act_mrq, int8_matmul, int8_matmul_fq,
+                           int8_matmul_mrq_fq, softmax_mrq, ref)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic models (bytes)
+# ---------------------------------------------------------------------------
+def traffic_int8_linear(M: int, K: int, N: int) -> dict:
+    """W8A8 linear with a per-tensor/TGQ-uniform input.
+
+    unfused — the pre-fusion serving chain:
+      quantize pass:  read fp32 x (4B/elt) + write int8 codes (1B/elt),
+      int8 matmul:    read codes (1B) + read int8 W (1B), write s32 (4B),
+      dequant pass:   read s32 (4B) + write fp32 y (4B).
+    fused — int8_matmul_fq: read fp32 x once, read W once, write fp32 y
+      once; codes and s32 accumulator never leave VMEM.
+    """
+    quant_pass = M * K * 4 + M * K * 1
+    matmul = M * K * 1 + K * N * 1 + M * N * 4
+    dequant = M * N * 4 + M * N * 4
+    return {"unfused": quant_pass + matmul + dequant,
+            "fused": M * K * 4 + K * N * 1 + M * N * 4}
+
+
+def traffic_mrq_linear(M: int, K: int, N: int) -> dict:
+    """MRQ-signed-input linear (post-GELU fc2).
+
+    unfused — the two-matmul twin-region decomposition:
+      region split:   read fp32 x (4B) + write qn AND qp codes (2x1B),
+      two matmuls:    read qn + qp (2x1B), read int8 W TWICE (2x1B),
+                      write two fp32 (M,N) intermediates (2x4B),
+      combine:        read both intermediates + write fp32 y (3x4B).
+    fused — int8_matmul_mrq_fq: read fp32 x once, read W ONCE (sign mask
+      + dual accumulators in VMEM), write fp32 y once.
+    """
+    split = M * K * 4 + 2 * M * K * 1
+    two_matmuls = 2 * M * K * 1 + 2 * K * N * 1 + 2 * M * N * 4
+    combine = 3 * M * N * 4
+    return {"unfused": split + two_matmuls + combine,
+            "fused": M * K * 4 + K * N * 1 + M * N * 4}
 
 
 def main() -> None:
@@ -26,17 +69,59 @@ def main() -> None:
              "hbm_bytes_fused", "traffic_saving")]
 
     key = jax.random.PRNGKey(0)
-    # --- int8 matmul: M,K,N sweep -------------------------------------------
+    # --- fused-quantize int8 matmul: M,K,N sweep ------------------------------
     for (M, K, N) in [(256, 2048, 2048), (512, 4096, 1024)]:
         k1, k2 = jax.random.split(key)
-        xq = jax.random.randint(k1, (M, K), -128, 128, jnp.int32).astype(jnp.int8)
-        wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+        x = jax.random.normal(k1, (M, K)) * 2
+        wq = jax.random.randint(k2, (K, N), -128, 128,
+                                jnp.int32).astype(jnp.int8)
+        sx = jnp.full((1, 1), 0.02, jnp.float32)
+        zx = jnp.full((1, 1), 110.0, jnp.float32)
+        sw = jax.random.uniform(k1, (N,)) * 1e-3
+        corr = (jnp.round(zx).astype(jnp.int32) - 128) * jnp.sum(
+            wq.astype(jnp.int32), axis=0)[None, :]
+        scale = sx * sw[None, :]
+        out = int8_matmul_fq(x, wq, sx, zx, scale, corr, interpret=True)
+        want = ref.int8_matmul_fq_ref(x, wq, sx, zx, scale, corr)
+        err = float(jnp.max(jnp.abs(out - want)))
+        t = traffic_int8_linear(M, K, N)
+        rows.append(("int8_matmul_fq", f"{M}x{K}x{N}", f"{err:.1e}",
+                     t["unfused"], t["fused"],
+                     round(t["unfused"] / t["fused"], 2)))
+
+    # --- single-pass MRQ matmul (fc2-shaped cases) ----------------------------
+    for (M, K, N) in [(256, 4608, 1152), (512, 4096, 1024)]:
+        k1, k2 = jax.random.split(key)
+        x = jax.nn.gelu(jax.random.normal(k1, (M, K)) * 1.5)
+        wq = jax.random.randint(k2, (K, N), -128, 128,
+                                jnp.int32).astype(jnp.int8)
+        s_neg = jnp.full((1, 1), 1.5e-3, jnp.float32)
+        s_pos = jnp.full((1, 1), 2.5e-2, jnp.float32)
+        sw = jax.random.uniform(k1, (N,)) * 1e-3
+        out = int8_matmul_mrq_fq(x, wq, s_neg, s_pos, s_neg * sw[None, :],
+                                 s_pos * sw[None, :], interpret=True)
+        want = ref.int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos,
+                                          s_neg * sw[None, :],
+                                          s_pos * sw[None, :])
+        err = float(jnp.max(jnp.abs(out - want)))
+        t = traffic_mrq_linear(M, K, N)
+        rows.append(("int8_matmul_mrq_fq", f"{M}x{K}x{N}", f"{err:.1e}",
+                     t["unfused"], t["fused"],
+                     round(t["unfused"] / t["fused"], 2)))
+
+    # --- pre-quantized-codes matmul (einsum-style operands keep it) -----------
+    for (M, K, N) in [(256, 2048, 2048)]:
+        k1, k2 = jax.random.split(key)
+        xq = jax.random.randint(k1, (M, K), -128, 128,
+                                jnp.int32).astype(jnp.int8)
+        wq = jax.random.randint(k2, (K, N), -128, 128,
+                                jnp.int32).astype(jnp.int8)
         scale = jax.random.uniform(k1, (N,)) * 1e-3
         corr = jnp.sum(wq.astype(jnp.int32), axis=0) * 3
         out = int8_matmul(xq, wq, scale, corr, interpret=True)
         want = ref.int8_matmul_ref(xq, wq, scale, corr)
         err = float(jnp.max(jnp.abs(out - want)))
-        # unfused: int8 mm writes s32 (4B) + dequant reads s32 writes f32
+        # epilogue fusion only: saves the s32 round trip of the output
         unfused = M * K + K * N + M * N * (4 + 4 + 4)
         fused = M * K + K * N + M * N * 4
         rows.append(("int8_matmul", f"{M}x{K}x{N}", f"{err:.1e}", unfused,

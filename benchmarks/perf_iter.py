@@ -68,12 +68,35 @@ def measure_variant(arch, shape_id, overrides=None, mesh_shape=None,
         # on the roofline terms (weight bytes dominate decode/serve).
         r["t_memory_s"] = r["t_memory_s"] / 2
         r["t_compute_s"] = r["t_compute_s"] / 2
-        dom = max(("compute", r["t_compute_s"]), ("memory", r["t_memory_s"]),
-                  ("collective", r["t_collective_s"]), key=lambda kv: kv[1])
-        r["bottleneck"] = dom[0]
-        r["roofline_frac"] = r["t_compute_s"] / dom[1] if dom[1] else 1.0
+        _rebottleneck(r)
         r["note"] = "int8-weight terms (W8A8 serve)"
     return r
+
+
+def _rebottleneck(r):
+    dom = max(("compute", r["t_compute_s"]), ("memory", r["t_memory_s"]),
+              ("collective", r["t_collective_s"]), key=lambda kv: kv[1])
+    r["bottleneck"] = dom[0]
+    r["roofline_frac"] = r["t_compute_s"] / dom[1] if dom[1] else 1.0
+
+
+def dit_fused_serving_factor(d: int = 1152, T: int = 256) -> float:
+    """Memory-term factor for the fused single-pass int8 serving kernels
+    vs the unfused int8 path, from the per-block DiT traffic model
+    (consistent with benchmarks/kernel_micro.py's per-op models).
+
+    Weights: qkv 3d^2 + proj d^2 + fc1 4d^2 + fc2 4d^2 = 12d^2 int8 bytes;
+    the UNFUSED two-matmul MRQ path reads fc2's 4d^2 TWICE -> 16d^2.
+    Activation input traffic per element: UNFUSED pays the standalone
+    quantize pass (4B fp32 read + 1B code write) plus the matmul's 1B code
+    read = 6B; FUSED reads the fp32 tile once in-kernel = 4B. Linear
+    inputs per block: qkv/proj/fc1 (T,d) + fc2 (T,4d) = 7*T*d elements.
+    Both paths write the fp32 outputs once (3d+d+4d+d per token = 36*T*d
+    bytes).
+    """
+    unfused = 16 * d * d + 6 * 7 * T * d + 36 * T * d
+    fused = 12 * d * d + 4 * 7 * T * d + 36 * T * d
+    return fused / unfused
 
 
 def log(exp, hypothesis, variant, r):
@@ -148,6 +171,18 @@ def exp_dit():
     log(arch, "the paper's W8A8 on top: int8 weights halve the weight-read "
         "term AND the MXU time (2x int8 peak) -> balanced compute/memory",
         "dp_replicated+w8a8", r)
+    # fused single-pass serving kernels on top of the int8 layout: the
+    # in-VMEM quantize prologue removes the standalone activation quantize
+    # pass and the single-pass MRQ kernel reads fc2 weights once instead
+    # of twice (see dit_fused_serving_factor for the per-block model).
+    f = dit_fused_serving_factor()
+    r = dict(r)
+    r["t_memory_s"] = r["t_memory_s"] * f
+    _rebottleneck(r)
+    log(arch, f"fused int8 serving kernels (int8_matmul_fq + single-pass "
+        f"MRQ): no standalone quantize pass, one fc2 weight read -> "
+        f"memory term x{f:.2f} on the weight/activation traffic model",
+        "dp_replicated+w8a8+fused", r)
 
 
 def main():

@@ -2,7 +2,9 @@
 respaced DDPM sampler with TQ-DiT W8A8 execution, including the int8
 Pallas kernel deployment path for eligible linears.
 
-Run:  PYTHONPATH=src python examples/serve_quantized.py
+Run:  PYTHONPATH=src:. python examples/serve_quantized.py
+(the repo root must be on the path too — this example reuses the
+benchmark harness in ``benchmarks/``).
 """
 import time
 
@@ -36,7 +38,11 @@ cal.begin_batch()
 loss(cal, calib[0][0])
 qp_kernel = kops.convert_for_kernels(qp, cal.weights)
 n_int8 = sum(1 for v in qp_kernel.values() if "int8" in v)
-print(f"  packed {n_int8} linears for the int8 MXU kernel")
+n_mrq = sum(1 for v in qp_kernel.values() if "int8_mrq" in v)
+n_tgq = sum(1 for v in qp_kernel.values()
+            if v.get("int8", v.get("int8_mrq", {})).get("groups", 1) > 1)
+print(f"  packed {n_int8} fused-quantize + {n_mrq} single-pass-MRQ linears "
+      f"for the int8 MXU kernels ({n_tgq} time-grouped)")
 
 # --- batched serving ----------------------------------------------------------
 def serve(requests, ctx, kernel=False, steps=25):

@@ -243,7 +243,10 @@ class QuantContext(OpContext):
       'x_prescale': array | None,      # PTQ4DiT-like channel balancing
       'out_bias': array | None,        # PTQD-like bias correction
     }
-    kernel=True routes plain W8A8 linears through the int8 Pallas kernel.
+    kernel=True routes W8A8 linears through the fused int8 Pallas kernels
+    ('int8' pack -> fused-quantize matmul, 'int8_mrq' pack -> single-pass
+    MRQ matmul); the TGQ timestep group (``self.tgroup``, possibly traced)
+    is resolved inside the kernel — no per-group repacking or retracing.
     """
     qparams: Dict[str, dict] = dataclasses.field(default_factory=dict)
     kernel: bool = False
@@ -270,12 +273,13 @@ class QuantContext(OpContext):
             return y + b if b is not None else y
         if self.kernel and qp.get("int8") is not None:
             from repro.kernels import ops as kops
-            y = kops.int8_linear(x, qp["int8"], bias=b)
+            y = kops.int8_linear(x, qp["int8"], bias=b, tgroup=self.tgroup)
             ob = qp.get("out_bias")
             return y + ob if ob is not None else y
         if self.kernel and qp.get("int8_mrq") is not None:
             from repro.kernels import ops as kops
-            y = kops.int8_linear_mrq(x, qp["int8_mrq"], bias=b)
+            y = kops.int8_linear_mrq(x, qp["int8_mrq"], bias=b,
+                                     tgroup=self.tgroup)
             ob = qp.get("out_bias")
             return y + ob if ob is not None else y
         x = self._q_in(qp, x)

@@ -143,7 +143,8 @@ def run_ptq(loss_fn: Callable, calib_batches: List[Tuple[Any, int]],
                     np.concatenate(xs, 0), cal.weights[name], cfg.balance_alpha)
             qparams[name] = search_linear(
                 info, xs, fish[name], cal.weights[name], scfg,
-                weight_only=weight_only, prescale=prescale)
+                weight_only=weight_only, prescale=prescale,
+                tgs=[r["tg"] for r in cal.store[name]])
         else:
             qparams[name] = search_einsum(
                 info, cal.store[name], fish[name], scfg,

@@ -1,13 +1,19 @@
 """Pallas TPU kernels for the paper's compute hot spots:
 
-  - int8_matmul  — W8A8 MXU matmul with fused dequant epilogue,
-  - softmax_mrq  — fused softmax -> MRQ two-region quantization,
-  - act_mrq      — fused GELU/SiLU -> MRQ signed quantization.
+  - int8_matmul_fq     — fused quantize->W8A8 MXU matmul->dequant (TGQ-
+                         aware: per-group params gathered in-kernel),
+  - int8_matmul_mrq_fq — single-pass MRQ matmul (one W traversal, dual
+                         region accumulators),
+  - int8_matmul        — W8A8 matmul over PRE-quantized codes (unfused
+                         baseline; still used for einsum-style operands),
+  - softmax_mrq        — fused softmax -> MRQ two-region quantization,
+  - act_mrq            — fused GELU/SiLU -> MRQ signed quantization.
 
 ``ops`` exposes jit'd wrappers (interpret=True on CPU); ``ref`` holds the
 pure-jnp oracles tests compare against.
 """
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels.softmax_mrq import softmax_mrq
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ops, ref

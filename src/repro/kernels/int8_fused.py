@@ -1,0 +1,224 @@
+"""Fused single-pass int8 serving kernels (the deployed W8A8 hot path).
+
+Two kernels replace the old quantize -> int8_matmul -> (add) chain:
+
+``int8_matmul_fq``
+    Takes FP activations and quantizes each (bm, bk) tile **in VMEM**
+    immediately before it is fed to the MXU — the standalone
+    ``quantize_int8`` pass (an extra fp32 read + int8 write of the full
+    activation through HBM) disappears. The epilogue applies the
+    zero-point correction, the combined per-output-channel scale and the
+    bias, so the FP result is written to HBM exactly once.
+
+``int8_matmul_mrq_fq``
+    Single-pass deployment of the MRQ two-region (PTQ4ViT-style twin
+    uniform) input quantizer. The old path ran TWO full int8 matmuls
+    (negative-region codes, positive-region codes) — 2x weight HBM
+    traffic plus two (M, N) fp32 intermediates and an add. Here each
+    weight tile is read once; the sign mask splits the activation tile
+    into the two region codes in VMEM and feeds TWO s32 accumulators,
+    each epilogued with its region scale. Weight traffic halves and the
+    intermediates never exist.
+
+TGQ (time-grouped quantization, the paper's §III-A) lives *inside* the
+kernels: every activation-side parameter is stacked along a leading
+(G,) group axis and the timestep group ``g`` — a traced scalar inside
+the ``ddpm_sample`` lax.scan — is scalar-prefetched; the per-group row
+is gathered by the BlockSpec index maps (``(g[0], n)``). The whole
+sampling loop therefore stays ONE compiled executable with the int8
+kernels inside; no per-group repacking or retracing.
+
+Tiling matches ``int8_matmul``: grid (M/bm, N/bn, K/bk), k innermost,
+MXU-aligned blocks, s32 accumulator(s) in VMEM scratch. Non-aligned
+shapes are zero-padded; padded K columns of x quantize to the zero
+point but meet zero-padded weight rows, so they contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.int8_matmul import (
+    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, _ceil, _pad_to,
+)
+
+
+def _fq_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
+               bias_ref, o_ref, acc_ref, *, nk: int):
+    del g_ref  # consumed by the index maps (per-group row gather)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fused-quantize prologue: fp tile -> signed int8 codes in VMEM
+    sx = sx_ref[0, 0]
+    zx = zx_ref[0, 0]
+    xq = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / sx) + zx - 128,
+                  -128, 127).astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        xq.astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...] - corr_ref[...]
+        y = acc.astype(jnp.float32) * scale_ref[...] + bias_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
+                   bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                   out_dtype=jnp.float32, interpret=False):
+    """y[M,N] = (q(x; sx[g], zx[g]) @ wq - corr[g]) * scale[g] (+ bias).
+
+    x: (M,K) float, wq: (K,N) int8. Activation-side params are stacked
+    along a leading TGQ group axis: sx/zx (G,1) f32, scale (G,N) f32
+    (s_x[g]*s_w per channel), corr (G,N) i32 (z_eff[g]*colsum(wq)).
+    g is the group index — python int or traced scalar (scalar-prefetched,
+    gathered by the BlockSpec index maps; no retrace across groups).
+    """
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    G = scale.shape[0]
+    assert sx.shape == (G, 1) and zx.shape == (G, 1), (sx.shape, zx.shape)
+    assert corr.shape == (G, N), (corr.shape, (G, N))
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    Mp, Np, Kp = _pad_to(M, bm_), _pad_to(N, bn_), _pad_to(K, bk_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if g is None:
+        g = 0
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    corr = jnp.pad(corr.astype(jnp.int32), ((0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    nk = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),
+            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fq_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        interpret=interpret,
+    )(jnp.asarray(g, jnp.int32).reshape(1), x, wq,
+      sx.astype(jnp.float32), zx.astype(jnp.float32), scale, corr, bias)
+    return out[:M, :N]
+
+
+def _mrq_kernel(g_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref, scale_p_ref,
+                bias_ref, o_ref, acc_n_ref, acc_p_ref, *, nk: int, half: int):
+    del g_ref
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_n_ref[...] = jnp.zeros_like(acc_n_ref)
+        acc_p_ref[...] = jnp.zeros_like(acc_p_ref)
+
+    # region split in VMEM: sign mask -> two disjoint int8 code tiles
+    xf = x_ref[...].astype(jnp.float32)
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_ref[0, 0]), -half, 0),
+                   0).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp_ref[0, 0]), 0, half - 1)
+                   ).astype(jnp.int8)
+    w = w_ref[...].astype(jnp.int32)          # ONE weight-tile read, two dots
+    dims = (((1,), (0,)), ((), ()))
+    acc_n_ref[...] += jax.lax.dot_general(qn.astype(jnp.int32), w, dims,
+                                          preferred_element_type=jnp.int32)
+    acc_p_ref[...] += jax.lax.dot_general(qp.astype(jnp.int32), w, dims,
+                                          preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = (acc_n_ref[...].astype(jnp.float32) * scale_n_ref[...]
+             + acc_p_ref[...].astype(jnp.float32) * scale_p_ref[...]
+             + bias_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_matmul_mrq_fq(x, wq, s_neg, s_pos, scale_neg, scale_pos, bias=None,
+                       g=None, *, bits=8, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                       bk=DEFAULT_BK, out_dtype=jnp.float32, interpret=False):
+    """Single-pass MRQ matmul: one traversal of wq, dual s32 accumulators.
+
+    y = s_neg[g]*s_w*(qn @ wq) + s_pos[g]*s_w*(qp @ wq) (+ bias) where
+    qn/qp are the negative/positive two-region codes of x (disjoint
+    support, selected by sign). s_neg/s_pos: (G,1) f32 region steps;
+    scale_neg/scale_pos: (G,N) f32 combined region*weight scales.
+    """
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    G = scale_neg.shape[0]
+    assert s_neg.shape == (G, 1) and s_pos.shape == (G, 1)
+    assert scale_pos.shape == (G, N)
+    half = 2 ** (bits - 1)
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    Mp, Np, Kp = _pad_to(M, bm_), _pad_to(N, bn_), _pad_to(K, bk_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if g is None:
+        g = 0
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    scale_neg = jnp.pad(scale_neg.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    scale_pos = jnp.pad(scale_pos.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    nk = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),
+            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32),
+                        pltpu.VMEM((bm_, bn_), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_mrq_kernel, nk=nk, half=half),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        interpret=interpret,
+    )(jnp.asarray(g, jnp.int32).reshape(1), x, wq,
+      s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
+      scale_neg, scale_pos, bias)
+    return out[:M, :N]

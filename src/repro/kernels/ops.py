@@ -2,6 +2,19 @@
 converter that turns calibrated ``qparams`` + FP weights into packed int8
 parameters consumed by ``QuantContext(kernel=True)``.
 
+Serving path (single fused kernel family, see ``int8_fused``):
+
+  - plain / TGQ-uniform inputs  -> ``int8_matmul_fq``   (fused-quantize
+    prologue; no standalone quantize pass through HBM),
+  - MRQ-signed (post-GELU) inputs -> ``int8_matmul_mrq_fq`` (single W
+    traversal, dual region accumulators; replaces the two-matmul
+    decomposition).
+
+Activation-side parameters are packed STACKED along a leading (G,) TGQ
+group axis — per-tensor quantizers pack as G=1 — and the timestep group
+is a traced scalar resolved inside the kernels, so ``ddpm_sample``'s
+lax.scan stays one compiled executable.
+
 On this CPU container the wrappers run with ``interpret=True`` (kernel
 body executed in Python for correctness); on a real TPU backend the same
 calls compile to Mosaic. ``INTERPRET`` flips automatically.
@@ -14,8 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizers import ChannelQ, MRQSignedQ, UniformQ
+from repro.core.quantizers import ChannelQ, MRQSignedQ, TGQ, UniformQ
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels.softmax_mrq import softmax_mrq
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ref
@@ -26,57 +40,100 @@ INTERPRET = jax.default_backend() != "tpu"
 # ---------------------------------------------------------------------------
 # int8 deployment path
 # ---------------------------------------------------------------------------
-def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
-    """Pack one linear op for the int8 kernel. Requires a per-tensor
-    UniformQ activation quantizer and a ChannelQ weight quantizer (ops
-    with MRQ-signed inputs use pack_int8_mrq_linear's two-matmul
-    decomposition instead; see DESIGN §4)."""
-    if not isinstance(qp.get("x"), UniformQ) or not isinstance(
-            qp.get("w"), ChannelQ):
-        return None
-    wq_q: ChannelQ = qp["w"]
-    xq_q: UniformQ = qp["x"]
-    if np.asarray(xq_q.scale).ndim != 0 or wq_q.bits != 8 or xq_q.bits != 8:
-        return None
-    sw = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)     # (N,)
-    w = jnp.asarray(w, jnp.float32)
-    if sw.shape[0] != w.shape[-1] or w.ndim != 2:
-        return None
-    codes = jnp.clip(jnp.round(w / sw[None, :]), -127, 127).astype(jnp.int8)
-    z_eff = jnp.round(xq_q.zero).astype(jnp.int32) - 128
-    corr = z_eff * jnp.sum(codes.astype(jnp.int32), axis=0)
-    return {
-        "wq": codes,
-        "scale": sw * jnp.asarray(xq_q.scale, jnp.float32),
-        "corr": corr,
-        "sx": jnp.asarray(xq_q.scale, jnp.float32),
-        "zx": jnp.asarray(xq_q.zero, jnp.float32),
-    }
+def _unwrap_tgq(q):
+    """Returns (inner_quantizer, is_tgq)."""
+    if isinstance(q, TGQ):
+        return q.inner, True
+    return q, False
 
 
-def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
-    """Pack a linear whose input is MRQ-signed (post-GELU fc2): the
-    two-region codes decompose into TWO int8 matmuls —
-    y = s_neg*(qn_masked @ Wq)*sw + s_pos*(qp_masked @ Wq)*sw —
-    the PTQ4ViT twin-uniform deployment trick on the MXU (DESIGN §4)."""
-    if not isinstance(qp.get("x"), MRQSignedQ) or not isinstance(
-            qp.get("w"), ChannelQ):
-        return None
-    wq_q: ChannelQ = qp["w"]
-    xq_q: MRQSignedQ = qp["x"]
-    if wq_q.bits != 8 or xq_q.bits != 8:
-        return None
+def _stack_param(p, is_tgq) -> jnp.ndarray:
+    """Activation param -> (G, 1) f32 column (G=1 for per-tensor)."""
+    a = jnp.asarray(p, jnp.float32)
+    if not is_tgq:
+        if a.ndim != 0:
+            raise ValueError(f"per-tensor param must be scalar, got {a.shape}")
+        return a.reshape(1, 1)
+    if a.ndim != 1:
+        raise ValueError(f"TGQ param must be stacked (G,), got {a.shape}")
+    return a.reshape(-1, 1)
+
+
+def _weight_codes(wq_q: ChannelQ, w) -> Optional[tuple]:
+    """(codes (K,N) int8, sw (N,) f32) or None if not a packable 2D linear."""
     sw = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)
     w = jnp.asarray(w, jnp.float32)
     if w.ndim != 2 or sw.shape[0] != w.shape[-1]:
         return None
     codes = jnp.clip(jnp.round(w / sw[None, :]), -127, 127).astype(jnp.int8)
+    return codes, sw
+
+
+def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack one linear op for the fused int8 kernel. Accepts a per-tensor
+    ``UniformQ`` or a time-grouped ``TGQ(UniformQ)`` activation quantizer
+    and a ``ChannelQ`` weight quantizer. TGQ packs as stacked (G, ·)
+    scale/zero/corr arrays gathered per-group inside the kernel."""
+    if qp.get("x_prescale") is not None:
+        return None       # channel-balanced ops stay on the fake-quant
+        # path: their quantizers are calibrated on x/ps and w*ps, and the
+        # kernel's quantize prologue has no prescale divide
+    xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
+    if not isinstance(xq_q, UniformQ) or not isinstance(qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    if wq_q.bits != 8 or xq_q.bits != 8:
+        return None
+    try:
+        sx = _stack_param(xq_q.scale, is_tgq)              # (G, 1)
+        zx = _stack_param(xq_q.zero, is_tgq)               # (G, 1)
+    except ValueError:
+        return None
+    cw = _weight_codes(wq_q, w)
+    if cw is None:
+        return None
+    codes, sw = cw
+    colsum = jnp.sum(codes.astype(jnp.int32), axis=0)      # (N,)
+    z_eff = jnp.round(zx).astype(jnp.int32) - 128          # (G, 1)
     return {
         "wq": codes,
-        "scale_neg": sw * jnp.asarray(xq_q.s_neg, jnp.float32),
-        "scale_pos": sw * jnp.asarray(xq_q.s_pos, jnp.float32),
-        "s_neg": jnp.asarray(xq_q.s_neg, jnp.float32),
-        "s_pos": jnp.asarray(xq_q.s_pos, jnp.float32),
+        "sx": sx,
+        "zx": zx,
+        "scale": sx * sw[None, :],                          # (G, N)
+        "corr": z_eff * colsum[None, :],                    # (G, N)
+        "groups": int(sx.shape[0]),
+    }
+
+
+def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack a linear whose input is MRQ-signed (post-GELU fc2) — per-tensor
+    ``MRQSignedQ`` or time-grouped ``TGQ(MRQSignedQ)`` — for the
+    single-pass MRQ kernel (one W traversal, dual region accumulators)."""
+    if qp.get("x_prescale") is not None:
+        return None       # see pack_int8_linear: no prescale in the kernel
+    xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
+    if not isinstance(xq_q, MRQSignedQ) or not isinstance(
+            qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    if wq_q.bits != 8 or xq_q.bits != 8:
+        return None
+    try:
+        s_neg = _stack_param(xq_q.s_neg, is_tgq)           # (G, 1)
+        s_pos = _stack_param(xq_q.s_pos, is_tgq)           # (G, 1)
+    except ValueError:
+        return None
+    cw = _weight_codes(wq_q, w)
+    if cw is None:
+        return None
+    codes, sw = cw
+    return {
+        "wq": codes,
+        "s_neg": s_neg,
+        "s_pos": s_pos,
+        "scale_neg": s_neg * sw[None, :],                   # (G, N)
+        "scale_pos": s_pos * sw[None, :],                   # (G, N)
+        "groups": int(s_neg.shape[0]),
     }
 
 
@@ -99,46 +156,45 @@ def convert_for_kernels(qparams: Dict[str, dict],
 
 
 def quantize_int8(x, scale, zero):
-    """fp -> signed int8 codes (elementwise; XLA fuses this into the
-    producer — a separate Pallas kernel buys nothing on TPU)."""
+    """fp -> signed int8 codes (elementwise). Retained for the UNFUSED
+    baseline and tests; the serving path quantizes inside
+    ``int8_matmul_fq`` and never materializes these codes in HBM."""
     return ref.quantize_int8_ref(x, scale, zero)
 
 
-def int8_linear(x, pack: dict, bias=None, out_dtype=None):
-    """Quantize x on the fly and run the int8 Pallas matmul."""
+def _group_index(pack: dict, tgroup):
+    """Resolve the (possibly traced) TGQ group into a safe kernel index."""
+    if tgroup is None or pack["groups"] == 1:
+        return 0
+    return jnp.clip(jnp.asarray(tgroup, jnp.int32), 0, pack["groups"] - 1)
+
+
+def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+    """Fused quantize->matmul->dequant serving linear (TGQ-aware)."""
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
-    xq = quantize_int8(xm, pack["sx"], pack["zx"])
-    y = int8_matmul(xq, pack["wq"], pack["scale"], pack["corr"],
-                    bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-                    out_dtype=out_dtype, interpret=INTERPRET)
+    y = int8_matmul_fq(
+        xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"], pack["corr"],
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        g=_group_index(pack, tgroup), out_dtype=out_dtype,
+        interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
-def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None):
-    """MRQ-input linear as two masked int8 matmuls (region codes kept
-    int8; region select is the sign of x)."""
+def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+    """MRQ-input serving linear: single-pass kernel (one W traversal,
+    in-kernel sign masking, dual region accumulators)."""
     out_dtype = out_dtype or x.dtype
     shape = x.shape
-    xm = x.reshape(-1, shape[-1]).astype(jnp.float32)
-    half = 128
-    neg_mask = xm < 0
-    qn = jnp.where(neg_mask,
-                   jnp.clip(jnp.round(xm / pack["s_neg"]), -half, 0),
-                   0).astype(jnp.int8)
-    qp = jnp.where(neg_mask, 0,
-                   jnp.clip(jnp.round(xm / pack["s_pos"]), 0, half - 1)
-                   ).astype(jnp.int8)
-    zero_corr = jnp.zeros((pack["wq"].shape[1],), jnp.int32)
-    yn = int8_matmul(qn, pack["wq"], pack["scale_neg"], zero_corr,
-                     out_dtype=jnp.float32, interpret=INTERPRET)
-    yp = int8_matmul(qp, pack["wq"], pack["scale_pos"], zero_corr,
-                     bias=None if bias is None
-                     else jnp.asarray(bias, jnp.float32),
-                     out_dtype=jnp.float32, interpret=INTERPRET)
-    return (yn + yp).astype(out_dtype).reshape(
-        shape[:-1] + (pack["wq"].shape[1],))
+    xm = x.reshape(-1, shape[-1])
+    y = int8_matmul_mrq_fq(
+        xm, pack["wq"], pack["s_neg"], pack["s_pos"],
+        pack["scale_neg"], pack["scale_pos"],
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        g=_group_index(pack, tgroup), out_dtype=out_dtype,
+        interpret=INTERPRET)
+    return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
 # ---------------------------------------------------------------------------

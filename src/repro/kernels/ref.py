@@ -36,6 +36,52 @@ def int8_matmul_ref(xq, wq, scale, corr, bias=None, out_dtype=jnp.float32):
     return y.astype(out_dtype)
 
 
+def int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, bias=None, g=0,
+                       out_dtype=jnp.float32):
+    """Fused-quantize matmul oracle: quantize x with group-g params, then
+    the int8 matmul + dequant epilogue.
+
+    x: (M,K) float; wq: (K,N) int8; sx/zx: (G,1) f32; scale: (G,N) f32;
+    corr: (G,N) i32; g: group index (int or traced scalar).
+    """
+    sx_g = jnp.take(sx, g, axis=0)[0]
+    zx_g = jnp.take(zx, g, axis=0)[0]
+    xq = quantize_int8_ref(x.astype(jnp.float32), sx_g, zx_g)
+    return int8_matmul_ref(xq, wq, jnp.take(scale, g, axis=0),
+                           jnp.take(corr, g, axis=0), bias=bias,
+                           out_dtype=out_dtype)
+
+
+def int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos, scale_neg, scale_pos,
+                           bias=None, g=0, bits: int = 8,
+                           out_dtype=jnp.float32):
+    """Single-pass MRQ matmul oracle: two-region codes (disjoint support,
+    selected by sign), one logical W traversal, per-region dequant.
+
+    x: (M,K) float; wq: (K,N) int8; s_neg/s_pos: (G,1) f32 region steps;
+    scale_neg/scale_pos: (G,N) f32 combined region*weight scales.
+    """
+    half = 2 ** (bits - 1)
+    xf = x.astype(jnp.float32)
+    sn = jnp.take(s_neg, g, axis=0)[0]
+    sp = jnp.take(s_pos, g, axis=0)[0]
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn), -half, 0), 0
+                   ).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp), 0, half - 1)
+                   ).astype(jnp.int8)
+    dims = (((1,), (0,)), ((), ()))
+    acc_n = jax.lax.dot_general(qn.astype(jnp.int32), wq.astype(jnp.int32),
+                                dims, preferred_element_type=jnp.int32)
+    acc_p = jax.lax.dot_general(qp.astype(jnp.int32), wq.astype(jnp.int32),
+                                dims, preferred_element_type=jnp.int32)
+    y = (acc_n.astype(jnp.float32) * jnp.take(scale_neg, g, axis=0)[None]
+         + acc_p.astype(jnp.float32) * jnp.take(scale_pos, g, axis=0)[None])
+    if bias is not None:
+        y = y + bias[None, :].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
 def softmax_mrq_ref(scores, s1, bits: int, out_dtype=jnp.float32):
     """Row softmax (last axis, f32 accumulation) then MRQ two-region
     quant-dequant (§III-C)."""

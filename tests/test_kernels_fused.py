@@ -1,0 +1,309 @@
+"""Fused int8 serving kernels vs their oracles: non-MXU-aligned shape
+sweeps, TGQ group sweeps (bit-identical to per-group repacking),
+fused-vs-unfused equivalence, kernel-path routing for TGQ-wrapped ops,
+and the compile-once contract of ``ddpm_sample`` with
+``QuantContext(kernel=True)``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.contexts import QuantContext
+from repro.core.quantizers import (
+    ChannelQ, MRQSignedQ, TGQ, UniformQ, channel_scale_from_absmax,
+    uniform_params_from_range, weight_absmax,
+)
+from repro.kernels import int8_matmul, int8_matmul_fq, int8_matmul_mrq_fq
+from repro.kernels import ops, ref
+
+
+MM_SHAPES = [(8, 16, 8), (64, 96, 80), (128, 256, 128), (7, 13, 5),
+             (130, 257, 129), (256, 512, 384), (1, 5, 3)]
+
+
+def _rand_case(M, K, N, G, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (M, K)) * 2.0
+    wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+    sx = (jax.random.uniform(k3, (G, 1)) * 0.05 + 0.01).astype(jnp.float32)
+    zx = jnp.round(jax.random.uniform(k1, (G, 1)) * 200.0)
+    scale = (jax.random.uniform(k2, (G, N)) * 1e-3 + 1e-5).astype(jnp.float32)
+    colsum = jnp.sum(wq.astype(jnp.int32), axis=0)
+    corr = (jnp.round(zx).astype(jnp.int32) - 128) * colsum[None, :]
+    bias = jax.random.normal(k3, (N,))
+    return x, wq, sx, zx, scale, corr, bias
+
+
+# ---------------------------------------------------------------------------
+# fused-quantize matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", MM_SHAPES)
+def test_int8_matmul_fq_vs_ref(shape):
+    M, K, N = shape
+    x, wq, sx, zx, scale, corr, bias = _rand_case(M, K, N, G=3,
+                                                  seed=M * K + N)
+    for g in (0, 2):
+        out = int8_matmul_fq(x, wq, sx, zx, scale, corr, bias, g=g,
+                             interpret=True)
+        want = ref.int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, bias, g=g)
+        assert float(jnp.max(jnp.abs(out - want))) <= 1e-4
+
+
+@pytest.mark.parametrize("block", [(32, 64, 64), (128, 128, 256)])
+def test_int8_matmul_fq_block_shapes(block):
+    bm, bn, bk = block
+    x, wq, sx, zx, scale, corr, _ = _rand_case(100, 300, 90, G=2, seed=1)
+    out = int8_matmul_fq(x, wq, sx, zx, scale, corr, g=1, bm=bm, bn=bn,
+                         bk=bk, interpret=True)
+    want = ref.int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, g=1)
+    assert float(jnp.max(jnp.abs(out - want))) <= 1e-4
+
+
+def test_int8_matmul_fq_matches_unfused_pipeline():
+    """Fused == standalone quantize pass + pre-quantized-codes matmul."""
+    M, K, N = 64, 160, 48
+    x, wq, sx, zx, scale, corr, bias = _rand_case(M, K, N, G=2, seed=7)
+    g = 1
+    xq = ops.quantize_int8(x, sx[g, 0], zx[g, 0])
+    unfused = int8_matmul(xq, wq, scale[g], corr[g], bias, interpret=True)
+    fused = int8_matmul_fq(x, wq, sx, zx, scale, corr, bias, g=g,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# ---------------------------------------------------------------------------
+# single-pass MRQ matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", MM_SHAPES)
+def test_int8_matmul_mrq_fq_vs_ref(shape):
+    M, K, N = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(sum(shape)))
+    x = jax.nn.gelu(jax.random.normal(k1, (M, K)) * 1.5)
+    wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+    G = 3
+    s_neg = (jax.random.uniform(k1, (G, 1)) * 2e-3 + 1e-4).astype(jnp.float32)
+    s_pos = (jax.random.uniform(k2, (G, 1)) * 2e-2 + 1e-3).astype(jnp.float32)
+    sw = jax.random.uniform(k1, (N,)) * 1e-2 + 1e-4
+    scale_neg = s_neg * sw[None, :]
+    scale_pos = s_pos * sw[None, :]
+    bias = jax.random.normal(k2, (N,))
+    for g in (0, G - 1):
+        out = int8_matmul_mrq_fq(x, wq, s_neg, s_pos, scale_neg, scale_pos,
+                                 bias, g=g, interpret=True)
+        want = ref.int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos, scale_neg,
+                                          scale_pos, bias, g=g)
+        assert float(jnp.max(jnp.abs(out - want))) <= 1e-4
+
+
+def test_mrq_single_pass_matches_two_matmul_decomposition():
+    """The collapsed kernel reproduces the old twin-region TWO-matmul path."""
+    M, K, N = 48, 96, 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.nn.gelu(jax.random.normal(k1, (M, K)) * 2.0)
+    wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
+    s_neg, s_pos = jnp.float32(1.5e-3), jnp.float32(2.5e-2)
+    sw = jax.random.uniform(k1, (N,)) * 1e-2 + 1e-4
+    half = 128
+    neg = x < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(x / s_neg), -half, 0),
+                   0).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(x / s_pos), 0, half - 1)
+                   ).astype(jnp.int8)
+    zc = jnp.zeros((N,), jnp.int32)
+    yn = int8_matmul(qn, wq, s_neg * sw, zc, interpret=True)
+    yp = int8_matmul(qp, wq, s_pos * sw, zc, interpret=True)
+    two_pass = yn + yp
+    one_pass = int8_matmul_mrq_fq(
+        x, wq, s_neg.reshape(1, 1), s_pos.reshape(1, 1),
+        (s_neg * sw).reshape(1, -1), (s_pos * sw).reshape(1, -1),
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(one_pass), np.asarray(two_pass),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# TGQ packing: group sweep bit-identical to per-group repacking
+# ---------------------------------------------------------------------------
+def _tgq_uniform_qp(key, K, N, G):
+    kx, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    scales = jnp.linspace(0.01, 0.05, G)
+    zeros = jnp.round(jnp.linspace(90.0, 150.0, G))
+    qp = {"x": TGQ(UniformQ(scale=scales, zero=zeros, bits=8)),
+          "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8)}
+    return qp, w
+
+
+def test_tgq_uniform_pack_group_sweep():
+    """Every group g of the stacked pack is bit-identical to repacking the
+    scalar group-g quantizer on its own (the old per-group Python path)."""
+    K, N, G = 96, 80, 5
+    qp, w = _tgq_uniform_qp(jax.random.PRNGKey(0), K, N, G)
+    pack = ops.pack_int8_linear(qp, np.asarray(w))
+    assert pack is not None and pack["groups"] == G
+    x = jax.random.normal(jax.random.PRNGKey(1), (33, K)) * 2
+    tq: TGQ = qp["x"]
+    for g in range(G):
+        qp_g = {"x": tq.select(g), "w": qp["w"]}
+        pack_g = ops.pack_int8_linear(qp_g, np.asarray(w))
+        assert pack_g is not None and pack_g["groups"] == 1
+        y_tgq = ops.int8_linear(x, pack, tgroup=g)
+        y_repack = ops.int8_linear(x, pack_g)
+        np.testing.assert_array_equal(np.asarray(y_tgq), np.asarray(y_repack))
+
+
+def test_tgq_mrq_pack_group_sweep():
+    K, N, G = 64, 48, 4
+    kx, kw = jax.random.split(jax.random.PRNGKey(2))
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    qp = {"x": TGQ(MRQSignedQ(s_neg=jnp.linspace(1e-3, 3e-3, G),
+                              s_pos=jnp.linspace(1e-2, 4e-2, G), bits=8)),
+          "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8)}
+    pack = ops.pack_int8_mrq_linear(qp, np.asarray(w))
+    assert pack is not None and pack["groups"] == G
+    x = jax.nn.gelu(jax.random.normal(kx, (17, K)) * 1.5)
+    tq: TGQ = qp["x"]
+    for g in range(G):
+        pack_g = ops.pack_int8_mrq_linear({"x": tq.select(g), "w": qp["w"]},
+                                          np.asarray(w))
+        y_tgq = ops.int8_linear_mrq(x, pack, tgroup=g)
+        y_repack = ops.int8_linear_mrq(x, pack_g)
+        np.testing.assert_array_equal(np.asarray(y_tgq), np.asarray(y_repack))
+
+
+# ---------------------------------------------------------------------------
+# routing: TGQ-wrapped W8A8 linears take the kernel path (no fallback)
+# ---------------------------------------------------------------------------
+def test_tgq_uniform_routes_through_kernel():
+    K, N, G = 64, 32, 4
+    qp, w = _tgq_uniform_qp(jax.random.PRNGKey(4), K, N, G)
+    qp2 = ops.convert_for_kernels({"lin": qp}, {"lin": np.asarray(w)})
+    assert "int8" in qp2["lin"], "TGQ(UniformQ) must pack, not fall back"
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 9, K))
+    for g in range(G):
+        y_kern = QuantContext(qparams=qp2, kernel=True,
+                              tgroup=g).linear("lin", x, w)
+        y_fake = QuantContext(qparams=qp2, tgroup=g).linear("lin", x, w)
+        np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_fake),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_tgq_mrq_routes_through_kernel():
+    K, N, G = 48, 32, 3
+    kw = jax.random.PRNGKey(6)
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    x = jax.nn.gelu(jax.random.normal(jax.random.PRNGKey(7), (2, 7, K)))
+    qp = {"fc2": {
+        "x": TGQ(MRQSignedQ(s_neg=jnp.full((G,), float(-x.min()) / 128),
+                            s_pos=jnp.full((G,), float(x.max()) / 128),
+                            bits=8)),
+        "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8)}}
+    qp2 = ops.convert_for_kernels(qp, {"fc2": np.asarray(w)})
+    assert "int8_mrq" in qp2["fc2"]
+    y_kern = QuantContext(qparams=qp2, kernel=True, tgroup=1).linear(
+        "fc2", x, w)
+    y_fake = QuantContext(qparams=qp2, tgroup=1).linear("fc2", x, w)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_fake),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_channel_balanced_ops_not_packed():
+    """Ops with an x_prescale (PTQ4DiT-style channel balancing) must stay
+    on the fake-quant path: their quantizers are calibrated on x/ps and
+    w*ps, and the kernel's quantize prologue has no prescale divide."""
+    K, N = 24, 16
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, K))
+    ps = jnp.linspace(0.5, 2.0, K)
+    ws = jnp.asarray(w) * ps[:, None]
+    s, z = uniform_params_from_range((x / ps).min(), (x / ps).max(), 8)
+    qp = {"lin": {
+        "x": UniformQ(s, z, 8),
+        "w": ChannelQ(channel_scale_from_absmax(weight_absmax(ws), 8), 8),
+        "x_prescale": ps}}
+    out = ops.convert_for_kernels(qp, {"lin": w})
+    assert "int8" not in out["lin"] and "int8_mrq" not in out["lin"]
+    y_fake = QuantContext(qparams=out).linear("lin", x, jnp.asarray(w))
+    y_kern = QuantContext(qparams=out, kernel=True).linear(
+        "lin", x, jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(y_fake), np.asarray(y_kern))
+
+
+def test_per_tensor_pack_still_works():
+    """Plain UniformQ packs as G=1 and ignores any tgroup passed at serve."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (11, 24))
+    w = jax.random.normal(jax.random.PRNGKey(1), (24, 16)) * 0.05
+    s, z = uniform_params_from_range(x.min(), x.max(), 8)
+    qp = {"x": UniformQ(s, z, 8),
+          "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 8), 8)}
+    pack = ops.pack_int8_linear(qp, np.asarray(w))
+    assert pack["groups"] == 1
+    y0 = ops.int8_linear(x, pack)
+    y9 = ops.int8_linear(x, pack, tgroup=9)     # clamped to the only group
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y9))
+
+
+# ---------------------------------------------------------------------------
+# modeled HBM-traffic floors (the structural saving the fusion buys)
+# ---------------------------------------------------------------------------
+def test_traffic_model_floors():
+    from benchmarks.kernel_micro import (traffic_int8_linear,
+                                         traffic_mrq_linear)
+    # DiT-XL/2 fc2-shaped case: one W pass instead of two -> >=1.5x
+    t = traffic_mrq_linear(256, 4608, 1152)
+    assert t["unfused"] / t["fused"] >= 1.5
+    # plain linear: the fused path must not charge the standalone
+    # quantize-pass bytes (fp32 read + int8 write of x) while the unfused
+    # path must include them
+    M, K, N = 256, 2048, 2048
+    t = traffic_int8_linear(M, K, N)
+    assert t["unfused"] - t["fused"] >= M * K * 1 + M * K * 4
+    assert t["fused"] == M * K * 4 + K * N + M * N * 4
+
+
+# ---------------------------------------------------------------------------
+# compile-once contract: one executable across all timestep groups
+# ---------------------------------------------------------------------------
+def test_ddpm_sample_kernel_path_compiles_once(monkeypatch):
+    """``ddpm_sample`` with ``QuantContext(kernel=True)`` and TGQ-packed
+    int8 linears must trace/compile ONCE — the traced group index is
+    resolved inside the kernel, never by Python-level repacking."""
+    from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule
+    from repro.kernels import ops as kops
+
+    B, H, W_, C = 2, 4, 4, 1
+    K = H * W_ * C
+    G = 4
+    dif = DiffusionCfg(T=40, tgq_groups=G)
+    sched = make_schedule(dif)
+    qp, w = _tgq_uniform_qp(jax.random.PRNGKey(8), K, K, G)
+    qp2 = ops.convert_for_kernels({"lin": qp}, {"lin": np.asarray(w)})
+    assert "int8" in qp2["lin"]
+    qctx = QuantContext(qparams=qp2, kernel=True)
+
+    kernel_calls = []
+    orig_fq = kops.int8_matmul_fq
+    monkeypatch.setattr(
+        kops, "int8_matmul_fq",
+        lambda *a, **k: (kernel_calls.append(1), orig_fq(*a, **k))[1])
+
+    traces = []
+
+    def eps_fn(x, t, y, ctx):
+        traces.append(1)                      # fires once per (re)trace
+        out = ctx.linear("lin", x.reshape(x.shape[0], -1), w)
+        return out.reshape(x.shape)
+
+    sample = jax.jit(lambda key: ddpm_sample(
+        eps_fn, dif, sched, (B, H, W_, C), jnp.zeros((B,), jnp.int32), key,
+        steps=8, ctx=qctx))
+    out1 = sample(jax.random.PRNGKey(0))
+    n_traces_first = len(traces)
+    n_kernel_first = len(kernel_calls)
+    assert n_traces_first == 1, "sampler retraced across timestep groups"
+    assert n_kernel_first >= 1, "int8 kernel path was not taken"
+    out2 = sample(jax.random.PRNGKey(1))
+    assert len(traces) == n_traces_first, "second call recompiled"
+    assert len(kernel_calls) == n_kernel_first
+    assert bool(jnp.all(jnp.isfinite(out1))) and bool(
+        jnp.all(jnp.isfinite(out2)))
