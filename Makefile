@@ -1,4 +1,4 @@
-.PHONY: verify verify-all kernel-micro
+.PHONY: verify verify-all kernel-micro serve-throughput docs-check
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -10,3 +10,10 @@ verify-all:
 
 kernel-micro:
 	PYTHONPATH=src python -m benchmarks.kernel_micro
+
+serve-throughput:
+	PYTHONPATH=src python -m benchmarks.serve_throughput
+
+# docs link/anchor check + execution of the `# ci-smoke` quickstart lines
+docs-check:
+	python tools/check_docs.py --run README.md docs/*.md

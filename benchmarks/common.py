@@ -118,6 +118,10 @@ def calibrate(scheme: str, bits: int, params, cfg, calib=None,
     over.update(overrides)
     qcfg = SCHEMES[scheme](bits, bits, **over)
     qp, rep = run_ptq(dit_loss_fn(params, cfg), calib, qcfg)
+    # rep["weights"] is a full FP weight copy for in-process int8 packing;
+    # keep it out of the on-disk cache (cached reports never had it, and
+    # serializing it would balloon every per-scheme pickle)
+    rep = {k: v for k, v in rep.items() if k != "weights"}
     with open(path, "wb") as f:
         pickle.dump({"qparams": qp, "report": rep}, f)
     return qp, rep

@@ -185,6 +185,12 @@ def run_ptq(loss_fn: Callable, calib_batches: List[Tuple[Any, int]],
         "calib_bytes": int(calib_bytes),
         "n_quantized": len(qparams),
         "n_batches": len(calib_batches),
+        # FP weights captured in Phase 2b, keyed by op name — exactly the
+        # second argument kernels.ops.convert_for_kernels wants, so int8
+        # deployment needs no second capture pass. In-process use only:
+        # anything that serializes the report should drop this key (see
+        # benchmarks/common.py) — it is a full weight copy.
+        "weights": dict(cal.weights),
     })
     return qparams, report
 

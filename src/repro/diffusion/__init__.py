@@ -1,6 +1,6 @@
 """DDPM diffusion process (schedules, loss, respaced ancestral sampling)."""
 from repro.diffusion.ddpm import (
     DiffusionCfg, make_schedule, q_sample, ddpm_loss, respaced_timesteps,
-    respaced_schedule, tgroup_of, ddpm_sample, ddpm_sample_python,
-    collect_xt_dataset,
+    respaced_schedule, tgroup_of, ddpm_sample, ddpm_sample_paired,
+    ddpm_sample_python, collect_xt_dataset, request_keys,
 )

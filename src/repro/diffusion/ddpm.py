@@ -109,7 +109,7 @@ def tgroup_of(t, T: int, G: int):
 # ancestral sampler
 # ---------------------------------------------------------------------------
 def ddpm_sample(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y, key,
-                steps: Optional[int] = None, ctx=_FP, guidance: float = 0.0,
+                steps: Optional[int] = None, ctx=_FP,
                 clip_x0: Optional[float] = None):
     """Ancestral DDPM sampling with respacing.
 
@@ -153,6 +153,95 @@ def ddpm_sample(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y, key,
         return (x, key), None
 
     (x, _), _ = jax.lax.scan(step, (x, key), jnp.arange(n))
+    return x
+
+
+def request_keys(seeds) -> jnp.ndarray:
+    """(B,) per-request integer seeds -> (B, 2) uint32 PRNG keys.
+
+    Serving draws ALL of a request's noise from its own key (see
+    ``ddpm_sample_paired``), so a request's sample depends only on its
+    seed — never on which microbatch slot, padding, or device shard it
+    happens to land in.
+    """
+    return jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.uint32))
+
+
+def ddpm_sample_paired(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y,
+                       seeds, guidance, *, null_label: int,
+                       steps: Optional[int] = None, ctx=_FP,
+                       clip_x0: Optional[float] = None):
+    """Serving-path ancestral sampler: CFG-paired forwards, per-request keys.
+
+    Two differences from :func:`ddpm_sample` (the research sampler):
+
+    - **Per-request noise.** Every request carries its own PRNG seed; all
+      noise is drawn per SAMPLE as ``normal(fold_in(PRNGKey(seed), i))``
+      (``i`` = scan position, ``i = n`` for the initial latent). A
+      request's output is therefore bit-identical no matter how the
+      scheduler packs it into microbatches, how much padding rides along,
+      or how the batch is sharded across devices — the property the
+      sharded-vs-single-device serving tests pin down.
+    - **Classifier-free guidance in one batched forward.** Each step runs
+      the model ONCE on a 2B batch — the conditional half ``y`` stacked on
+      the unconditional half ``null_label`` — and combines
+      ``eps = eps_u + s * (eps_c - eps_u)`` with a PER-REQUEST scale
+      ``s = guidance[b]`` (s=1: plain conditional, s=0: unconditional).
+
+    The TGQ timestep group is threaded through ``ctx.with_tgroup`` exactly
+    as in ``ddpm_sample``, so quantized serving (fused int8 kernels with
+    stacked per-group params) compiles once across all groups.
+
+    y: (B,) int labels; seeds: (B,) int per-request seeds;
+    guidance: (B,) float CFG scales. Returns x_0 samples of ``shape``.
+    """
+    steps = steps or cfg.T
+    use_ts = respaced_timesteps(cfg.T, steps)             # descending
+    rsched = respaced_schedule(sched, use_ts)
+    n = len(use_ts)
+    use_ts_j = jnp.asarray(use_ts.copy(), jnp.int32)
+    B = shape[0]
+
+    keys = request_keys(seeds)
+    sshape = tuple(shape[1:])                             # per-sample shape
+
+    def draw(salt):
+        """Per-sample noise: each request's key, folded with the step."""
+        return jax.vmap(lambda k: jax.random.normal(
+            jax.random.fold_in(k, salt), sshape, jnp.float32))(keys)
+
+    gsc = jnp.asarray(guidance, jnp.float32).reshape(
+        (B,) + (1,) * (len(shape) - 1))
+    yy = jnp.concatenate([jnp.asarray(y, jnp.int32),
+                          jnp.full((B,), null_label, jnp.int32)])
+
+    x = draw(n)                                           # initial latent
+
+    def step(x, i):
+        t_orig = use_ts_j[i]                              # original-chain t
+        idx = n - 1 - i                                   # respaced index (asc)
+        tb = jnp.full((2 * B,), t_orig, jnp.int32)
+        g = tgroup_of(t_orig, cfg.T, cfg.tgq_groups)
+        eps2 = eps_fn(jnp.concatenate([x, x]), tb, yy, ctx.with_tgroup(g))
+        eps_c, eps_u = jnp.split(eps2, 2)
+        eps = eps_u + gsc * (eps_c - eps_u)
+
+        abar = rsched["abar"][idx]
+        abar_prev = rsched["abar_prev"][idx]
+        beta = rsched["betas"][idx]
+        alpha = rsched["alphas"][idx]
+
+        x0 = (x - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        if clip_x0 is not None:
+            x0 = jnp.clip(x0, -clip_x0, clip_x0)
+        mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        noise = draw(i)
+        nonzero = (idx > 0).astype(jnp.float32)
+        x = mean + nonzero * jnp.sqrt(rsched["post_var"][idx]) * noise
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, jnp.arange(n))
     return x
 
 

@@ -1,4 +1,4 @@
 from repro.distributed.sharding import (
     param_specs, param_shardings, batch_spec, batch_axes, replicated,
-    logical_axes, bind_logical,
+    logical_axes, bind_logical, dp_size, request_spec,
 )

@@ -184,3 +184,21 @@ def batch_spec(mesh: Mesh, ndim: int, batch_dim: int = 0,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# serving (data-parallel microbatch execution)
+# ---------------------------------------------------------------------------
+def dp_size(mesh: Mesh) -> int:
+    """Number of data-parallel shards: the product of the DP super-axis
+    sizes. Serving microbatches must be a multiple of this so each device
+    receives an equal, fixed-shape slice."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in batch_axes(mesh)]))
+
+
+def request_spec(mesh: Mesh) -> P:
+    """Spec for per-request 1-D arrays (labels / seeds / guidance scales):
+    sharded on the DP super-axis, matching ``batch_spec`` for the latents
+    they generate."""
+    return P(batch_axes(mesh))

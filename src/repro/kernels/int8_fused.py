@@ -49,6 +49,18 @@ from repro.kernels.int8_matmul import (
 
 def _fq_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
                bias_ref, o_ref, acc_ref, *, nk: int):
+    """Grid body for ``int8_matmul_fq`` at grid point (m, n, k).
+
+    Refs arrive as VMEM tiles already gathered by the BlockSpec index
+    maps: x (bm, bk) fp32, w (bk, bn) int8, and the TGQ-resolved rows of
+    the activation-side params — sx/zx (1, 1) and scale/corr (1, bn) are
+    the group-``g`` slices of the stacked (G, ·) arrays (see the
+    ``(g[0], n)`` index maps below), so the body itself is group-agnostic.
+    ``acc_ref`` is a persistent (bm, bn) s32 scratch: zeroed at k == 0,
+    accumulated over the K-traversal (k innermost), epilogued at
+    k == nk - 1. ``g_ref`` itself is unused here — prefetched scalars
+    exist to feed index maps.
+    """
     del g_ref  # consumed by the index maps (per-group row gather)
     k = pl.program_id(2)
 
@@ -106,17 +118,24 @@ def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
 
     nk = Kp // bk_
     grid = (Mp // bm_, Np // bn_, nk)
+    # TGQ group gather: ``g`` rides as the single prefetched scalar (it is
+    # read on the HOST side of the pipeline, before tiles stream in), and
+    # every activation-side param picks its block row with ``g[0]`` — the
+    # DMA engine fetches only group g's row of each stacked (G, ·) array.
+    # A traced g (the tgroup inside ddpm_sample's scan) therefore changes
+    # WHICH rows stream in, never the executable: one compile covers all
+    # timestep groups.
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),
-            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),
-            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
-            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),
+            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),    # x tile
+            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),    # W tile
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),     # sx[g]
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),     # zx[g]
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),   # scale[g]
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),   # corr[g]
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),      # bias
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
@@ -133,6 +152,17 @@ def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
 
 def _mrq_kernel(g_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref, scale_p_ref,
                 bias_ref, o_ref, acc_n_ref, acc_p_ref, *, nk: int, half: int):
+    """Grid body for ``int8_matmul_mrq_fq`` at grid point (m, n, k).
+
+    Same tiling/prefetch contract as ``_fq_kernel`` (group-``g`` rows of
+    the stacked (G, ·) params are pre-gathered by the index maps), but
+    with the MRQ twin-region structure: the fp32 x tile is split by sign
+    into two DISJOINT int8 code tiles (each element is zero in exactly
+    one), both multiplied against the SAME weight tile — one VMEM-resident
+    W read feeding two s32 accumulators — and the epilogue recombines them
+    with their per-region scales. That is what collapses the old
+    two-matmul MRQ deployment into a single W traversal.
+    """
     del g_ref
     k = pl.program_id(2)
 
@@ -197,17 +227,20 @@ def int8_matmul_mrq_fq(x, wq, s_neg, s_pos, scale_neg, scale_pos, bias=None,
 
     nk = Kp // bk_
     grid = (Mp // bm_, Np // bn_, nk)
+    # Same scalar-prefetch group gather as int8_matmul_fq (see the comment
+    # there); here the gathered rows are the two region step sizes and the
+    # two combined region*weight scale rows.
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),
-            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),
-            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
-            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),
-            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),
+            pl.BlockSpec((bm_, bk_), lambda m, n, k, g: (m, k)),    # x tile
+            pl.BlockSpec((bk_, bn_), lambda m, n, k, g: (k, n)),    # W tile
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),     # s_neg[g]
+            pl.BlockSpec((1, 1), lambda m, n, k, g: (g[0], 0)),     # s_pos[g]
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),   # scale_neg
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (g[0], n)),   # scale_pos
+            pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),      # bias
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32),

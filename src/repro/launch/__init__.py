@@ -1,4 +1,5 @@
 """Launch layer: production meshes, multi-pod dry-run, train/serve entry
 points. NOTE: dryrun must be run as a module (python -m repro.launch.dryrun)
 — it sets XLA_FLAGS before jax initializes."""
-from repro.launch.mesh import make_production_mesh, make_debug_mesh, HW
+from repro.launch.mesh import (make_production_mesh, make_debug_mesh,
+                               make_serving_mesh, HW)

@@ -25,6 +25,15 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(data: int | None = None):
+    """Data-parallel serving mesh: ``data`` devices (default: all visible)
+    on the "data" axis, model axis 1. The serving engine replicates params
+    and shards microbatches on "data" via shard_map — the DiT models in
+    this repo fit on one chip, so serving scales out, not up."""
+    data = data or jax.device_count()
+    return jax.make_mesh((data, 1), ("data", "model"))
+
+
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 HW = {
     "peak_bf16_flops": 197e12,      # FLOP/s

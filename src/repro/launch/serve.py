@@ -1,37 +1,69 @@
-"""Serving launcher: batched decode for LMs / batched DDPM sampling for
-DiT, with optional W8A8 quantized execution (the paper's deployment
-path: calibrate once with TQ-DiT, then serve quantized).
+"""Serving launcher — a thin CLI over ``repro.serving``.
+
+DiT archs run through the sharded batched serving subsystem: a request
+stream is coalesced into fixed-shape microbatches (step-bucketed, padded,
+CFG-paired) and executed data-parallel via shard_map; ``--quantize w8a8``
+serves through the fused int8 Pallas kernels. LM archs keep the simple
+batched-decode path.
 
 Usage (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+      --requests 8 --microbatch 4 --steps 4 --quantize w8a8
+  PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+      --requests 8 --dp 2 --cfg-scale 1.5
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt_len 32 --gen 16
-  PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
-      --batch 4 --steps 25 --quantize w8a8
+
+``--dp N`` forces N host devices (XLA_FLAGS) for data-parallel serving on
+CPU; it must be set before jax initializes, which is why all jax imports
+live inside ``main``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="LM decode batch")
     ap.add_argument("--prompt_len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="DiT: number of generation requests to serve")
+    ap.add_argument("--microbatch", type=int, default=4,
+                    help="DiT: slots per compiled microbatch")
     ap.add_argument("--steps", type=int, default=25, help="DiT sample steps")
-    ap.add_argument("--quantize", default=None, choices=(None, "w8a8", "w6a6"))
+    ap.add_argument("--cfg-scale", type=float, default=1.0,
+                    help="classifier-free guidance scale (1 = conditional)")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="force N host devices for data-parallel serving "
+                         "(0 = use whatever the backend exposes)")
+    # NOTE: argparse compares the supplied value against `choices` AFTER
+    # applying `type`; a None inside choices only matches when the flag is
+    # omitted entirely, and `--quantize` with no sane sentinel rejected the
+    # default-unset path on some invocations. "none" is the sentinel.
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "w8a8", "w6a6"))
+    ap.add_argument("--calib", default="range", choices=("range", "ho"),
+                    help="w8a8/w6a6 calibration: fast range-only (serving "
+                         "bring-up) or the paper's full HO search")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.dp > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.dp}")
+
+    import jax
+    import numpy as np
+
     from repro.configs import get, get_smoke
-    from repro.models import (DiTCfg, lm_init, lm_generate, dit_init)
+    from repro.models import DiTCfg, lm_init, lm_generate
     from repro.nn.ctx import FPContext
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -39,38 +71,76 @@ def main() -> None:
     ctx = FPContext()
 
     if isinstance(cfg, DiTCfg):
-        from repro.diffusion import DiffusionCfg, make_schedule, ddpm_sample
-        from repro.models import dit_apply
+        from repro.diffusion import DiffusionCfg, make_schedule
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models import dit_init
+        from repro.serving import RequestScheduler, ServeEngine
+
         params = dit_init(key, cfg)
         dif = DiffusionCfg(T=1000)
         sched = make_schedule(dif)
-        if args.quantize:
-            from repro.core import (PTQConfig, run_ptq, make_quant_context,
-                                    build_dit_calibration, dit_loss_fn)
-            from repro.core.baselines import tq_dit
+
+        if args.quantize != "none":
             bits = 8 if args.quantize == "w8a8" else 6
             lp_key, key = jax.random.split(key)
-            x0_src = lambda n, k: jax.random.normal(
-                k, (n, cfg.img_size, cfg.img_size, cfg.in_ch))
-            calib = build_dit_calibration(
-                params, cfg, dif, sched, x0_src, lp_key, n_per_group=4,
-                batch=4)
-            qp, rep = run_ptq(dit_loss_fn(params, cfg), calib,
-                              tq_dit(bits, bits, n_alpha=8, rounds=2))
-            ctx = make_quant_context(qp)
-            print(f"calibrated {rep['n_quantized']} ops in "
-                  f"{rep['wall_s']:.1f}s ({args.quantize})")
-        eps_fn = lambda x, t, y, c: dit_apply(params, cfg, x, t, y, ctx=c)
+            if args.calib == "range":
+                from repro.serving import range_calibrate
+                t0 = time.perf_counter()
+                qp, weights = range_calibrate(params, cfg, dif, sched,
+                                              lp_key, wbits=bits, abits=bits)
+                print(f"range-calibrated {len(qp)} linears in "
+                      f"{time.perf_counter() - t0:.1f}s ({args.quantize})")
+            else:
+                from repro.core import (build_dit_calibration, dit_loss_fn,
+                                        run_ptq)
+                from repro.core.baselines import tq_dit
+                x0_src = lambda n, k: jax.random.normal(
+                    k, (n, cfg.img_size, cfg.img_size, cfg.in_ch))
+                calib = build_dit_calibration(
+                    params, cfg, dif, sched, x0_src, lp_key, n_per_group=4,
+                    batch=4)
+                qp, rep = run_ptq(dit_loss_fn(params, cfg), calib,
+                                  tq_dit(bits, bits, n_alpha=8, rounds=2))
+                weights = rep["weights"]
+                print(f"HO-calibrated {rep['n_quantized']} ops in "
+                      f"{rep['wall_s']:.1f}s ({args.quantize})")
+            from repro.core import make_quant_context
+            if bits == 8:
+                # deployment path: pack + fused int8 Pallas kernels
+                from repro.kernels import ops as kops
+                qp = kops.convert_for_kernels(qp, weights)
+                n_pack = sum(1 for v in qp.values()
+                             if "int8" in v or "int8_mrq" in v)
+                print(f"packed {n_pack} linears for the fused int8 kernels")
+                ctx = make_quant_context(qp, kernel=True)
+            else:
+                ctx = make_quant_context(qp)          # fake-quant (no 6-bit MXU)
+
+        mesh = make_serving_mesh()
+        engine = ServeEngine(params, cfg, dif, sched, ctx=ctx, mesh=mesh,
+                             microbatch=args.microbatch,
+                             step_buckets=(args.steps,))
+        sched_q = RequestScheduler(microbatch=args.microbatch,
+                                   step_buckets=(args.steps,))
+        rkey = jax.random.PRNGKey(args.seed + 1)
+        labels = jax.random.randint(rkey, (args.requests,), 0, cfg.n_classes)
+        for i in range(args.requests):
+            sched_q.submit(int(labels[i]), steps=args.steps,
+                           cfg_scale=args.cfg_scale,
+                           seed=args.seed * 100_000 + i)
         t0 = time.perf_counter()
-        out = ddpm_sample(eps_fn, dif, sched,
-                          (args.batch, cfg.img_size, cfg.img_size, cfg.in_ch),
-                          jnp.zeros((args.batch,), jnp.int32), key,
-                          steps=args.steps, ctx=ctx)
-        out.block_until_ready()
+        results = sched_q.run(engine)
         dt = time.perf_counter() - t0
-        print(f"sampled {args.batch} latents x {args.steps} steps in "
-              f"{dt:.2f}s ({dt/args.steps*1000:.0f} ms/step); "
-              f"mean={float(out.mean()):.4f} std={float(out.std()):.4f}")
+        samples = np.stack([results[r].sample for r in sorted(results)])
+        st = engine.stats
+        print(f"served {len(results)} requests x {args.steps} steps on "
+              f"{jax.device_count()} device(s) in {dt:.2f}s "
+              f"({len(results) / dt:.2f} req/s, "
+              f"{dt / (st['microbatches'] * args.steps) * 1000:.0f} ms/step); "
+              f"{st['microbatches']} microbatches, "
+              f"{st['padded_slots']} padded slots, "
+              f"buckets compiled: {st['compiled_buckets']}")
+        print(f"sample mean={samples.mean():.4f} std={samples.std():.4f}")
         return
 
     params = lm_init(key, cfg)

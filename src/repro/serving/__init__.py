@@ -1,0 +1,19 @@
+"""Sharded batched DiT serving (the deployment layer above the kernels).
+
+Request lifecycle (docs/serving.md):
+
+  GenRequest --submit--> RequestScheduler --coalesce--> MicroBatch
+      --ServeEngine--> shard_map'd ddpm_sample_paired (CFG-paired, TGQ
+      threaded, fused int8 kernels when quantized) --> GenResult
+
+``repro.serving.quickcal.range_calibrate`` produces serving-grade W8A8
+qparams in seconds for bring-up; the fidelity path stays
+``repro.core.ptq.run_ptq``.
+"""
+from repro.serving.batching import (
+    DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, bucket_steps,
+    coalesce,
+)
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.engine import ServeEngine
+from repro.serving.quickcal import range_calibrate

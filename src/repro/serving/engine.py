@@ -1,0 +1,153 @@
+"""The serving engine: compiled, sharded microbatch execution.
+
+One :class:`ServeEngine` owns
+
+- the model (params + DiTCfg) and the execution context — ``FPContext``
+  for fp32, a fake-quant ``QuantContext`` for fidelity serving, or
+  ``QuantContext(kernel=True)`` with int8-packed qparams for the fused
+  Pallas deployment path,
+- the diffusion setup (``DiffusionCfg`` + schedule),
+- a data-parallel mesh: the paired sampler is wrapped in ``shard_map``
+  with params replicated (``P()``) and every per-request array sharded on
+  the DP super-axis (``repro.distributed.request_spec``). The model
+  forward has no cross-sample communication, so serving scales linearly
+  across the "data" axis and each device runs the SAME executable a
+  single-device engine would — bit-identical samples either way
+  (``benchmarks/serve_throughput.py`` asserts this).
+- a cache of compiled executables, one per step bucket. TGQ group
+  selection happens inside the fused kernels (scalar-prefetched group
+  index), so all timestep groups share one executable; only a new step
+  bucket triggers a compile.
+
+``check_rep=False`` on the shard_map is required: pallas_call has no
+replication rule, and the body is embarrassingly data-parallel anyway.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.diffusion import DiffusionCfg, ddpm_sample_paired, make_schedule
+from repro.distributed import batch_spec, dp_size, replicated, request_spec
+from repro.models import DiTCfg, dit_apply
+from repro.nn.ctx import FPContext
+from repro.serving.batching import (
+    DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, coalesce,
+)
+
+
+class ServeEngine:
+    """Executes fixed-shape microbatches of DiT generation requests.
+
+    Parameters
+    ----------
+    params, dcfg : the DiT model.
+    dif, sched   : diffusion config + schedule (sched built if omitted).
+    ctx          : op context (default fp32). Pass
+                   ``make_quant_context(qp_packed, kernel=True)`` for the
+                   fused-int8 serving path.
+    mesh         : data-parallel mesh (``make_serving_mesh()``). None runs
+                   un-sharded on the default device.
+    microbatch   : slots per microbatch; must divide by the mesh's DP size.
+    step_buckets : allowed scan lengths (compile keys).
+    """
+
+    def __init__(self, params, dcfg: DiTCfg, dif: DiffusionCfg,
+                 sched=None, *, ctx=None, mesh: Optional[Mesh] = None,
+                 microbatch: int = 8,
+                 step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
+                 clip_x0: Optional[float] = None):
+        self.dcfg = dcfg
+        self.dif = dif
+        self.sched = sched if sched is not None else make_schedule(dif)
+        self.ctx = ctx if ctx is not None else FPContext()
+        self.mesh = mesh
+        self.microbatch = int(microbatch)
+        self.step_buckets = tuple(sorted(int(b) for b in step_buckets))
+        self.clip_x0 = clip_x0
+        if mesh is not None:
+            nd = dp_size(mesh)
+            if self.microbatch % nd != 0:
+                raise ValueError(
+                    f"microbatch {self.microbatch} not divisible by the "
+                    f"mesh's {nd} data-parallel shards")
+            params = jax.device_put(params, replicated(mesh))
+        self.params = params
+        self._fns: Dict[int, Any] = {}          # step bucket -> compiled fn
+        self.stats: Dict[str, Any] = {
+            "compiled_buckets": [], "microbatches": 0, "requests": 0,
+            "padded_slots": 0, "wall_s": 0.0,
+        }
+
+    # -- executable construction -------------------------------------------
+    def _build(self, steps: int):
+        dcfg, dif, sched = self.dcfg, self.dif, self.sched
+        ctx, clip = self.ctx, self.clip_x0
+        null_label = dcfg.n_classes                # the extra embedding row
+
+        def run(params, labels, seeds, guidance):
+            eps = lambda x, t, y, c: dit_apply(params, dcfg, x, t, y, ctx=c)
+            shape = (labels.shape[0], dcfg.img_size, dcfg.img_size,
+                     dcfg.in_ch)
+            return ddpm_sample_paired(eps, dif, sched, shape, labels, seeds,
+                                      guidance, null_label=null_label,
+                                      steps=steps, ctx=ctx, clip_x0=clip)
+
+        if self.mesh is not None:
+            rspec = request_spec(self.mesh)
+            run = shard_map(run, mesh=self.mesh,
+                            in_specs=(P(), rspec, rspec, rspec),
+                            out_specs=batch_spec(self.mesh, 4),
+                            check_rep=False)
+        return jax.jit(run)
+
+    def _fn(self, steps: int):
+        if steps not in self._fns:
+            self._fns[steps] = self._build(steps)
+            self.stats["compiled_buckets"].append(steps)
+        return self._fns[steps]
+
+    # -- execution ----------------------------------------------------------
+    def run_microbatch(self, mb: MicroBatch) -> np.ndarray:
+        """Run one microbatch; returns (B, H, W, C) samples (incl. padding
+        slots — callers drop them via ``mb.valid``)."""
+        if mb.batch != self.microbatch:
+            raise ValueError(
+                f"microbatch has {mb.batch} slots, engine expects "
+                f"{self.microbatch}")
+        if mb.steps not in self.step_buckets:
+            raise ValueError(f"steps {mb.steps} not in configured buckets "
+                             f"{self.step_buckets}")
+        out = self._fn(mb.steps)(self.params, jnp.asarray(mb.labels),
+                                 jnp.asarray(mb.seeds),
+                                 jnp.asarray(mb.guidance))
+        return np.asarray(jax.block_until_ready(out))
+
+    def run(self, microbatches: Sequence[MicroBatch]
+            ) -> Dict[int, GenResult]:
+        """Run microbatches in order; returns {request_id: GenResult}."""
+        results: Dict[int, GenResult] = {}
+        for mb in microbatches:
+            t0 = time.perf_counter()
+            samples = self.run_microbatch(mb)
+            dt = time.perf_counter() - t0
+            for slot, rid in enumerate(mb.request_ids):
+                results[rid] = GenResult(
+                    request_id=rid, sample=samples[slot], steps=mb.steps,
+                    microbatch=mb.batch, wall_s=dt)
+            self.stats["microbatches"] += 1
+            self.stats["requests"] += mb.n_valid
+            self.stats["padded_slots"] += mb.n_padded
+            self.stats["wall_s"] += dt
+        return results
+
+    def serve(self, requests: Sequence[GenRequest]) -> Dict[int, GenResult]:
+        """Convenience: coalesce + run a request list in one call."""
+        return self.run(coalesce(requests, self.microbatch,
+                                 self.step_buckets))

@@ -1,0 +1,116 @@
+"""Range-only calibration for serving bring-up and benchmarks.
+
+The paper's full pipeline (Hessian-guided alternating search, Fisher
+taps, R rounds — ``repro.core.ptq.run_ptq``) is the fidelity path and
+costs minutes. Serving bring-up, smoke tests, and throughput benchmarks
+only need *structurally correct* quantizers — per-group TGQ ranges in the
+exact stacked ``(G, ...)`` format the fused int8 kernels gather — so this
+module calibrates from plain min/max ranges in seconds:
+
+- weights: per-output-channel symmetric ``ChannelQ`` from absmax,
+- plain inputs: ``TGQ(UniformQ)`` — per-timestep-group [min, max] ranges,
+- post-GELU/SiLU inputs: ``TGQ(MRQSignedQ)`` — per-group negative /
+  positive lobe maxima (the two-region step sizes at alpha = 1),
+- einsum operands (attention QK^T / P·V): left unquantized — they have no
+  int8 serving kernel and their MRQ-softmax search is the fidelity
+  pipeline's job.
+
+The result feeds ``repro.kernels.ops.convert_for_kernels`` directly; use
+``run_ptq`` instead whenever sample quality is being measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calib import build_dit_calibration, dit_loss_fn
+from repro.core.contexts import CalibrationContext, RecordingContext
+from repro.core.quantizers import (
+    TGQ, ChannelQ, MRQSignedQ, UniformQ, channel_scale_from_absmax,
+    uniform_params_from_range, weight_absmax,
+)
+from repro.diffusion import DiffusionCfg, make_schedule
+from repro.models import DiTCfg
+
+
+def _nearest(groups, g):
+    return min(groups, key=lambda x: abs(x - g))
+
+
+def range_calibrate(params, dcfg: DiTCfg, dif: DiffusionCfg, sched=None,
+                    key=None, *, wbits: int = 8, abits: int = 8,
+                    n_per_group: int = 2, batch: int = 2,
+                    max_rows: int = 128
+                    ) -> Tuple[Dict[str, dict], Dict[str, np.ndarray]]:
+    """Min/max calibration of every DiT linear, time-grouped.
+
+    Runs ``n_per_group`` forward-diffused samples per TGQ group through
+    the model eagerly (the standard Phase-1/2 capture machinery), then
+    derives quantizer params from ranges alone. Groups with no captured
+    rows borrow the nearest calibrated group, so stacked params always
+    cover all ``dif.tgq_groups``.
+
+    Returns ``(qparams, weights)`` — exactly the two arguments
+    ``convert_for_kernels`` wants.
+    """
+    sched = sched if sched is not None else make_schedule(dif)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    loss = dit_loss_fn(params, dcfg)
+
+    x0 = lambda n, k: jax.random.normal(
+        k, (n, dcfg.img_size, dcfg.img_size, dcfg.in_ch))
+    calib = build_dit_calibration(params, dcfg, dif, sched, x0, key,
+                                  n_per_group=n_per_group, batch=batch)
+
+    rec = RecordingContext()
+    loss(rec, calib[0][0])
+    cal = CalibrationContext(registry=rec.registry,
+                             max_rows_per_batch=max_rows)
+    for b, tg in calib:
+        cal.begin_batch()
+        loss(dataclasses.replace(cal, tgroup=tg), b)
+
+    G = dif.tgq_groups
+    half = 2 ** (abits - 1)
+    qparams: Dict[str, dict] = {}
+    for name, info in rec.registry.items():
+        if info.kind != "linear" or name not in cal.store:
+            continue
+        recs = cal.store[name]
+        groups = sorted({r["tg"] for r in recs})
+        lo_hi = {
+            g: (min(float(r["x"].min()) for r in recs if r["tg"] == g),
+                max(float(r["x"].max()) for r in recs if r["tg"] == g))
+            for g in groups}
+
+        if info.a_kind in ("post_gelu", "post_silu"):
+            s_neg, s_pos = [], []
+            for g in range(G):
+                lo, hi = lo_hi[_nearest(groups, g)]
+                s_neg.append(max(-lo, 1e-6) / half)
+                s_pos.append(max(hi, 1e-6) / half)
+            xq: Any = TGQ(MRQSignedQ(s_neg=jnp.asarray(s_neg, jnp.float32),
+                                     s_pos=jnp.asarray(s_pos, jnp.float32),
+                                     bits=abits))
+        else:
+            scales, zeros = [], []
+            for g in range(G):
+                lo, hi = lo_hi[_nearest(groups, g)]
+                s, z = uniform_params_from_range(jnp.float32(lo),
+                                                 jnp.float32(hi), abits)
+                scales.append(s)
+                zeros.append(z)
+            xq = TGQ(UniformQ(scale=jnp.stack(scales), zero=jnp.stack(zeros),
+                              bits=abits))
+
+        w = cal.weights[name]
+        qparams[name] = {
+            "x": xq,
+            "w": ChannelQ(channel_scale_from_absmax(
+                weight_absmax(jnp.asarray(w)), wbits), bits=wbits),
+        }
+    return qparams, cal.weights

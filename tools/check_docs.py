@@ -1,0 +1,131 @@
+"""Docs link/anchor checker + quickstart smoke executor.
+
+Keeps README.md and docs/*.md from rotting:
+
+- every relative markdown link must point at an existing file, and every
+  anchor (``other.md#section`` or ``#section``) must match a heading slug
+  in its target (http(s) links are skipped — CI has no business flaking
+  on the network);
+- with ``--run``, every line inside a fenced ```bash block that ends with
+  the marker comment ``# ci-smoke`` is executed from the repo root — the
+  quickstart commands the docs show are the ones CI actually runs.
+
+Usage:
+    python tools/check_docs.py README.md docs/*.md
+    python tools/check_docs.py --run README.md docs/*.md
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from typing import List
+
+LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+FENCE_RE = re.compile(r"^```")
+SMOKE_MARK = "# ci-smoke"
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (good enough for our headings)."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"\s+", "-", h).strip("-")
+
+
+def strip_code(text: str) -> str:
+    """Remove fenced blocks and inline code spans before link scanning."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_file(path: str) -> List[str]:
+    """Returns a list of error strings for one markdown file."""
+    errors: List[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for _, target in LINK_RE.findall(strip_code(text)):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, ref)) if ref \
+            else os.path.abspath(path)
+        if not os.path.exists(dest):
+            errors.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor:
+            if not dest.endswith(".md"):
+                errors.append(f"{path}: anchor on non-markdown -> {target}")
+            elif slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def smoke_commands(path: str) -> List[str]:
+    """Lines marked `# ci-smoke` inside ```bash fences."""
+    cmds, fenced_bash = [], False
+    with open(path, encoding="utf-8") as f:
+        for line in f.read().splitlines():
+            s = line.strip()
+            if s.startswith("```"):
+                fenced_bash = s[3:].strip() in ("bash", "sh") \
+                    and not fenced_bash
+                continue
+            if fenced_bash and s.endswith(SMOKE_MARK):
+                cmds.append(s[: -len(SMOKE_MARK)].rstrip(" \\"))
+    return cmds
+
+
+def run_smoke(files: List[str], root: str) -> List[str]:
+    errors = []
+    for path in files:
+        for cmd in smoke_commands(path):
+            print(f"[ci-smoke] {cmd}", flush=True)
+            r = subprocess.run(cmd, shell=True, cwd=root)
+            if r.returncode != 0:
+                errors.append(f"{path}: ci-smoke failed ({r.returncode}): "
+                              f"{cmd}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--run", action="store_true",
+                    help="also execute `# ci-smoke` commands")
+    args = ap.parse_args(argv)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    errors: List[str] = []
+    n_links = 0
+    for path in args.files:
+        errors.extend(check_file(path))
+        with open(path, encoding="utf-8") as f:
+            n_links += len(LINK_RE.findall(strip_code(f.read())))
+    if args.run:
+        errors.extend(run_smoke(args.files, root))
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(args.files)} files, {n_links} links: "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
