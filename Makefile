@@ -1,4 +1,4 @@
-.PHONY: verify verify-all kernel-micro serve-throughput docs-check
+.PHONY: verify verify-all kernel-micro bench-attn serve-throughput docs-check
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -10,6 +10,11 @@ verify-all:
 
 kernel-micro:
 	PYTHONPATH=src python -m benchmarks.kernel_micro
+
+# attention rows only: int8 QK^T / softmax->codes / P·V correctness +
+# modeled probs-traffic saving (fp round-trip vs int8 codes)
+bench-attn:
+	PYTHONPATH=src python -m benchmarks.kernel_micro --attn
 
 serve-throughput:
 	PYTHONPATH=src python -m benchmarks.serve_throughput

@@ -11,19 +11,29 @@ is meaningless; the TPU win is structural and computed from traffic).
   softmax_mrq        : probs tile stays in VMEM; saves read+write of the
                        (rows, cols) f32 probs per attention.
   act_mrq            : saves read+write of the (tokens, d_ff) hidden tensor.
+  int8_bmm_qk /      : the int8 attention path. The headline saving is the
+  softmax_mrq_codes /  PROBS tensor: the fp path writes + reads the (S,S)
+  int8_bmm_pv          f32 probabilities through HBM every attention; the
+                       fused path moves int8 CODES instead — 4x less
+                       probs traffic (1B write + 1B read vs 4B + 4B).
 
 The traffic functions are importable (tests assert the structural-saving
-floors, e.g. >=1.5x for the MRQ linear).
+floors, e.g. >=1.5x for the MRQ linear, >=2x probs traffic for fused
+attention). ``--attn`` prints only the attention rows (``make
+bench-attn``).
 """
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.kernels import (act_mrq, int8_matmul, int8_matmul_fq,
-                           int8_matmul_mrq_fq, softmax_mrq, ref)
+from repro.kernels import (act_mrq, int8_bmm_pv, int8_bmm_qk, int8_matmul,
+                           int8_matmul_fq, int8_matmul_mrq_fq, softmax_mrq,
+                           softmax_mrq_codes, ref)
 
 
 # ---------------------------------------------------------------------------
@@ -64,9 +74,92 @@ def traffic_mrq_linear(M: int, K: int, N: int) -> dict:
             "fused": M * K * 4 + K * N * 1 + M * N * 4}
 
 
-def main() -> None:
+def traffic_attention_probs(BH: int, S: int, D: int) -> dict:
+    """Attention softmax->P·V tail for BH (batch*heads) matrices of
+    (S, S) scores against (S, D) values.
+
+    unfused — fp probs round-trip (the pre-int8-attention serving path):
+      softmax(+qdq): read f32 scores (4B/elt) + WRITE f32 probs (4B),
+      P·V:           READ f32 probs (4B) + read f32 v (4B),
+                     write f32 out (4B).
+    fused — softmax_mrq_codes + int8_bmm_pv: the probs tensor moves as
+      int8 codes (1B write + 1B read); v is read once in fp and
+      quantized in VMEM; out written once.
+
+    probs_unfused/probs_fused isolate the probs-tensor bytes — the
+    quadratic term the codes path shrinks 4x.
+    """
+    probs_unfused = BH * S * S * (4 + 4)          # f32 write + f32 read
+    probs_fused = BH * S * S * (1 + 1)            # int8 codes write + read
+    rest = BH * S * S * 4 + BH * S * D * 4 + BH * S * D * 4
+    return {
+        "probs_unfused": probs_unfused,
+        "probs_fused": probs_fused,
+        "unfused": probs_unfused + rest,
+        "fused": probs_fused + rest,
+    }
+
+
+def traffic_attention_qk(BH: int, S: int, D: int) -> dict:
+    """QK^T: the int8 path reads q/k once in fp (quantized in VMEM) and
+    writes f32 scores once; the unfused int8 chain would pay a separate
+    quantize pass (f32 read + int8 write) per operand."""
+    quant_pass = 2 * BH * S * D * (4 + 1)
+    matmul = 2 * BH * S * D * 1 + BH * S * S * 4
+    return {"unfused": quant_pass + matmul,
+            "fused": 2 * BH * S * D * 4 + BH * S * S * 4}
+
+
+def _attention_rows(rows) -> None:
+    key = jax.random.PRNGKey(7)
+    # DiT-XL/2 attention shape: 256 tokens, 16 heads, head dim 72 — and a
+    # ragged case to exercise padding.
+    for (BH, S, D) in [(16, 256, 72), (3, 130, 17)]:
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (BH, S, D)) * 2
+        k = jax.random.normal(k2, (BH, S, D)) * 2
+        v = jax.random.normal(k3, (BH, S, D))
+        s_q = jnp.full((1, 1), 0.03, jnp.float32)
+        s_k = jnp.full((1, 1), 0.04, jnp.float32)
+        scale = s_q * s_k * (D ** -0.5)
+        scores = int8_bmm_qk(q, k, s_q, s_k, scale, interpret=True)
+        want = ref.int8_bmm_qk_ref(q, k, s_q, s_k, scale)
+        err = float(jnp.max(jnp.abs(scores - want)))
+        t = traffic_attention_qk(BH, S, D)
+        rows.append(("int8_bmm_qk", f"{BH}x{S}x{D}", f"{err:.1e}",
+                     t["unfused"], t["fused"],
+                     round(t["unfused"] / t["fused"], 2)))
+
+        s1 = jnp.full((1, 1), 2e-3, jnp.float32)
+        codes = softmax_mrq_codes(scores, s1, interpret=True)
+        cerr = int(jnp.max(jnp.abs(
+            codes.astype(jnp.int32)
+            - ref.softmax_mrq_codes_ref(scores, s1).astype(jnp.int32))))
+        tp = traffic_attention_probs(BH, S, D)
+        rows.append(("softmax_mrq_codes", f"{BH}x{S}x{S}", f"{cerr:d}",
+                     tp["probs_unfused"], tp["probs_fused"],
+                     round(tp["probs_unfused"] / tp["probs_fused"], 2)))
+
+        s_v = jnp.full((1, 1), 0.05, jnp.float32)
+        out = int8_bmm_pv(codes, v, s_v, s1 * s_v, (1.0 / 128) * s_v,
+                          interpret=True)
+        pwant = ref.int8_bmm_pv_ref(codes, v, s_v, s1 * s_v,
+                                    (1.0 / 128) * s_v)
+        perr = float(jnp.max(jnp.abs(out - pwant)))
+        rows.append(("int8_bmm_pv", f"{BH}x{S}x{D}", f"{perr:.1e}",
+                     tp["unfused"], tp["fused"],
+                     round(tp["unfused"] / tp["fused"], 2)))
+
+
+def main(attn_only: bool = False) -> None:
     rows = [("kernel", "case", "max_err", "hbm_bytes_unfused",
              "hbm_bytes_fused", "traffic_saving")]
+    if attn_only:
+        _attention_rows(rows)
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        C.emit("kernel_micro_attn", rows)
+        return
 
     key = jax.random.PRNGKey(0)
     # --- fused-quantize int8 matmul: M,K,N sweep ------------------------------
@@ -149,10 +242,13 @@ def main() -> None:
         rows.append(("act_mrq", f"{T}x{F}", f"{err:.1e}", unfused, fused,
                      round(unfused / fused, 2)))
 
+    # --- int8 attention (QK^T / softmax codes / P·V) --------------------------
+    _attention_rows(rows)
+
     for r in rows:
         print(",".join(str(x) for x in r), flush=True)
     C.emit("kernel_micro", rows)
 
 
 if __name__ == "__main__":
-    main()
+    main(attn_only="--attn" in sys.argv[1:])

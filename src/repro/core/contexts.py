@@ -245,8 +245,12 @@ class QuantContext(OpContext):
     }
     kernel=True routes W8A8 linears through the fused int8 Pallas kernels
     ('int8' pack -> fused-quantize matmul, 'int8_mrq' pack -> single-pass
-    MRQ matmul); the TGQ timestep group (``self.tgroup``, possibly traced)
-    is resolved inside the kernel — no per-group repacking or retracing.
+    MRQ matmul) and whole attention blocks through the int8 attention
+    kernels (the ``attention`` seam lowers to QK^T -> fused softmax-MRQ
+    codes -> P·V when the op's '/qk' qparams carry an 'int8_qk' pack and
+    its '/pv' qparams an 'int8_pv' pack); the TGQ timestep group
+    (``self.tgroup``, possibly traced) is resolved inside the kernels —
+    no per-group repacking or retracing.
     """
     qparams: Dict[str, dict] = dataclasses.field(default_factory=dict)
     kernel: bool = False
@@ -300,6 +304,24 @@ class QuantContext(OpContext):
         y = jnp.einsum(spec, a, b)
         ob = qp.get("out_bias")
         return y + ob if ob is not None else y
+
+    def attention(self, name, q, k, v, *, mask=None, scale=1.0):
+        # The einsum sites of the attention seam lower to the int8 Pallas
+        # kernels exactly like ctx.linear sites: when serving packs exist
+        # for BOTH matmuls, the whole block runs QK^T -> softmax-to-codes
+        # -> P·V with the probs travelling as int8 codes. Otherwise fall
+        # back to the composed fake-quant seams (OpContext default).
+        if self.kernel:
+            qk_qp = self.qparams.get(f"{name}/qk") or {}
+            pv_qp = self.qparams.get(f"{name}/pv") or {}
+            if (qk_qp.get("int8_qk") is not None
+                    and pv_qp.get("int8_pv") is not None):
+                from repro.kernels import ops as kops
+                return kops.int8_attention(
+                    q, k, v, qk_qp["int8_qk"], pv_qp["int8_pv"], mask=mask,
+                    scale=scale, tgroup=self.tgroup)
+        return OpContext.attention(self, name, q, k, v, mask=mask,
+                                   scale=scale)
 
     def act(self, name, x, kind):
         # post-softmax / post-GELU quantize at the consuming matmul (where

@@ -5,10 +5,16 @@ Phase 1 (calibration data) is supplied by the caller (for DiT:
 group; for LMs: token batches). Phase 2 runs FP forwards storing
 activations and one tap-backward per batch for the Fisher weights.
 Phase 3 runs the HO candidate search per op (TGQ+MRQ for post-softmax
-MatMuls, MRQ for post-GELU/SiLU inputs, uniform elsewhere).
+MatMuls, MRQ for post-GELU/SiLU inputs, symmetric per-tensor for
+attention q/k/v einsum operands, uniform elsewhere).
 
 The result is a ``qparams`` dict consumed by
-:class:`repro.core.contexts.QuantContext`.
+:class:`repro.core.contexts.QuantContext`. For int8 deployment the dict
+(together with ``report["weights"]``) feeds
+``kernels.ops.convert_for_kernels``, which packs every eligible linear
+('int8'/'int8_mrq') AND every attention einsum pair ('int8_qk' on
+``attn/qk``, 'int8_pv' on ``attn/pv``) — the serving bundle the fused
+int8 kernels gather per timestep group at sample time.
 """
 from __future__ import annotations
 
@@ -181,6 +187,13 @@ def run_ptq(loss_fn: Callable, calib_batches: List[Tuple[Any, int]],
     report.update({
         "wall_s": time.perf_counter() - t0,
         "capture_s": t_capture,
+        # attention blocks whose serving packs can be complete: BOTH the
+        # /qk and /pv einsum of the block were quantized (QuantContext
+        # takes the int8 attention path only when both packs exist)
+        "n_attention_einsums": sum(
+            1 for n, i in registry.items()
+            if i.kind == "einsum" and n.endswith("/qk")
+            and n in qparams and n[:-3] + "/pv" in qparams),
         "search_s": time.perf_counter() - t0 - t_capture,
         "calib_bytes": int(calib_bytes),
         "n_quantized": len(qparams),

@@ -9,6 +9,9 @@ Conventions:
   - weights: per-output-channel SYMMETRIC int-k (matches the MXU s8 path
     of the int8 Pallas kernel — no weight zero-point),
   - activations: per-tensor ASYMMETRIC affine (scale + zero point),
+  - attention q/k/v (activation x activation operands): per-tensor
+    SYMMETRIC (``SymQ``) so both sides of QK^T and P.V feed the MXU s8
+    path without a zero-point correction,
   - post-softmax: MRQ two-region [0, 2^{k-1}s1) / [2^{k-1}s1, 1] with the
     paper's fixed s2 = 1/2^{k-1} (§III-C),
   - post-GELU/SiLU: MRQ signed two-region with independent negative /
@@ -47,6 +50,15 @@ def symmetric_qdq(x, scale, bits: int):
     """Symmetric signed: q in [-2^{k-1}, 2^{k-1}-1] (int-k two's complement)."""
     lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
     q = jnp.clip(_round(x / scale), lo, hi)
+    return scale * q
+
+
+def sym_act_qdq(x, scale, bits: int):
+    """Symmetric per-tensor activation quant-dequant with the WEIGHT code
+    range [-(2^{k-1}-1), 2^{k-1}-1] — matches the int8 attention kernels'
+    in-VMEM prologue (no zero point, no -128 code)."""
+    hi = 2 ** (bits - 1) - 1
+    q = jnp.clip(_round(x / scale), -hi, hi)
     return scale * q
 
 
@@ -91,6 +103,21 @@ class UniformQ:
 
     def __call__(self, x):
         return uniform_qdq(x, self.scale, self.zero, self.bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["scale"], meta_fields=["bits"])
+@dataclasses.dataclass
+class SymQ:
+    """Per-tensor SYMMETRIC activation quantizer — the attention q/k/v
+    operand format (codes feed the MXU s8 path of the int8 attention
+    kernels directly, so there is no zero point to correct in a batched
+    epilogue). ``scale`` may carry a leading TGQ group axis."""
+    scale: Any
+    bits: int = 8
+
+    def __call__(self, x):
+        return sym_act_qdq(x, self.scale, self.bits)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -172,6 +199,12 @@ def uniform_params_from_range(lo, hi, bits: int):
 
 def channel_scale_from_absmax(absmax, bits: int):
     return jnp.maximum(absmax / (2 ** (bits - 1) - 1), 1e-8)
+
+
+def sym_scale_from_absmax(absmax, bits: int):
+    """Per-tensor symmetric step covering [-absmax, absmax]."""
+    return jnp.maximum(jnp.asarray(absmax, jnp.float32)
+                       / (2 ** (bits - 1) - 1), 1e-8)
 
 
 def weight_absmax(w, channel_axis: int = -1):

@@ -6,7 +6,12 @@
                          region accumulators),
   - int8_matmul        — W8A8 matmul over PRE-quantized codes (unfused
                          baseline; still used for einsum-style operands),
-  - softmax_mrq        — fused softmax -> MRQ two-region quantization,
+  - int8_bmm_qk        — batched symmetric int8 QK^T (attention scores),
+  - int8_bmm_pv        — batched dual-region int8 P·V consuming the
+                         region-signed MRQ prob codes directly,
+  - softmax_mrq        — fused softmax -> MRQ two-region quant-dequant,
+  - softmax_mrq_codes  — fused softmax -> MRQ int8 CODES (deployment:
+                         feeds int8_bmm_pv; probs never hit HBM as fp),
   - act_mrq            — fused GELU/SiLU -> MRQ signed quantization.
 
 ``ops`` exposes jit'd wrappers (interpret=True on CPU); ``ref`` holds the
@@ -14,6 +19,7 @@ pure-jnp oracles tests compare against.
 """
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
-from repro.kernels.softmax_mrq import softmax_mrq
+from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
+from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ops, ref

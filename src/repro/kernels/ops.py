@@ -8,7 +8,13 @@ Serving path (single fused kernel family, see ``int8_fused``):
     prologue; no standalone quantize pass through HBM),
   - MRQ-signed (post-GELU) inputs -> ``int8_matmul_mrq_fq`` (single W
     traversal, dual region accumulators; replaces the two-matmul
-    decomposition).
+    decomposition),
+  - attention (activation x activation) -> ``int8_attention``: symmetric
+    QK^T (``int8_bmm_qk``), softmax straight to region-signed MRQ codes
+    (``softmax_mrq_codes``), and dual-region P·V consuming the codes
+    directly (``int8_bmm_pv``) — the probabilities never exist in HBM as
+    floats. ``pack_int8_qk`` / ``pack_int8_pv`` build the packs from the
+    calibrated ``attn/qk`` and ``attn/pv`` einsum qparams.
 
 Activation-side parameters are packed STACKED along a leading (G,) TGQ
 group axis — per-tensor quantizers pack as G=1 — and the timestep group
@@ -27,10 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizers import ChannelQ, MRQSignedQ, TGQ, UniformQ
+from repro.core.quantizers import (
+    ChannelQ, MRQSignedQ, MRQSoftmaxQ, SymQ, TGQ, UniformQ,
+)
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
-from repro.kernels.softmax_mrq import softmax_mrq
+from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
+from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ref
 
@@ -137,9 +146,80 @@ def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     }
 
 
+def _broadcast_groups(*cols):
+    """Broadcast (1,1)/(G,1) stacked param columns to a common (G,1)."""
+    G = max(int(c.shape[0]) for c in cols)
+    out = []
+    for c in cols:
+        if c.shape[0] not in (1, G):
+            return None
+        out.append(jnp.broadcast_to(c, (G, 1)))
+    return tuple(out) + (G,)
+
+
+def pack_int8_qk(qp: Dict[str, Any]) -> Optional[dict]:
+    """Pack an attention QK^T einsum for ``int8_bmm_qk``. Wants SYMMETRIC
+    per-tensor quantizers on both activation operands — ``SymQ`` or
+    time-grouped ``TGQ(SymQ)`` (group counts may differ; (1,·) params
+    broadcast against the larger G)."""
+    xq_q, x_tgq = _unwrap_tgq(qp.get("x"))
+    bq_q, b_tgq = _unwrap_tgq(qp.get("b"))
+    if not isinstance(xq_q, SymQ) or not isinstance(bq_q, SymQ):
+        return None
+    if xq_q.bits != 8 or bq_q.bits != 8:
+        return None
+    try:
+        s_q = _stack_param(xq_q.scale, x_tgq)              # (Gq, 1)
+        s_k = _stack_param(bq_q.scale, b_tgq)              # (Gk, 1)
+    except ValueError:
+        return None
+    bc = _broadcast_groups(s_q, s_k)
+    if bc is None:
+        return None
+    s_q, s_k, G = bc
+    return {
+        "s_q": s_q,
+        "s_k": s_k,
+        "scale": s_q * s_k,                                 # (G, 1)
+        "groups": G,
+    }
+
+
+def pack_int8_pv(qp: Dict[str, Any]) -> Optional[dict]:
+    """Pack an attention P·V einsum for ``softmax_mrq_codes`` +
+    ``int8_bmm_pv``: the probs side must be ``MRQSoftmaxQ`` (or
+    ``TGQ(MRQSoftmaxQ)``), the value side ``SymQ`` / ``TGQ(SymQ)``."""
+    xq_q, x_tgq = _unwrap_tgq(qp.get("x"))
+    bq_q, b_tgq = _unwrap_tgq(qp.get("b"))
+    if not isinstance(xq_q, MRQSoftmaxQ) or not isinstance(bq_q, SymQ):
+        return None
+    if xq_q.bits != 8 or bq_q.bits != 8:
+        return None
+    try:
+        s1 = _stack_param(xq_q.s1, x_tgq)                  # (Gp, 1)
+        s_v = _stack_param(bq_q.scale, b_tgq)              # (Gv, 1)
+    except ValueError:
+        return None
+    bc = _broadcast_groups(s1, s_v)
+    if bc is None:
+        return None
+    s1, s_v, G = bc
+    s2 = 1.0 / (2 ** (xq_q.bits - 1))
+    return {
+        "s1": s1,
+        "s_v": s_v,
+        "scale1": s1 * s_v,                                 # (G, 1)
+        "scale2": s2 * s_v,                                 # (G, 1)
+        "groups": G,
+    }
+
+
 def convert_for_kernels(qparams: Dict[str, dict],
                         weights: Dict[str, np.ndarray]) -> Dict[str, dict]:
-    """Adds an 'int8' / 'int8_mrq' pack to every eligible linear op."""
+    """Adds an 'int8' / 'int8_mrq' pack to every eligible linear op and an
+    'int8_qk' / 'int8_pv' pack to every eligible attention einsum —
+    ``QuantContext(kernel=True).attention`` takes the fused int8 path
+    exactly when BOTH attention packs of an op are present."""
     out = {}
     for name, qp in qparams.items():
         qp = dict(qp)
@@ -151,6 +231,14 @@ def convert_for_kernels(qparams: Dict[str, dict],
                 mpack = pack_int8_mrq_linear(qp, weights[name])
                 if mpack is not None:
                     qp["int8_mrq"] = mpack
+        if name.endswith("/qk"):
+            qpack = pack_int8_qk(qp)
+            if qpack is not None:
+                qp["int8_qk"] = qpack
+        elif name.endswith("/pv"):
+            ppack = pack_int8_pv(qp)
+            if ppack is not None:
+                qp["int8_pv"] = ppack
         out[name] = qp
     return out
 
@@ -195,6 +283,53 @@ def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
         g=_group_index(pack, tgroup), out_dtype=out_dtype,
         interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
+
+
+# ---------------------------------------------------------------------------
+# int8 attention (the serving attention hot path)
+# ---------------------------------------------------------------------------
+def int8_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
+                   scale=1.0, tgroup=None, out_dtype=None):
+    """End-to-end int8 grouped SDPA: QK^T -> fused softmax-MRQ -> P·V.
+
+    q: (B, Sq, Hk, G, hd); k, v: (B, Skv, Hk, hd); mask broadcastable to
+    (B, Hk, G, Sq, Skv) boolean or None; ``scale`` is the softmax
+    1/sqrt(hd), folded into the QK^T dequant epilogue. Returns
+    (B, Sq, Hk, G, hd). The probabilities travel between the softmax and
+    P·V kernels as int8 region-signed codes — never as fp through HBM.
+    ``tgroup`` may be a traced scalar (resolved per-pack; each kernel
+    gathers its group row via scalar prefetch, so the surrounding
+    ``ddpm_sample`` scan compiles once).
+    """
+    out_dtype = out_dtype or q.dtype
+    B, Sq, Hk, G, hd = q.shape
+    Skv = k.shape[1]
+    BHG = B * Hk * G
+    g_qk = _group_index(qk_pack, tgroup)
+    g_pv = _group_index(pv_pack, tgroup)
+
+    # GQA without materialized copies: q flattens to (B*Hk*G, ...) but k/v
+    # stay (B*Hk, ...) — the kernels' b // rep batch index maps gather the
+    # kv head shared by every query group, so k/v HBM traffic does not
+    # scale with G.
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(BHG, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
+
+    scores = int8_bmm_qk(
+        qf, kf, qk_pack["s_q"], qk_pack["s_k"],
+        qk_pack["scale"] * jnp.float32(scale), g=g_qk, interpret=INTERPRET)
+    scores = scores.reshape(B, Hk, G, Sq, Skv)
+    if mask is not None:
+        from repro.nn.ctx import NEG_INF
+        scores = jnp.where(mask, scores, NEG_INF)
+
+    codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g_pv,
+                              interpret=INTERPRET)
+    out = int8_bmm_pv(
+        codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"], pv_pack["scale1"],
+        pv_pack["scale2"], g=g_pv, out_dtype=out_dtype, interpret=INTERPRET)
+    return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 
 # ---------------------------------------------------------------------------

@@ -89,6 +89,93 @@ def softmax_mrq_ref(scores, s1, bits: int, out_dtype=jnp.float32):
     return mrq_softmax_qdq(p, s1, bits).astype(out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# int8 attention (batched kernels)
+# ---------------------------------------------------------------------------
+def sym_quantize_int8_ref(x, scale, bits: int = 8):
+    """Symmetric s8 codes over the weight code range [-(h-1), h-1]."""
+    hi = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -hi, hi
+                    ).astype(jnp.int8)
+
+
+def int8_bmm_qk_ref(q, k, s_q, s_k, scale, g=0, bits: int = 8,
+                    out_dtype=jnp.float32):
+    """Batched symmetric QK^T oracle: quantize both activation operands
+    with group-g per-tensor steps, s32 batched matmul, scalar dequant.
+
+    q: (B,M,D), k: (B,N,D) float; s_q/s_k/scale: (G,1) f32 (scale is the
+    combined s_q[g]*s_k[g]*alpha the kernel applies in its epilogue).
+    """
+    q8 = sym_quantize_int8_ref(q, jnp.take(s_q, g, axis=0)[0], bits)
+    k8 = sym_quantize_int8_ref(k, jnp.take(s_k, g, axis=0)[0], bits)
+    acc = jax.lax.dot_general(
+        q8.astype(jnp.int32), k8.astype(jnp.int32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * jnp.take(scale, g, axis=0)[0]).astype(out_dtype)
+
+
+def softmax_mrq_codes_ref(scores, s1, g=0, bits: int = 8):
+    """Row softmax then region-signed int8 MRQ codes: c >= 0 is a
+    region-1 code (step s1[g]), c < 0 the NEGATED region-2 code (step
+    s2 = 1/2^{k-1}; negation fits region-2's [0, 2^{k-1}] range in a
+    signed byte). c == 0 is shared but dequantizes to 0 either way."""
+    half = 2 ** (bits - 1)
+    s1_g = jnp.take(jnp.asarray(s1, jnp.float32), g, axis=0)[0]
+    s2 = 1.0 / half
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    q1 = jnp.clip(jnp.round(p / s1_g), 0, half - 1)
+    q2 = jnp.clip(jnp.round(p / s2), 0, half)
+    return jnp.where(p < half * s1_g, q1, -q2).astype(jnp.int8)
+
+
+def mrq_codes_decode_ref(codes, s1, g=0, bits: int = 8):
+    """Dequantize region-signed prob codes back to fp probabilities.
+    Equals ``mrq_softmax_qdq`` applied to the same softmax rows."""
+    half = 2 ** (bits - 1)
+    s1_g = jnp.take(jnp.asarray(s1, jnp.float32), g, axis=0)[0]
+    c = codes.astype(jnp.float32)
+    return jnp.where(c >= 0, c * s1_g, -c * (1.0 / half))
+
+
+def int8_bmm_pv_ref(codes, v, s_v, scale1, scale2, g=0, bits: int = 8,
+                    out_dtype=jnp.float32):
+    """Batched dual-region P·V oracle consuming region-signed prob codes.
+
+    codes: (B,M,N) int8; v: (B,N,D) float; s_v/scale1/scale2: (G,1) f32
+    (scale1 = s1[g]*s_v[g], scale2 = s2*s_v[g]).
+    """
+    c = codes.astype(jnp.int32)
+    c1 = jnp.maximum(c, 0)
+    c2 = jnp.maximum(-c, 0)
+    v8 = sym_quantize_int8_ref(v, jnp.take(s_v, g, axis=0)[0], bits
+                               ).astype(jnp.int32)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    acc1 = jax.lax.dot_general(c1, v8, dims,
+                               preferred_element_type=jnp.int32)
+    acc2 = jax.lax.dot_general(c2, v8, dims,
+                               preferred_element_type=jnp.int32)
+    y = (acc1.astype(jnp.float32) * jnp.take(scale1, g, axis=0)[0]
+         + acc2.astype(jnp.float32) * jnp.take(scale2, g, axis=0)[0])
+    return y.astype(out_dtype)
+
+
+def int8_attention_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
+                       g=0, out_dtype=jnp.float32):
+    """Full int8 attention oracle over FLATTENED (BHG, S, hd) operands:
+    symmetric QK^T -> mask -> softmax-to-codes -> dual-region P·V.
+    Exactly the composition ``kernels.ops.int8_attention`` runs."""
+    from repro.nn.ctx import NEG_INF
+    scores = int8_bmm_qk_ref(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                             qk_pack["scale"] * scale, g=g)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    codes = softmax_mrq_codes_ref(scores, pv_pack["s1"], g=g)
+    return int8_bmm_pv_ref(codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                           pv_pack["scale2"], g=g, out_dtype=out_dtype)
+
+
 def act_mrq_ref(x, s_neg, s_pos, bits: int, kind: str = "gelu",
                 out_dtype=jnp.float32):
     """GELU/SiLU (f32) then MRQ signed two-region quant-dequant."""

@@ -151,10 +151,12 @@ def dit_block_apply(p, cfg: DiTCfg, x, c, *, ctx=_FP, name="blk"):
     qkv = ctx.linear(f"{name}/qkv", h, p["qkv"]["w"], p["qkv"]["b"])
     q, k, v = jnp.split(qkv.reshape(B, N, 3, H, hd), 3, axis=2)
     q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]          # (B,N,H,hd)
-    scores = ctx.einsum(f"{name}/attn/qk", "bqhd,bkhd->bhqk", q, k) * hd ** -0.5
-    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
-    probs = ctx.act(f"{name}/attn/probs", probs, "post_softmax")
-    o = ctx.einsum(f"{name}/attn/pv", "bhqk,bkhd->bqhd", probs, v)
+    # GQA-general layout with one query per kv head (G=1): the attention
+    # seam (QK^T -> softmax -> MRQ hook -> P·V) is shared with
+    # repro.nn.attention and lowers to the int8 attention kernels under
+    # QuantContext(kernel=True). Op names stay {name}/attn/{qk,probs,pv}.
+    o = ctx.attention(f"{name}/attn", q.reshape(B, N, H, 1, hd), k, v,
+                      scale=hd ** -0.5)
     o = ctx.linear(f"{name}/proj", o.reshape(B, N, d), p["proj"]["w"],
                    p["proj"]["b"])
     x = x + g1[:, None, :] * o

@@ -16,11 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn import initializers as init
-from repro.nn.ctx import FPContext
+from repro.nn.ctx import FPContext, NEG_INF
 from repro.nn.layers import linear_init, rmsnorm_init, rmsnorm_apply, rope_freqs, rope_apply
 
 _FP = FPContext()
-NEG_INF = -1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +48,7 @@ class AttnCfg:
 # init
 # --------------------------------------------------------------------------
 def attention_init(key, cfg: AttnCfg, dtype=jnp.float32):
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 7)
     H, Hk, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
     p = {
         "q": linear_init(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
@@ -59,9 +58,9 @@ def attention_init(key, cfg: AttnCfg, dtype=jnp.float32):
     }
     if cfg.qk_norm:
         p["q_norm"] = rmsnorm_init(ks[4], hd, dtype)
-        p["k_norm"] = rmsnorm_init(ks[4], hd, dtype)
+        p["k_norm"] = rmsnorm_init(ks[5], hd, dtype)
     if cfg.n_meta:
-        p["meta"] = init.normal(0.02)(ks[5], (cfg.n_meta, d), dtype)
+        p["meta"] = init.normal(0.02)(ks[6], (cfg.n_meta, d), dtype)
     return p
 
 
@@ -95,14 +94,13 @@ def _sdpa(q, k, v, mask, ctx, name, scale):
 
     q: (B,Sq,Hk,G,hd); k,v: (B,Skv,Hk,hd); mask: broadcastable to
     (B,Hk,G,Sq,Skv) boolean (True = attend) or None.
+
+    The body lives on the context's ``attention`` seam (shared with the
+    DiT block): the default composes the ``{name}/qk`` einsum, the
+    post-softmax act hook and the ``{name}/pv`` einsum; quantized serving
+    contexts lower the whole block to the int8 attention kernels.
     """
-    scores = ctx.einsum(f"{name}/qk", "bqhgd,bkhd->bhgqk", q, k) * scale
-    if mask is not None:
-        scores = jnp.where(mask, scores, NEG_INF)
-    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
-    probs = ctx.act(f"{name}/probs", probs, "post_softmax")
-    out = ctx.einsum(f"{name}/pv", "bhgqk,bkhd->bqhgd", probs, v)
-    return out
+    return ctx.attention(name, q, k, v, mask=mask, scale=scale)
 
 
 def _causal_mask(q_pos, k_pos, window=None):

@@ -8,7 +8,18 @@ quantization-relevant activations through an :class:`OpContext`:
                                    (attention QK^T and P·V),
 - ``act(name, x, kind)``         — identity hook on distributions the paper
                                    treats specially (``post_softmax``,
-                                   ``post_gelu``, ``post_silu``).
+                                   ``post_gelu``, ``post_silu``),
+- ``attention(name, q, k, v)``   — the whole QK^T → softmax → P·V block.
+                                   The DEFAULT implementation composes the
+                                   three seams above (so recording /
+                                   calibration / tap contexts keep seeing
+                                   the individual ``{name}/qk``,
+                                   ``{name}/probs`` and ``{name}/pv`` ops),
+                                   while ``QuantContext(kernel=True)``
+                                   overrides it to lower the block onto the
+                                   int8 attention Pallas kernels — exactly
+                                   how ``ctx.linear`` sites lower to
+                                   ``int8_matmul_fq``.
 
 ``FPContext`` is the no-op full-precision implementation. The PTQ engine
 (`repro.core`) provides:
@@ -31,7 +42,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e9          # additive mask value for attention scores
 
 
 @dataclasses.dataclass
@@ -62,6 +76,27 @@ class OpContext:
 
     def act(self, name: str, x, kind: str):
         raise NotImplementedError
+
+    def attention(self, name: str, q, k, v, *, mask=None, scale=1.0):
+        """Grouped scaled-dot-product attention seam.
+
+        q: (B, Sq, Hk, G, hd); k, v: (B, Skv, Hk, hd); ``mask``
+        broadcastable to (B, Hk, G, Sq, Skv) boolean (True = attend) or
+        None. Returns (B, Sq, Hk, G, hd).
+
+        This default composes the three fine-grained seams — the op
+        names ``{name}/qk``, ``{name}/probs``, ``{name}/pv`` are the
+        contract every PTQ context keys on. Contexts that lower the
+        whole block to a fused kernel override this method but keep the
+        same names for their packed parameters.
+        """
+        scores = self.einsum(f"{name}/qk", "bqhgd,bkhd->bhgqk", q, k) * scale
+        if mask is not None:
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(q.dtype)
+        probs = self.act(f"{name}/probs", probs, "post_softmax")
+        return self.einsum(f"{name}/pv", "bhgqk,bkhd->bqhgd", probs, v)
 
 
 @dataclasses.dataclass

@@ -17,7 +17,12 @@ One :class:`ServeEngine` owns
 - a cache of compiled executables, one per step bucket. TGQ group
   selection happens inside the fused kernels (scalar-prefetched group
   index), so all timestep groups share one executable; only a new step
-  bucket triggers a compile.
+  bucket triggers a compile. With int8-packed qparams the executable
+  contains the WHOLE quantized block: fused int8 linears AND the int8
+  attention path (QK^T -> softmax-to-MRQ-codes -> P·V via
+  ``kernels.int8_bmm`` / ``softmax_mrq_codes``, probs travelling as int8
+  codes) — the DDPM scan stays one compiled program with no fp attention
+  island inside.
 
 ``check_rep=False`` on the shard_map is required: pallas_call has no
 replication rule, and the body is embarrassingly data-parallel anyway.

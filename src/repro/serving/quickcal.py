@@ -11,9 +11,13 @@ module calibrates from plain min/max ranges in seconds:
 - plain inputs: ``TGQ(UniformQ)`` — per-timestep-group [min, max] ranges,
 - post-GELU/SiLU inputs: ``TGQ(MRQSignedQ)`` — per-group negative /
   positive lobe maxima (the two-region step sizes at alpha = 1),
-- einsum operands (attention QK^T / P·V): left unquantized — they have no
-  int8 serving kernel and their MRQ-softmax search is the fidelity
-  pipeline's job.
+- attention einsums (QK^T / P·V): per-group SYMMETRIC ``TGQ(SymQ)``
+  absmax steps for q/k/v, and a per-group ``TGQ(MRQSoftmaxQ)`` region
+  split for the post-softmax probs derived from the group's mean
+  probability (region 1 sized to cover ~8x the mean — the bulk of the
+  concentrated-near-zero mass — with the fine step; the paper's searched
+  s1 is the fidelity pipeline's job). These pack via ``pack_int8_qk`` /
+  ``pack_int8_pv`` so w8a8 serving runs the int8 attention kernels.
 
 The result feeds ``repro.kernels.ops.convert_for_kernels`` directly; use
 ``run_ptq`` instead whenever sample quality is being measured.
@@ -30,7 +34,8 @@ import numpy as np
 from repro.core.calib import build_dit_calibration, dit_loss_fn
 from repro.core.contexts import CalibrationContext, RecordingContext
 from repro.core.quantizers import (
-    TGQ, ChannelQ, MRQSignedQ, UniformQ, channel_scale_from_absmax,
+    TGQ, ChannelQ, MRQSignedQ, MRQSoftmaxQ, SymQ, UniformQ,
+    channel_scale_from_absmax, sym_scale_from_absmax,
     uniform_params_from_range, weight_absmax,
 )
 from repro.diffusion import DiffusionCfg, make_schedule
@@ -77,6 +82,40 @@ def range_calibrate(params, dcfg: DiTCfg, dif: DiffusionCfg, sched=None,
     G = dif.tgq_groups
     half = 2 ** (abits - 1)
     qparams: Dict[str, dict] = {}
+
+    # ---- attention einsums: symmetric q/k/v + range-derived probs split --
+    for name, info in rec.registry.items():
+        if (info.kind != "einsum" or info.b_is_weight
+                or name not in cal.store):
+            continue
+        recs = cal.store[name]
+        groups = sorted({r["tg"] for r in recs})
+
+        def stat(f, key):
+            vals = {g: max(f(r[key]) for r in recs if r["tg"] == g)
+                    for g in groups}
+            return jnp.asarray([vals[_nearest(groups, g)] for g in range(G)],
+                               jnp.float32)
+
+        absmax = lambda a: max(float(np.max(np.abs(a))), 1e-6)
+        if info.a_kind == "post_softmax":
+            # region-1 span ~8x the group's mean prob (the concentrated
+            # near-zero mass gets the fine step; everything above rides
+            # the fixed coarse step s2 = 1/2^{k-1})
+            mean_p = stat(lambda a: float(np.mean(a)), "a")
+            s1 = jnp.clip(8.0 * mean_p / half,
+                          1.0 / (half * half * 8), 1.0 / half)
+            xq: Any = TGQ(MRQSoftmaxQ(s1=s1, bits=abits))
+        else:
+            xq = TGQ(SymQ(scale=sym_scale_from_absmax(stat(absmax, "a"),
+                                                      abits), bits=abits))
+        qparams[name] = {
+            "x": xq,
+            "b": TGQ(SymQ(scale=sym_scale_from_absmax(stat(absmax, "b"),
+                                                      abits), bits=abits)),
+        }
+
+    # ---- linears: per-group ranges --------------------------------------
     for name, info in rec.registry.items():
         if info.kind != "linear" or name not in cal.store:
             continue

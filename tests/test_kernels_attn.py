@@ -1,0 +1,434 @@
+"""Int8 attention kernels vs their oracles: non-MXU-aligned batched shape
+sweeps, TGQ group sweeps (bit-identical to per-group repacking), the
+codes-in/codes-out contract (softmax codes decode to exactly the fidelity
+qdq kernel's output; P·V consumes the codes directly), fused-vs-unfused
+equivalence of the whole attention block, QuantContext routing, and the
+compile-once serving contract with int8 attention inside the engine's
+scan. All Pallas calls run in interpret mode on CPU.
+
+Oracle comparisons jit the ref: the kernels execute under jit, where XLA
+may contract the epilogue's multiply-add into an FMA; the eager ref
+dispatches op-by-op and can differ by 1 ulp. Bit-identity is asserted
+against the jitted oracle (same fusion semantics).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.contexts import QuantContext
+from repro.core.quantizers import (
+    MRQSoftmaxQ, SymQ, TGQ, mrq_softmax_qdq, sym_act_qdq,
+)
+from repro.kernels import int8_bmm_pv, int8_bmm_qk, softmax_mrq_codes
+from repro.kernels import ops, ref
+
+
+BMM_SHAPES = [  # (B, M, N, D) — batched attention matrices, incl. ragged
+    (1, 8, 8, 8), (2, 16, 16, 16), (3, 7, 13, 5), (1, 130, 129, 17),
+    (4, 33, 65, 24), (2, 1, 5, 3),
+]
+
+
+def _jit_ref(fn, **static):
+    return jax.jit(functools.partial(fn, **static))
+
+
+def _qk_case(B, M, N, D, G, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, M, D)) * 2.0
+    k = jax.random.normal(k2, (B, N, D)) * 2.0
+    s_q = (jax.random.uniform(k3, (G, 1)) * 0.05 + 0.01).astype(jnp.float32)
+    s_k = (jax.random.uniform(k1, (G, 1)) * 0.05 + 0.01).astype(jnp.float32)
+    return q, k, s_q, s_k, s_q * s_k * 0.25
+
+
+def _pv_case(B, M, N, D, G, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    s1 = (jax.random.uniform(k1, (G, 1)) * 5e-3 + 5e-4).astype(jnp.float32)
+    codes = ref.softmax_mrq_codes_ref(
+        jax.random.normal(k2, (B, M, N)) * 4.0, s1, g=min(1, G - 1))
+    v = jax.random.normal(k3, (B, N, D)) * 1.5
+    s_v = (jax.random.uniform(k2, (G, 1)) * 0.05 + 0.01).astype(jnp.float32)
+    return codes, v, s1, s_v, s1 * s_v, (1.0 / 128) * s_v
+
+
+# ---------------------------------------------------------------------------
+# batched QK^T
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", BMM_SHAPES)
+def test_int8_bmm_qk_vs_ref(shape):
+    B, M, N, D = shape
+    q, k, s_q, s_k, scale = _qk_case(B, M, N, D, G=3, seed=sum(shape))
+    want_fn = _jit_ref(ref.int8_bmm_qk_ref)
+    for g in (0, 2):
+        out = int8_bmm_qk(q, k, s_q, s_k, scale, g=g, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(want_fn(q, k, s_q, s_k, scale, g=g)))
+
+
+@pytest.mark.parametrize("block", [(32, 64, 64), (128, 128, 256)])
+def test_int8_bmm_qk_block_shapes(block):
+    bm, bn, bk = block
+    q, k, s_q, s_k, scale = _qk_case(2, 100, 90, 48, G=2, seed=1)
+    out = int8_bmm_qk(q, k, s_q, s_k, scale, g=1, bm=bm, bn=bn, bk=bk,
+                      interpret=True)
+    want = _jit_ref(ref.int8_bmm_qk_ref)(q, k, s_q, s_k, scale, g=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_int8_bmm_shared_kv_batch():
+    """GQA: a q-side batch that is rep x the kv-side batch gathers the
+    SHARED kv tile via the b // rep index map — bit-identical to feeding
+    materialized kv copies."""
+    B, rep, M, N, D = 2, 3, 9, 11, 8
+    q, _, s_q, s_k, scale = _qk_case(B * rep, M, N, D, G=2, seed=11)
+    k = jax.random.normal(jax.random.PRNGKey(12), (B, N, D)) * 2
+    k_rep = jnp.repeat(k, rep, axis=0)
+    out = int8_bmm_qk(q, k, s_q, s_k, scale, g=1, interpret=True)
+    want = int8_bmm_qk(q, k_rep, s_q, s_k, scale, g=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    codes, _, s1, s_v, scale1, scale2 = _pv_case(B * rep, M, N, D, G=2,
+                                                 seed=13)
+    v = jax.random.normal(jax.random.PRNGKey(14), (B, N, D))
+    out = int8_bmm_pv(codes, v, s_v, scale1, scale2, g=0, interpret=True)
+    want = int8_bmm_pv(codes, jnp.repeat(v, rep, axis=0), s_v, scale1,
+                       scale2, g=0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_int8_attention_gqa_no_materialized_kv():
+    """ops.int8_attention with G>1 query groups equals the composed
+    oracle fed materialized kv copies (the kernels avoid the copies)."""
+    B, Sq, Skv, Hk, Gq, hd = 2, 6, 10, 2, 3, 8
+    qk_qp, pv_qp = _attn_qparams(2, seed=6)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(k1, (B, Sq, Hk, Gq, hd)) * 2
+    k = jax.random.normal(k2, (B, Skv, Hk, hd)) * 2
+    v = jax.random.normal(k3, (B, Skv, Hk, hd))
+    out = ops.int8_attention(q, k, v, qk_pack, pv_pack, scale=hd ** -0.5,
+                             tgroup=1)
+    BHG = B * Hk * Gq
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(BHG, Sq, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Hk, Gq, Skv, hd)).reshape(BHG, Skv, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Hk, Gq, Skv, hd)).reshape(BHG, Skv, hd)
+    want = _jit_ref(ref.int8_attention_ref)(qf, kf, vf, qk_pack, pv_pack,
+                                            scale=hd ** -0.5, g=1)
+    want = want.reshape(B, Hk, Gq, Sq, hd).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_int8_bmm_qk_matches_unfused_pipeline():
+    """Fused == standalone symmetric quantize + jnp s32 batched matmul."""
+    B, M, N, D = 2, 24, 40, 16
+    q, k, s_q, s_k, scale = _qk_case(B, M, N, D, G=2, seed=7)
+    g = 1
+    q8 = ref.sym_quantize_int8_ref(q, s_q[g, 0])
+    k8 = ref.sym_quantize_int8_ref(k, s_k[g, 0])
+    acc = jax.lax.dot_general(q8.astype(jnp.int32), k8.astype(jnp.int32),
+                              (((2,), (2,)), ((0,), (0,))),
+                              preferred_element_type=jnp.int32)
+    unfused = acc.astype(jnp.float32) * scale[g, 0]
+    fused = int8_bmm_qk(q, k, s_q, s_k, scale, g=g, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# ---------------------------------------------------------------------------
+# softmax -> MRQ codes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(6, 16), (2, 3, 7, 13), (1, 257),
+                                   (130, 129)])
+def test_softmax_mrq_codes_vs_ref(shape):
+    scores = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 4.0
+    s1 = jnp.asarray([[3e-4], [2e-3], [1.0 / 128]], jnp.float32)
+    for g in range(3):
+        out = softmax_mrq_codes(scores, s1, g=g, interpret=True)
+        want = ref.softmax_mrq_codes_ref(scores, s1, g=g)
+        assert out.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_codes_decode_to_fidelity_qdq():
+    """Region-signed codes are a LOSSLESS encoding of the fidelity
+    quant-dequant: decode(codes) == mrq_softmax_qdq(softmax(scores))."""
+    scores = jax.random.normal(jax.random.PRNGKey(3), (4, 9, 31)) * 5.0
+    s1 = jnp.asarray([[1e-3], [4e-3]], jnp.float32)
+    for g in range(2):
+        codes = softmax_mrq_codes(scores, s1, g=g, interpret=True)
+        dec = ref.mrq_codes_decode_ref(codes, s1, g=g)
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        np.testing.assert_array_equal(
+            np.asarray(dec), np.asarray(mrq_softmax_qdq(p, s1[g, 0], 8)))
+
+
+def test_codes_region2_range_fits_signed_byte():
+    """A saturated row (one prob ~= 1) must hit region-2 code 2^{k-1} =
+    128 — representable only because the encoding NEGATES region-2."""
+    scores = jnp.array([[40.0, 0.0, 0.0, 0.0]])
+    s1 = jnp.asarray([[1e-3]], jnp.float32)
+    codes = np.asarray(softmax_mrq_codes(scores, s1, g=0, interpret=True))
+    assert codes[0, 0] == -128                  # region 2, code 128
+    dec = ref.mrq_codes_decode_ref(codes, s1, g=0)
+    assert float(dec[0, 0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# batched dual-region P·V
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", BMM_SHAPES)
+def test_int8_bmm_pv_vs_ref(shape):
+    B, M, N, D = shape
+    codes, v, s1, s_v, scale1, scale2 = _pv_case(B, M, N, D, G=3,
+                                                 seed=sum(shape))
+    want_fn = _jit_ref(ref.int8_bmm_pv_ref)
+    for g in (0, 2):
+        out = int8_bmm_pv(codes, v, s_v, scale1, scale2, g=g, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out),
+            np.asarray(want_fn(codes, v, s_v, scale1, scale2, g=g)))
+
+
+def test_int8_bmm_pv_matches_two_region_decomposition():
+    """The dual-accumulator kernel reproduces the unfused two-region
+    decomposition (separate region matmuls, combined in fp)."""
+    B, M, N, D = 2, 16, 24, 8
+    codes, v, s1, s_v, scale1, scale2 = _pv_case(B, M, N, D, G=2, seed=5)
+    g = 1
+
+    @jax.jit
+    def two_pass(codes, v):
+        c = codes.astype(jnp.int32)
+        v8 = ref.sym_quantize_int8_ref(v, s_v[g, 0]).astype(jnp.int32)
+        dims = (((2,), (1,)), ((0,), (0,)))
+        y1 = jax.lax.dot_general(jnp.maximum(c, 0), v8, dims,
+                                 preferred_element_type=jnp.int32)
+        y2 = jax.lax.dot_general(jnp.maximum(-c, 0), v8, dims,
+                                 preferred_element_type=jnp.int32)
+        return (y1.astype(jnp.float32) * scale1[g, 0]
+                + y2.astype(jnp.float32) * scale2[g, 0])
+
+    fused = int8_bmm_pv(codes, v, s_v, scale1, scale2, g=g, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(two_pass(codes, v)))
+
+
+# ---------------------------------------------------------------------------
+# TGQ packing: group sweep bit-identical to per-group repacking
+# ---------------------------------------------------------------------------
+def _attn_qparams(G, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    qk = {"x": TGQ(SymQ(scale=jnp.linspace(0.01, 0.05, G), bits=8)),
+          "b": TGQ(SymQ(scale=jnp.linspace(0.02, 0.06, G), bits=8))}
+    pv = {"x": TGQ(MRQSoftmaxQ(s1=jnp.geomspace(3e-4, 6e-3, G), bits=8)),
+          "b": TGQ(SymQ(scale=jnp.linspace(0.01, 0.04, G), bits=8))}
+    return qk, pv
+
+
+def test_tgq_attention_pack_group_sweep():
+    """Every group g of the stacked attention packs is bit-identical to
+    repacking the scalar group-g quantizers on their own."""
+    G = 5
+    qk_qp, pv_qp = _attn_qparams(G)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    assert qk_pack["groups"] == G and pv_pack["groups"] == G
+
+    B, Sq, Hk, Gq, hd = 2, 9, 3, 1, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (B, Sq, Hk, Gq, hd)) * 2
+    k = jax.random.normal(k2, (B, Sq, Hk, hd)) * 2
+    v = jax.random.normal(k3, (B, Sq, Hk, hd))
+    for g in range(G):
+        qk_g = ops.pack_int8_qk(
+            {"x": qk_qp["x"].select(g), "b": qk_qp["b"].select(g)})
+        pv_g = ops.pack_int8_pv(
+            {"x": pv_qp["x"].select(g), "b": pv_qp["b"].select(g)})
+        assert qk_g["groups"] == 1 and pv_g["groups"] == 1
+        y_tgq = ops.int8_attention(q, k, v, qk_pack, pv_pack,
+                                   scale=hd ** -0.5, tgroup=g)
+        y_repack = ops.int8_attention(q, k, v, qk_g, pv_g, scale=hd ** -0.5)
+        np.testing.assert_array_equal(np.asarray(y_tgq), np.asarray(y_repack))
+
+
+def test_pack_broadcasts_mixed_group_counts():
+    """Per-tensor (G=1) v/k quantizers broadcast against TGQ probs/q —
+    the HO-search output shape (per-tensor SymQ + TGQ softmax)."""
+    G = 4
+    qk_qp = {"x": TGQ(SymQ(scale=jnp.linspace(0.01, 0.05, G), bits=8)),
+             "b": SymQ(scale=jnp.float32(0.03), bits=8)}
+    pv_qp = {"x": TGQ(MRQSoftmaxQ(s1=jnp.geomspace(3e-4, 6e-3, G), bits=8)),
+             "b": SymQ(scale=jnp.float32(0.02), bits=8)}
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    assert qk_pack["groups"] == G and pv_pack["groups"] == G
+    assert qk_pack["s_k"].shape == (G, 1)
+    assert pv_pack["scale2"].shape == (G, 1)
+
+
+def test_pack_rejects_non_symmetric_operands():
+    from repro.core.quantizers import UniformQ
+    assert ops.pack_int8_qk({"x": UniformQ(jnp.float32(0.1), 3.0, 8),
+                             "b": SymQ(jnp.float32(0.1), 8)}) is None
+    assert ops.pack_int8_pv({"x": SymQ(jnp.float32(0.1), 8),
+                             "b": SymQ(jnp.float32(0.1), 8)}) is None
+
+
+# ---------------------------------------------------------------------------
+# whole-block equivalence: kernels == composed oracle == fake-quant seams
+# ---------------------------------------------------------------------------
+def test_int8_attention_matches_composed_oracle():
+    """ops.int8_attention over the GQA layout == the flattened composition
+    of the three jitted oracles (incl. mask + softmax scale folding)."""
+    B, Sq, Skv, Hk, Gq, hd = 2, 7, 11, 2, 2, 8
+    G = 3
+    qk_qp, pv_qp = _attn_qparams(G, seed=2)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(k1, (B, Sq, Hk, Gq, hd)) * 2
+    k = jax.random.normal(k2, (B, Skv, Hk, hd)) * 2
+    v = jax.random.normal(k3, (B, Skv, Hk, hd))
+    mask = jax.random.bernoulli(k4, 0.8, (B, 1, 1, Sq, Skv))
+    scale = hd ** -0.5
+
+    out = ops.int8_attention(q, k, v, qk_pack, pv_pack, mask=mask,
+                             scale=scale, tgroup=1)
+
+    BHG = B * Hk * Gq
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(BHG, Sq, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Hk, Gq, Skv, hd)).reshape(BHG, Skv, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Hk, Gq, Skv, hd)).reshape(BHG, Skv, hd)
+    mf = jnp.broadcast_to(mask, (B, Hk, Gq, Sq, Skv)).reshape(BHG, Sq, Skv)
+    want = _jit_ref(ref.int8_attention_ref)(qf, kf, vf, qk_pack, pv_pack,
+                                            mask=mf, scale=scale, g=1)
+    want = want.reshape(B, Hk, Gq, Sq, hd).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_quant_context_attention_routes_through_kernels():
+    """QuantContext(kernel=True).attention with both packs present takes
+    the int8 path; without kernel it composes the fake-quant seams, and
+    the two agree closely (same quantizers, int vs fp arithmetic)."""
+    G = 4
+    qk_qp, pv_qp = _attn_qparams(G, seed=3)
+    qparams = {"attn/qk": dict(qk_qp, int8_qk=ops.pack_int8_qk(qk_qp)),
+               "attn/pv": dict(pv_qp, int8_pv=ops.pack_int8_pv(pv_qp))}
+    B, S, Hk, hd = 2, 8, 2, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(k1, (B, S, Hk, 1, hd))
+    k = jax.random.normal(k2, (B, S, Hk, hd))
+    v = jax.random.normal(k3, (B, S, Hk, hd))
+
+    calls = []
+    orig = ops.int8_attention
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    ops.int8_attention, restore = spy, orig
+    try:
+        for g in range(G):
+            y_kern = QuantContext(qparams=qparams, kernel=True,
+                                  tgroup=g).attention(
+                "attn", q, k, v, scale=hd ** -0.5)
+            y_fake = QuantContext(qparams=qparams, tgroup=g).attention(
+                "attn", q, k, v, scale=hd ** -0.5)
+            np.testing.assert_allclose(np.asarray(y_kern),
+                                       np.asarray(y_fake),
+                                       rtol=1e-4, atol=1e-4)
+    finally:
+        ops.int8_attention = restore
+    assert len(calls) == G, "kernel=True must lower the attention seam"
+
+    # missing packs -> fall back to the composed fake-quant seams
+    no_pack = {"attn/qk": dict(qk_qp), "attn/pv": dict(pv_qp)}
+    y_fb = QuantContext(qparams=no_pack, kernel=True, tgroup=0).attention(
+        "attn", q, k, v, scale=hd ** -0.5)
+    y_ref = QuantContext(qparams=no_pack, tgroup=0).attention(
+        "attn", q, k, v, scale=hd ** -0.5)
+    np.testing.assert_array_equal(np.asarray(y_fb), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# serving: one compiled executable with int8 attention inside the scan
+# ---------------------------------------------------------------------------
+def test_engine_w8a8_runs_int8_attention_compile_once(tiny_dit, monkeypatch):
+    """The engine's w8a8 step executable runs QK^T, softmax->MRQ codes,
+    and P·V through the new kernels, traces ONCE across all timestep
+    groups of the scan, and produces finite samples."""
+    from repro.core import make_quant_context
+    from repro.diffusion import DiffusionCfg, make_schedule
+    from repro.kernels import ops as kops
+    from repro.models import dit_apply
+    from repro.serving import GenRequest, ServeEngine, range_calibrate
+
+    cfg, p = tiny_dit
+    dif = DiffusionCfg(T=40, tgq_groups=4)
+    sched = make_schedule(dif)
+    qp, weights = range_calibrate(p, cfg, dif, sched, n_per_group=1, batch=1)
+    qp2 = kops.convert_for_kernels(qp, weights)
+    n_qk = sum(1 for v in qp2.values() if "int8_qk" in v)
+    n_pv = sum(1 for v in qp2.values() if "int8_pv" in v)
+    assert n_qk == cfg.n_layers and n_pv == cfg.n_layers, \
+        "range calibration must pack every block's attention"
+    assert all(v["int8_pv"]["groups"] == dif.tgq_groups
+               for v in qp2.values() if "int8_pv" in v)
+    ctx = make_quant_context(qp2, kernel=True)
+
+    calls = {"qk": 0, "sm": 0, "pv": 0}
+    for key, fname in (("qk", "int8_bmm_qk"), ("sm", "softmax_mrq_codes"),
+                       ("pv", "int8_bmm_pv")):
+        orig = getattr(kops, fname)
+        monkeypatch.setattr(kops, fname, functools.partial(
+            lambda orig, key, *a, **kw: (
+                calls.__setitem__(key, calls[key] + 1), orig(*a, **kw))[1],
+            orig, key))
+
+    traces = []
+    orig_apply = dit_apply
+
+    def traced_apply(*a, **kw):
+        traces.append(1)
+        return orig_apply(*a, **kw)
+
+    import repro.serving.engine as eng_mod
+    monkeypatch.setattr(eng_mod, "dit_apply", traced_apply)
+
+    eng = ServeEngine(p, cfg, dif, sched, ctx=ctx, microbatch=2,
+                      step_buckets=(4,))
+    reqs = [GenRequest(request_id=i, label=i % cfg.n_classes, steps=4,
+                       cfg_scale=1.5, seed=40 + i) for i in range(2)]
+    res = eng.serve(reqs)
+    # steps=4 over T=40 with 4 groups crosses timestep groups; the scan
+    # body (and the kernels inside it) must have traced exactly once.
+    assert len(traces) == 1, "sampler retraced across timestep groups"
+    assert calls["qk"] == cfg.n_layers, calls
+    assert calls["sm"] == cfg.n_layers, calls
+    assert calls["pv"] == cfg.n_layers, calls
+    s = np.stack([res[i].sample for i in range(2)])
+    assert np.isfinite(s).all()
+
+
+# ---------------------------------------------------------------------------
+# modeled probs-traffic floor (the structural saving codes buy)
+# ---------------------------------------------------------------------------
+def test_attention_traffic_model_floors():
+    from benchmarks.kernel_micro import traffic_attention_probs
+    # DiT-XL/2-shaped attention: 256 tokens, 16 heads, hd 72
+    t = traffic_attention_probs(BH=16, S=256, D=72)
+    # acceptance floor: >=2x less probs traffic for the fused codes path
+    assert t["probs_unfused"] / t["probs_fused"] >= 2.0
+    # int8 write + int8 read vs fp32 write + fp32 read is exactly 4x
+    assert t["probs_unfused"] / t["probs_fused"] == 4.0
+    # and the whole attention tail (softmax -> out) must win too
+    assert t["unfused"] / t["fused"] >= 1.5
