@@ -1,4 +1,5 @@
-.PHONY: verify verify-all kernel-micro bench-attn serve-throughput docs-check
+.PHONY: verify verify-all kernel-micro bench-attn serve-throughput \
+	docs-check artifact-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -22,3 +23,14 @@ serve-throughput:
 # docs link/anchor check + execution of the `# ci-smoke` quickstart lines
 docs-check:
 	python tools/check_docs.py --run README.md docs/*.md
+
+# the quantization-artifact lifecycle on CPU: quantize w8a8 -> save ->
+# load in a FRESH process (no calibration) -> serve 2 requests
+ARTIFACT_DIR ?= /tmp/tqdit-artifact-smoke
+artifact-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+		--requests 2 --microbatch 2 --steps 2 --quantize w8a8 \
+		--save-artifact $(ARTIFACT_DIR)
+	PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+		--requests 2 --microbatch 2 --steps 2 --quantize w8a8 \
+		--load-artifact $(ARTIFACT_DIR)

@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (build_dit_calibration, dit_loss_fn,
-                        make_quant_context, run_ptq)
+from repro.core import build_dit_calibration, dit_loss_fn, run_ptq
 from repro.core.baselines import SCHEMES
 from repro.core.metrics import ClassProxy, FeatureNet, fd_score, sfd_score, \
     inception_score_proxy

@@ -8,22 +8,30 @@ Two sections, same philosophy as ``kernel_micro``:
    reads x, reads W, writes y in f32 (the repo's serving dtype); the
    fused-int8 path reads x in f32 but W as int8 codes and quantizes /
    dequantizes in VMEM (``int8_matmul_fq`` / ``int8_matmul_mrq_fq``
-   traffic, see ``kernel_micro``). Attention einsums + softmax stay fp on
-   BOTH paths (no int8 einsum kernel); elementwise chains (LN, modulate,
-   GELU, residuals) are XLA-fused into their surrounding ops on both
-   paths and carry no modeled traffic of their own. Per-op time is
-   ``max(bytes/hbm_bw, flops/peak)``; int8 MACs run at the MXU's 2x int8
-   throughput. Serving is weight-bound at small per-device batch, which
-   is exactly where the 4x weight-byte reduction pays: the benchmark
-   asserts >= 1.5x requests/sec at microbatch == n_devices (one request
-   per device, the latency-optimized serving point).
+   traffic, see ``kernel_micro``). Attention is charged per path: fp pays
+   the f32 probs round-trip through HBM; the int8 path uses the int8
+   attention kernels' traffic model (``kernel_micro``'s
+   ``traffic_attention_qk`` / ``traffic_attention_probs`` — q/k/v read
+   f32 once and quantized in VMEM, the (S,S) probs tensor moving as int8
+   CODES) at the MXU's 2x int8 throughput — the roofline and the kernel
+   micro-bench share ONE attention traffic model, so the end-to-end
+   ratio is honest rather than attention-at-fp conservative.
+   Elementwise chains (LN, modulate, GELU, residuals) are XLA-fused into
+   their surrounding ops on both paths and carry no modeled traffic of
+   their own. Per-op time is ``max(bytes/hbm_bw, flops/peak)``. Serving
+   is weight-bound at small per-device batch, which is exactly where the
+   4x weight-byte reduction pays: the benchmark asserts >= 1.5x
+   requests/sec at microbatch == n_devices (one request per device, the
+   latency-optimized serving point).
 
 2. **Measured (this host)** — the small serving DiT actually runs through
-   ``ServeEngine`` fp and fused-int8 on forced host devices. CPU
-   wall-clock for the int8 path is interpret-mode (meaningless as perf),
-   so this section is a correctness gate: all requests served, and the
-   SHARDED w8a8 samples are bit-identical to the single-device w8a8
-   samples for the same seeds.
+   ``ServeEngine`` fp and fused-int8 on forced host devices, quantized
+   through the unified API (``repro.quant.quantize`` ->
+   ``QuantArtifact``). CPU wall-clock for the int8 path is
+   interpret-mode (meaningless as perf), so this section is a
+   correctness gate: all requests served, and the SHARDED w8a8 samples
+   are bit-identical to the single-device w8a8 samples for the same
+   seeds.
 
 Run: PYTHONPATH=src:. python -m benchmarks.serve_throughput
 """
@@ -34,6 +42,9 @@ from typing import Dict
 
 import numpy as np
 
+from benchmarks.kernel_micro import (
+    traffic_attention_probs, traffic_attention_qk,
+)
 from repro.launch.mesh import HW
 from repro.models.dit import DiTCfg
 
@@ -59,17 +70,29 @@ def _linear(M: int, K: int, N: int, path: str) -> Dict[str, float]:
             "peak": HW["peak_int8_ops"]}
 
 
-def _attention(R: int, T: int, d: int, H: int) -> Dict[str, float]:
-    """QK^T + softmax + P.V for R samples of T tokens — fp on both paths."""
+def _attention(R: int, T: int, d: int, H: int, path: str) -> Dict[str, float]:
+    """QK^T + softmax + P.V for R samples of T tokens.
+
+    fp: f32 q/k/v reads, f32 scores round-trip, and the (S,S) f32 probs
+    written + read through HBM. int8: the serving attention kernels
+    (``int8_bmm_qk`` -> ``softmax_mrq_codes`` -> ``int8_bmm_pv``) — the
+    SAME traffic model ``kernel_micro --attn`` reports (q/k/v read f32
+    once, quantized in VMEM; probs travel as int8 codes), with both bmms
+    at the MXU's 2x int8 throughput.
+    """
     hd = d // H
-    probs = R * H * T * T
-    qk = {"bytes": 4 * (2 * R * T * d + probs),
-          "flops": 2.0 * probs * hd}
-    sm = {"bytes": 4 * 2 * probs, "flops": 0.0}
-    pv = {"bytes": 4 * (probs + 2 * R * T * d), "flops": 2.0 * probs * hd}
-    return {"bytes": qk["bytes"] + sm["bytes"] + pv["bytes"],
-            "flops": qk["flops"] + sm["flops"] + pv["flops"],
-            "peak": HW["peak_bf16_flops"]}
+    BH = R * H
+    probs = BH * T * T
+    flops = 2 * 2.0 * probs * hd                 # QK^T + P.V MACs
+    if path == "fp":
+        qk = 4 * (2 * R * T * d + probs)
+        sm = 4 * 2 * probs
+        pv = 4 * (probs + 2 * R * T * d)
+        return {"bytes": qk + sm + pv, "flops": flops,
+                "peak": HW["peak_bf16_flops"]}
+    return {"bytes": traffic_attention_qk(BH, T, hd)["fused"]
+            + traffic_attention_probs(BH, T, hd)["fused"],
+            "flops": flops, "peak": HW["peak_int8_ops"]}
 
 
 def modeled_dit_step(cfg: DiTCfg, b_local: int, path: str) -> Dict[str, float]:
@@ -94,7 +117,7 @@ def modeled_dit_step(cfg: DiTCfg, b_local: int, path: str) -> Dict[str, float]:
             _linear(Mt, d, d, path),                    # proj
             _linear(Mt, d, f, path),                    # fc1
             _linear(Mt, f, d, path),                    # fc2 (MRQ single-pass)
-            _attention(R, T, d, cfg.n_heads),           # fp on both paths
+            _attention(R, T, d, cfg.n_heads, path),     # per-path traffic
         ]
     out = {"bytes": sum(o["bytes"] for o in ops),
            "flops": sum(o["flops"] for o in ops)}
@@ -127,12 +150,11 @@ def main() -> None:
     import time
 
     from benchmarks import common as C
-    from repro.core import make_quant_context
     from repro.diffusion import DiffusionCfg, make_schedule
-    from repro.kernels import ops as kops
     from repro.launch.mesh import make_serving_mesh
     from repro.models import dit_init
-    from repro.serving import GenRequest, ServeEngine, range_calibrate
+    from repro.quant import QuantRecipe, quantize
+    from repro.serving import GenRequest, ServeEngine
 
     rows = [("section", "path", "batch", "req_per_s", "ms_per_step",
              "speedup")]
@@ -162,10 +184,11 @@ def main() -> None:
         params)
     dif = DiffusionCfg(T=100, tgq_groups=4)
     sched = make_schedule(dif)
-    qp, weights = range_calibrate(params, cfg, dif, sched,
-                                  n_per_group=1, batch=1)
-    ctx8 = make_quant_context(kops.convert_for_kernels(qp, weights),
-                              kernel=True)
+    artifact = quantize(params, cfg, dif,
+                        QuantRecipe(bits="w8a8", method="range",
+                                    n_per_group=1, calib_batch=1),
+                        sched=sched)
+    ctx8 = artifact.context()
     mesh = make_serving_mesh()          # all forced devices
     run_steps = 8
     reqs = [GenRequest(request_id=i, label=i % cfg.n_classes, steps=run_steps,
@@ -200,8 +223,9 @@ def main() -> None:
         f"fused-int8 modeled speedup {floor_ratio:.2f}x < 1.5x at "
         f"batch == n_devices")
     print(f"fused-int8 serving: {floor_ratio:.2f}x requests/sec over fp at "
-          f"batch {N_DEV} on {N_DEV} devices (modeled, DiT-XL/2); "
-          f"sharded == single-device: {identical}")
+          f"batch {N_DEV} on {N_DEV} devices (modeled, DiT-XL/2, int8 "
+          f"attention traffic included); sharded == single-device: "
+          f"{identical}")
 
 
 if __name__ == "__main__":

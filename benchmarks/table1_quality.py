@@ -9,7 +9,7 @@ from __future__ import annotations
 import sys
 
 from benchmarks import common as C
-from repro.core import make_quant_context
+from repro.core import QuantContext
 
 STEPS = 40
 SCHEMES = ["q_diffusion", "ptqd", "ptq4dit", "tq_dit"]
@@ -28,7 +28,7 @@ def main(bits_list=(8, 6), steps=STEPS, table="table1") -> None:
     for bits in bits_list:
         for scheme in SCHEMES:
             qp, rep = C.calibrate(scheme, bits, params, cfg, calib)
-            ctx = make_quant_context(qp)
+            ctx = QuantContext(qparams=qp)
             gen, _ = C.generate(params, cfg, ctx=ctx, steps=steps)
             s = C.score(gen)
             mse = C.noise_mse(params, cfg, ctx)

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 from benchmarks import common as C
-from repro.core import make_quant_context
+from repro.core import QuantContext
 
 STEPS = 40
 ABLATION = ["baseline", "+HO", "+HO+MRQ", "tq_dit"]
@@ -21,7 +21,7 @@ def main() -> None:
 
     for scheme in ABLATION:
         qp, _ = C.calibrate(scheme, 6, params, cfg, calib)
-        ctx = make_quant_context(qp)
+        ctx = QuantContext(qparams=qp)
         gen, _ = C.generate(params, cfg, ctx=ctx, steps=STEPS)
         s = C.score(gen)
         mse = C.noise_mse(params, cfg, ctx)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core import (build_lm_calibration, lm_loss_fn, make_quant_context,
+from repro.core import (QuantContext, build_lm_calibration, lm_loss_fn,
                         run_ptq)
 from repro.core.baselines import SCHEMES
 from repro.data import TokenPipeline
@@ -38,7 +38,7 @@ for bits in (8, 6):
         t0 = time.time()
         qp, rep = run_ptq(loss, calib,
                           SCHEMES[scheme](bits, bits, n_alpha=10, rounds=2))
-        ctx = make_quant_context(qp)
+        ctx = QuantContext(qparams=qp)
         q = sum(float(loss(ctx, b)) for b, _ in evalb) / len(evalb)
         print(f"W{bits}A{bits} {scheme:9s}: CE {q:.4f} "
               f"(drift {q-fp:+.4f}, calib {rep['wall_s']:.0f}s)")

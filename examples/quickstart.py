@@ -9,9 +9,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import (build_dit_calibration, dit_loss_fn,
-                        make_quant_context, run_ptq)
-from repro.core.baselines import tq_dit
+from repro.core import build_dit_calibration, dit_loss_fn
+from repro.quant import QuantRecipe, quantize
 from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule, q_sample
 from repro.models import DiTCfg, dit_apply, dit_init
 from repro.optim import adamw, apply_updates
@@ -51,9 +50,11 @@ calib = build_dit_calibration(
     params, cfg, dif, sched,
     lambda n, k: jax.random.normal(k, (n, 8, 8, 4)) * 0.5,
     jax.random.PRNGKey(1), n_per_group=4, batch=4)
-qparams, report = run_ptq(dit_loss_fn(params, cfg), calib,
-                          tq_dit(8, 8, tgq_groups=4, n_alpha=8, rounds=2))
-print(f"calibrated {report['n_quantized']} ops in {report['wall_s']:.1f}s")
+recipe = QuantRecipe(bits="w8a8", method="ho", tgq_groups=4, n_alpha=8,
+                     rounds=2)
+artifact = quantize(params, cfg, dif, recipe, calib_data=calib, sched=sched)
+print(f"calibrated {artifact.summary()} "
+      f"in {artifact.meta['calib']['wall_s']:.1f}s")
 
 # --- 4. sample FP vs quantized ----------------------------------------------
 eps = lambda x, t, y, ctx: dit_apply(params, cfg, x, t, y, ctx=ctx)
@@ -61,6 +62,6 @@ y = jnp.arange(4) % cfg.n_classes
 k = jax.random.PRNGKey(2)
 fp = ddpm_sample(eps, dif, sched, (4, 8, 8, 4), y, k, steps=20)
 qt = ddpm_sample(eps, dif, sched, (4, 8, 8, 4), y, k, steps=20,
-                 ctx=make_quant_context(qparams))
+                 ctx=artifact.context(kernel=False))   # fake-quant fidelity
 drift = float(jnp.abs(fp - qt).mean() / jnp.abs(fp).mean())
 print(f"W8A8 sample drift vs FP: {drift:.4f} (should be small)")

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import make_quant_context
+from repro.core import QuantContext
 from repro.core.contexts import CalibrationContext, RecordingContext
 from repro.core import dit_loss_fn
 from repro.diffusion import ddpm_sample, make_schedule
@@ -56,9 +56,9 @@ def serve(requests, ctx, kernel=False, steps=25):
 reqs = list(range(8)) * 2
 from repro.nn.ctx import FPContext
 for name, ctx in [("FP", FPContext()),
-                  ("W8A8 fake-quant", make_quant_context(qp)),
-                  ("W8A8 int8-kernel", make_quant_context(qp_kernel,
-                                                          kernel=True))]:
+                  ("W8A8 fake-quant", QuantContext(qparams=qp)),
+                  ("W8A8 int8-kernel", QuantContext(qparams=qp_kernel,
+                                                    kernel=True))]:
     t0 = time.time()
     out = serve(reqs, ctx)
     out.block_until_ready()
@@ -68,5 +68,5 @@ for name, ctx in [("FP", FPContext()),
 
 # quality check: quantized output close to FP
 fp = serve(reqs, FPContext())
-qt = serve(reqs, make_quant_context(qp))
+qt = serve(reqs, QuantContext(qparams=qp))
 print(f"W8A8 vs FP drift: {float(jnp.abs(fp-qt).mean()/jnp.abs(fp).mean()):.4f}")

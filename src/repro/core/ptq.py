@@ -15,6 +15,12 @@ The result is a ``qparams`` dict consumed by
 ('int8'/'int8_mrq') AND every attention einsum pair ('int8_qk' on
 ``attn/qk``, 'int8_pv' on ``attn/pv``) — the serving bundle the fused
 int8 kernels gather per timestep group at sample time.
+
+This module is the 'ho' pipeline BEHIND the unified API: prefer
+``repro.quant.quantize(params, cfg, dif, QuantRecipe(method="ho"))``,
+which runs this driver, packs the kernels, and returns a serializable
+``QuantArtifact``. ``run_ptq`` stays public for research loops that want
+the raw (qparams, report) pair (ablation sweeps, custom calibration).
 """
 from __future__ import annotations
 
@@ -219,4 +225,17 @@ def _balance_vector(X: np.ndarray, W: np.ndarray, alpha: float) -> np.ndarray:
 
 def make_quant_context(qparams: Dict[str, dict], kernel: bool = False
                        ) -> QuantContext:
+    """DEPRECATED shim for out-of-tree callers.
+
+    The unified API replaced this: ``repro.quant.quantize`` returns a
+    ``QuantArtifact`` whose ``.context(kernel=...)`` is the execution
+    context (and which saves/loads, so calibration survives the process).
+    For a raw qparams dict, construct ``QuantContext(qparams=qp,
+    kernel=...)`` directly.
+    """
+    import warnings
+    warnings.warn(
+        "make_quant_context is deprecated: use repro.quant.quantize(...)."
+        "context(...) (or QuantContext(qparams=..., kernel=...) for a raw "
+        "qparams dict)", DeprecationWarning, stacklevel=2)
     return QuantContext(qparams=qparams, kernel=kernel)

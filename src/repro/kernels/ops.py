@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.quantizers import (
     ChannelQ, MRQSignedQ, MRQSoftmaxQ, SymQ, TGQ, UniformQ,
 )
+from repro.quant.groups import resolve_group
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
@@ -251,10 +252,9 @@ def quantize_int8(x, scale, zero):
 
 
 def _group_index(pack: dict, tgroup):
-    """Resolve the (possibly traced) TGQ group into a safe kernel index."""
-    if tgroup is None or pack["groups"] == 1:
-        return 0
-    return jnp.clip(jnp.asarray(tgroup, jnp.int32), 0, pack["groups"] - 1)
+    """Resolve the (possibly traced) TGQ group into a safe kernel index —
+    the exact/clamp half of the shared ``repro.quant.groups`` contract."""
+    return resolve_group(tgroup, pack["groups"])
 
 
 def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):

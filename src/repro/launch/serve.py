@@ -6,9 +6,23 @@ CFG-paired) and executed data-parallel via shard_map; ``--quantize w8a8``
 serves through the fused int8 Pallas kernels. LM archs keep the simple
 batched-decode path.
 
+Quantized serving goes through the unified API (``repro.quant``):
+``--quantize w8a8`` builds a ``QuantRecipe``, runs ``quantize()`` and
+serves the returned ``QuantArtifact``; ``--save-artifact DIR`` persists
+it, and ``--load-artifact DIR`` cold-starts a later process from disk —
+the expensive calibration never reruns, and the served samples are
+bit-identical to the calibrating process (asserted in
+``tests/test_quant_api.py``).
+
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
       --requests 8 --microbatch 4 --steps 4 --quantize w8a8
+  PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+      --requests 8 --microbatch 4 --steps 4 --quantize w8a8 \
+      --save-artifact /tmp/dit_w8a8
+  PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+      --requests 8 --microbatch 4 --steps 4 --quantize w8a8 \
+      --load-artifact /tmp/dit_w8a8
   PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
       --requests 8 --dp 2 --cfg-scale 1.5
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
@@ -47,12 +61,29 @@ def main() -> None:
     # omitted entirely, and `--quantize` with no sane sentinel rejected the
     # default-unset path on some invocations. "none" is the sentinel.
     ap.add_argument("--quantize", default="none",
-                    choices=("none", "w8a8", "w6a6"))
+                    choices=("none", "w8a8", "w6a6", "w4a4"))
     ap.add_argument("--calib", default="range", choices=("range", "ho"),
                     help="w8a8/w6a6 calibration: fast range-only (serving "
                          "bring-up) or the paper's full HO search")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="after calibrating, persist the QuantArtifact "
+                         "(qparams + int8 packs + recipe + provenance) so "
+                         "later processes cold-start with --load-artifact")
+    ap.add_argument("--load-artifact", default=None, metavar="DIR",
+                    help="serve from a saved QuantArtifact — NO calibration "
+                         "runs in this process; with --quantize the "
+                         "artifact's recorded bits must match")
+    ap.add_argument("--dump-samples", default=None, metavar="NPY",
+                    help="np.save the served samples (request-id order) — "
+                         "used by tests to assert bit-identity across "
+                         "artifact save/load")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.save_artifact is not None and (args.quantize == "none"
+                                           or args.load_artifact is not None):
+        ap.error("--save-artifact requires --quantize (and excludes "
+                 "--load-artifact): there is no freshly calibrated "
+                 "artifact to save otherwise")
 
     if args.dp > 1:
         os.environ["XLA_FLAGS"] = (
@@ -79,47 +110,51 @@ def main() -> None:
         params = dit_init(key, cfg)
         dif = DiffusionCfg(T=1000)
         sched = make_schedule(dif)
-
-        if args.quantize != "none":
-            bits = 8 if args.quantize == "w8a8" else 6
-            lp_key, key = jax.random.split(key)
-            if args.calib == "range":
-                from repro.serving import range_calibrate
-                t0 = time.perf_counter()
-                qp, weights = range_calibrate(params, cfg, dif, sched,
-                                              lp_key, wbits=bits, abits=bits)
-                print(f"range-calibrated {len(qp)} linears in "
-                      f"{time.perf_counter() - t0:.1f}s ({args.quantize})")
-            else:
-                from repro.core import (build_dit_calibration, dit_loss_fn,
-                                        run_ptq)
-                from repro.core.baselines import tq_dit
-                x0_src = lambda n, k: jax.random.normal(
-                    k, (n, cfg.img_size, cfg.img_size, cfg.in_ch))
-                calib = build_dit_calibration(
-                    params, cfg, dif, sched, x0_src, lp_key, n_per_group=4,
-                    batch=4)
-                qp, rep = run_ptq(dit_loss_fn(params, cfg), calib,
-                                  tq_dit(bits, bits, n_alpha=8, rounds=2))
-                weights = rep["weights"]
-                print(f"HO-calibrated {rep['n_quantized']} ops in "
-                      f"{rep['wall_s']:.1f}s ({args.quantize})")
-            from repro.core import make_quant_context
-            if bits == 8:
-                # deployment path: pack + fused int8 Pallas kernels
-                from repro.kernels import ops as kops
-                qp = kops.convert_for_kernels(qp, weights)
-                n_pack = sum(1 for v in qp.values()
-                             if "int8" in v or "int8_mrq" in v)
-                print(f"packed {n_pack} linears for the fused int8 kernels")
-                ctx = make_quant_context(qp, kernel=True)
-            else:
-                ctx = make_quant_context(qp)          # fake-quant (no 6-bit MXU)
-
         mesh = make_serving_mesh()
-        engine = ServeEngine(params, cfg, dif, sched, ctx=ctx, mesh=mesh,
-                             microbatch=args.microbatch,
-                             step_buckets=(args.steps,))
+        artifact = None
+
+        if args.load_artifact is not None:
+            # cold-start: the saved artifact IS the calibration — nothing
+            # is recalibrated in this process.
+            from repro.quant import QuantArtifact
+            t0 = time.perf_counter()
+            artifact = QuantArtifact.load(args.load_artifact)
+            if args.quantize != "none" \
+                    and artifact.recipe.bits != args.quantize:
+                raise SystemExit(
+                    f"--quantize {args.quantize} but artifact at "
+                    f"{args.load_artifact} was calibrated at "
+                    f"{artifact.recipe.bits} ({artifact.summary()})")
+            print(f"loaded {artifact.summary()} in "
+                  f"{time.perf_counter() - t0:.1f}s — no calibration run")
+            # no sched= here: the artifact's recorded DiffusionCfg is the
+            # source of truth (the CLI-built schedule would silently win
+            # over an artifact calibrated under a different chain)
+            engine = ServeEngine.from_artifact(
+                params, artifact, mesh=mesh,
+                microbatch=args.microbatch, step_buckets=(args.steps,))
+        else:
+            if args.quantize != "none":
+                from repro.quant import QuantRecipe, quantize
+                # HO-only knobs stay at defaults for --calib range: the
+                # recipe must describe what ran (quantize() enforces it)
+                ho_kw = {"n_alpha": 8, "rounds": 2} \
+                    if args.calib == "ho" else {}
+                recipe = QuantRecipe(bits=args.quantize, method=args.calib,
+                                     seed=args.seed, **ho_kw)
+                t0 = time.perf_counter()
+                artifact = quantize(params, cfg, dif, recipe, sched=sched,
+                                    provenance={"arch": args.arch,
+                                                "smoke": args.smoke})
+                print(f"{args.calib}-calibrated {artifact.summary()} in "
+                      f"{time.perf_counter() - t0:.1f}s")
+                ctx = artifact.context()      # int8 kernels iff w8a8 packs
+                if args.save_artifact is not None:
+                    artifact.save(args.save_artifact)
+                    print(f"saved artifact -> {args.save_artifact}")
+            engine = ServeEngine(params, cfg, dif, sched, ctx=ctx,
+                                 mesh=mesh, microbatch=args.microbatch,
+                                 step_buckets=(args.steps,))
         sched_q = RequestScheduler(microbatch=args.microbatch,
                                    step_buckets=(args.steps,))
         rkey = jax.random.PRNGKey(args.seed + 1)
@@ -132,6 +167,9 @@ def main() -> None:
         results = sched_q.run(engine)
         dt = time.perf_counter() - t0
         samples = np.stack([results[r].sample for r in sorted(results)])
+        if args.dump_samples is not None:
+            np.save(args.dump_samples, samples)
+            print(f"dumped {samples.shape} samples -> {args.dump_samples}")
         st = engine.stats
         print(f"served {len(results)} requests x {args.steps} steps on "
               f"{jax.device_count()} device(s) in {dt:.2f}s "
@@ -143,6 +181,11 @@ def main() -> None:
         print(f"sample mean={samples.mean():.4f} std={samples.std():.4f}")
         return
 
+    if args.save_artifact or args.load_artifact or args.dump_samples:
+        raise SystemExit(
+            f"--save-artifact/--load-artifact/--dump-samples are DiT-only "
+            f"({args.arch} takes the LM decode path, which has no artifact "
+            "support); drive LM PTQ via repro.core.run_ptq for now")
     params = lm_init(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab)

@@ -1,0 +1,28 @@
+"""The unified quantization API: recipe in, serializable artifact out.
+
+    QuantRecipe -> quantize() -> QuantArtifact
+                                   .context()        serve / evaluate
+                                   .save(path)       persist calibration
+    QuantArtifact.load(path)  ->   cold-start a deployment, no recalib
+
+This package is the ONE public surface for producing and consuming
+quantization state; the pipelines underneath
+(``core.ptq.run_ptq`` — the paper's Algorithm 1;
+``serving.quickcal.range_calibrate`` — range-only bring-up;
+``kernels.ops.convert_for_kernels`` — int8 kernel packing) stay where
+they are as implementation, dispatched by ``recipe.method``/``bits``.
+
+``groups`` also hosts the shared timestep-group resolution helper
+(:func:`resolve_group`) used by both the calibration side (nearest-group
+borrow) and the serving packs (traced clamp) — one contract, one
+implementation.
+"""
+from repro.quant.groups import group_boundaries, resolve_group
+from repro.quant.recipe import BITS, METHODS, QuantRecipe
+from repro.quant.artifact import ARTIFACT_VERSION, QuantArtifact
+from repro.quant.api import quantize
+
+__all__ = [
+    "ARTIFACT_VERSION", "BITS", "METHODS", "QuantArtifact", "QuantRecipe",
+    "group_boundaries", "quantize", "resolve_group",
+]

@@ -1,0 +1,51 @@
+"""Timestep-group resolution — ONE helper, one contract.
+
+Two code paths used to hand-roll the TGQ group lookup with subtly
+different semantics: the serving packs in ``kernels/ops.py`` clamped a
+(possibly traced) group index into the pack's range, while
+``serving/quickcal.py`` borrowed the *nearest calibrated* group for
+groups the calibration set never hit. :func:`resolve_group` is now the
+single implementation of both:
+
+- **exact/clamp** (``calibrated=None``): the serving side. ``g`` may be a
+  traced jnp scalar (the sampler threads it through ``lax.scan``);
+  returns ``g`` clamped into ``[0, n_groups)``. ``g=None`` (no group
+  info, e.g. non-diffusion eval) and ``n_groups == 1`` (per-tensor pack)
+  both resolve to group 0.
+- **nearest** (``calibrated`` given): the calibration side. ``g`` is a
+  Python int; returns the member of ``calibrated`` closest to ``g`` — an
+  exact match wins when present, ties break toward the SMALLER group
+  (matching ``min(..., key=abs(x - g))`` over a sorted sequence, the
+  historical behaviour every stacked-(G,) qparam was built with).
+
+``group_boundaries`` exposes the calibration-time group edges
+``G_i = [i*T//G, (i+1)*T//G)`` — recorded in artifact provenance so a
+loaded artifact documents which timesteps each stacked row covers.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def resolve_group(g, n_groups: Optional[int] = None, *,
+                  calibrated: Optional[Sequence[int]] = None):
+    """Resolve a TGQ timestep-group index. See the module docstring for
+    the exact-vs-nearest contract."""
+    if calibrated is not None:
+        if not len(calibrated):
+            raise ValueError("resolve_group: empty `calibrated` sequence")
+        return min(calibrated, key=lambda x: abs(int(x) - int(g)))
+    if n_groups is None:
+        raise ValueError("resolve_group: need n_groups (or calibrated=)")
+    if g is None or n_groups == 1:
+        return 0
+    return jnp.clip(jnp.asarray(g, jnp.int32), 0, n_groups - 1)
+
+
+def group_boundaries(T: int, G: int) -> List[Tuple[int, int]]:
+    """[(lo, hi)) original-chain timestep range of each TGQ group — the
+    ranges ``build_dit_calibration`` draws from and ``tgroup_of`` maps
+    back onto (g(t) = floor(t*G/T))."""
+    return [(g * T // G, (g + 1) * T // G) for g in range(G)]

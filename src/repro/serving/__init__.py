@@ -6,9 +6,13 @@ Request lifecycle (docs/serving.md):
       --ServeEngine--> shard_map'd ddpm_sample_paired (CFG-paired, TGQ
       threaded, fused int8 kernels when quantized) --> GenResult
 
-``repro.serving.quickcal.range_calibrate`` produces serving-grade W8A8
-qparams in seconds for bring-up; the fidelity path stays
-``repro.core.ptq.run_ptq``.
+Quantized serving state comes from the unified API
+(``repro.quant.quantize`` -> ``QuantArtifact``):
+``ServeEngine.from_artifact(params, artifact)`` builds the engine, and
+``QuantArtifact.load(path)`` cold-starts a process with no calibration.
+The range-only pipeline lives in ``repro.serving.quickcal`` (dispatched
+by ``QuantRecipe(method="range")``); the fidelity path is
+``repro.core.ptq.run_ptq`` (``method="ho"``).
 """
 from repro.serving.batching import (
     DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, bucket_steps,
@@ -16,4 +20,18 @@ from repro.serving.batching import (
 )
 from repro.serving.scheduler import RequestScheduler
 from repro.serving.engine import ServeEngine
-from repro.serving.quickcal import range_calibrate
+from repro.serving.quickcal import range_calibrate as _range_calibrate
+
+
+def range_calibrate(*args, **kwargs):
+    """DEPRECATED shim for out-of-tree callers: use
+    ``repro.quant.quantize(params, cfg, dif, QuantRecipe(method="range"))``
+    — it runs this calibration, packs the int8 kernels, and returns a
+    serializable ``QuantArtifact``. (The implementation is unchanged at
+    ``repro.serving.quickcal.range_calibrate`` for internal dispatch.)"""
+    import warnings
+    warnings.warn(
+        "repro.serving.range_calibrate is deprecated: use "
+        "repro.quant.quantize(..., QuantRecipe(method='range')) and the "
+        "returned QuantArtifact", DeprecationWarning, stacklevel=2)
+    return _range_calibrate(*args, **kwargs)

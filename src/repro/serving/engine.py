@@ -54,9 +54,10 @@ class ServeEngine:
     ----------
     params, dcfg : the DiT model.
     dif, sched   : diffusion config + schedule (sched built if omitted).
-    ctx          : op context (default fp32). Pass
-                   ``make_quant_context(qp_packed, kernel=True)`` for the
-                   fused-int8 serving path.
+    ctx          : op context (default fp32). Pass a quantization
+                   artifact's ``artifact.context()`` for the fused-int8
+                   serving path — or build the whole engine with
+                   :meth:`from_artifact`.
     mesh         : data-parallel mesh (``make_serving_mesh()``). None runs
                    un-sharded on the default device.
     microbatch   : slots per microbatch; must divide by the mesh's DP size.
@@ -89,6 +90,36 @@ class ServeEngine:
             "compiled_buckets": [], "microbatches": 0, "requests": 0,
             "padded_slots": 0, "wall_s": 0.0,
         }
+
+    @classmethod
+    def from_artifact(cls, params, artifact, *, kernel=None, sched=None,
+                      mesh: Optional[Mesh] = None, microbatch: int = 8,
+                      step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
+                      clip_x0: Optional[float] = None) -> "ServeEngine":
+        """Quantized engine straight from a ``repro.quant.QuantArtifact``
+        — the cold-start path: ``QuantArtifact.load(path)`` then this, no
+        calibration in the serving process.
+
+        The artifact supplies the model/diffusion configs and the op
+        context (``artifact.context(kernel=...)``: fused int8 kernels
+        when packs exist, fake-quant otherwise); ``params`` are the fp
+        model weights (artifacts carry quantizer state and int8 weight
+        codes, never the fp tree). A d_model mismatch between ``params``
+        and the artifact's recorded config fails fast here rather than
+        as a shape error inside the compiled sampler.
+        """
+        dcfg = artifact.model_cfg()
+        d_model = params.get("x_proj", {}).get("w", None) if isinstance(
+            params, dict) else None
+        if d_model is not None and d_model.shape[-1] != dcfg.d_model:
+            raise ValueError(
+                f"params d_model {d_model.shape[-1]} != artifact's recorded "
+                f"DiTCfg.d_model {dcfg.d_model} — wrong checkpoint for this "
+                "artifact?")
+        return cls(params, dcfg, artifact.dif_cfg(), sched,
+                   ctx=artifact.context(kernel=kernel), mesh=mesh,
+                   microbatch=microbatch, step_buckets=step_buckets,
+                   clip_x0=clip_x0)
 
     # -- executable construction -------------------------------------------
     def _build(self, steps: int):

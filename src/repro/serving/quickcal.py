@@ -21,6 +21,11 @@ module calibrates from plain min/max ranges in seconds:
 
 The result feeds ``repro.kernels.ops.convert_for_kernels`` directly; use
 ``run_ptq`` instead whenever sample quality is being measured.
+
+This module is the 'range' pipeline BEHIND the unified API — call
+``repro.quant.quantize(params, cfg, dif, QuantRecipe(method="range"))``
+rather than this function directly; the artifact it returns packs,
+serializes, and serves in one object.
 """
 from __future__ import annotations
 
@@ -40,10 +45,12 @@ from repro.core.quantizers import (
 )
 from repro.diffusion import DiffusionCfg, make_schedule
 from repro.models import DiTCfg
+from repro.quant.groups import resolve_group
 
 
 def _nearest(groups, g):
-    return min(groups, key=lambda x: abs(x - g))
+    """Nearest calibrated group (shared contract: repro.quant.groups)."""
+    return resolve_group(g, calibrated=groups)
 
 
 def range_calibrate(params, dcfg: DiTCfg, dif: DiffusionCfg, sched=None,

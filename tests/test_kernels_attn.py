@@ -366,11 +366,11 @@ def test_engine_w8a8_runs_int8_attention_compile_once(tiny_dit, monkeypatch):
     """The engine's w8a8 step executable runs QK^T, softmax->MRQ codes,
     and P·V through the new kernels, traces ONCE across all timestep
     groups of the scan, and produces finite samples."""
-    from repro.core import make_quant_context
     from repro.diffusion import DiffusionCfg, make_schedule
     from repro.kernels import ops as kops
     from repro.models import dit_apply
-    from repro.serving import GenRequest, ServeEngine, range_calibrate
+    from repro.serving import GenRequest, ServeEngine
+    from repro.serving.quickcal import range_calibrate
 
     cfg, p = tiny_dit
     dif = DiffusionCfg(T=40, tgq_groups=4)
@@ -383,7 +383,8 @@ def test_engine_w8a8_runs_int8_attention_compile_once(tiny_dit, monkeypatch):
         "range calibration must pack every block's attention"
     assert all(v["int8_pv"]["groups"] == dif.tgq_groups
                for v in qp2.values() if "int8_pv" in v)
-    ctx = make_quant_context(qp2, kernel=True)
+    from repro.core import QuantContext
+    ctx = QuantContext(qparams=qp2, kernel=True)
 
     calls = {"qk": 0, "sm": 0, "pv": 0}
     for key, fname in (("qk", "int8_bmm_qk"), ("sm", "softmax_mrq_codes"),

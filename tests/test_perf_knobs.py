@@ -45,7 +45,7 @@ def test_fisher_norm_modes_both_calibrate(tiny_dit):
     """'batch' (default) and 'raw' both produce working quantizers; the
     normalized mode repairs the cross-timestep clipping artifact
     (DESIGN/EXPERIMENTS; here we just assert both run and differ)."""
-    from repro.core import (PTQConfig, run_ptq, make_quant_context,
+    from repro.core import (PTQConfig, QuantContext, run_ptq,
                             build_dit_calibration, dit_loss_fn)
     from repro.diffusion import DiffusionCfg, make_schedule
     from repro.models import dit_apply
@@ -64,7 +64,7 @@ def test_fisher_norm_modes_both_calibrate(tiny_dit):
             fisher_norm=mode))
         b = calib[0][0]
         outs[mode] = dit_apply(p, cfg, b["xt"], b["t"], b["y"],
-                               ctx=make_quant_context(qp))
+                               ctx=QuantContext(qparams=qp))
         assert bool(jnp.all(jnp.isfinite(outs[mode])))
 
 

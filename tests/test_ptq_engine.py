@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import (
     CalibrationContext, PTQConfig, QuantContext, RecordingContext,
-    build_dit_calibration, dit_loss_fn, make_quant_context, run_ptq,
+    build_dit_calibration, dit_loss_fn, run_ptq,
 )
 from repro.core.baselines import SCHEMES
 from repro.core.fisher import discover_tap_shapes, make_fisher_fn
@@ -96,7 +96,7 @@ def test_ablation_ordering_w6a6(dit_setup):
                                   batch=8)
 
     def eval_mse(qp):
-        ctx = make_quant_context(qp)
+        ctx = QuantContext(qparams=qp)
         tot = 0.0
         for b, g in evalb:
             fp = dit_apply(p, cfg, b["xt"], b["t"], b["y"])
@@ -124,7 +124,7 @@ def test_w8a8_much_better_than_w4a4(dit_setup):
         qp, _ = run_ptq(loss, calib[:4],
                         PTQConfig(wbits=bits, abits=bits, tgq_groups=4,
                                   n_alpha=6, rounds=1))
-        ctx = make_quant_context(qp).with_tgroup(calib[0][1])
+        ctx = QuantContext(qparams=qp).with_tgroup(calib[0][1])
         q = dit_apply(p, cfg, b["xt"], b["t"], b["y"], ctx=ctx)
         return float(jnp.mean((fp - q) ** 2))
 
@@ -146,9 +146,9 @@ def test_bias_correction_reduces_mean_shift(dit_setup):
     b = calib[0][0]
     fp = dit_apply(p, cfg, b["xt"], b["t"], b["y"])
     q1 = dit_apply(p, cfg, b["xt"], b["t"], b["y"],
-                   ctx=make_quant_context(qp_plain))
+                   ctx=QuantContext(qparams=qp_plain))
     q2 = dit_apply(p, cfg, b["xt"], b["t"], b["y"],
-                   ctx=make_quant_context(qp_bc))
+                   ctx=QuantContext(qparams=qp_bc))
     # bias correction should not hurt the mean error
     assert abs(float((q2 - fp).mean())) <= abs(float((q1 - fp).mean())) + 1e-4
 

@@ -1,0 +1,293 @@
+"""The unified quantization API (`repro.quant`): recipe validation, the
+shared timestep-group resolution contract, artifact save -> load in a
+FRESH process with bit-identical served samples (range and ho recipes at
+w8a8), recipe-mismatch load errors, and the CLI cold-start acceptance
+(`--load-artifact` serves with no calibration, samples bit-identical to
+the calibrating process)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import DiffusionCfg, make_schedule
+from repro.quant import (
+    QuantArtifact, QuantRecipe, group_boundaries, quantize, resolve_group,
+)
+from repro.serving import GenRequest, ServeEngine
+
+DIF = DiffusionCfg(T=40, tgq_groups=4)
+
+RANGE_RECIPE = QuantRecipe(bits="w8a8", method="range", n_per_group=1,
+                           calib_batch=1)
+HO_RECIPE = QuantRecipe(bits="w8a8", method="ho", rounds=1, n_alpha=4,
+                        n_per_group=2, calib_batch=2)
+
+
+# ---------------------------------------------------------------------------
+# recipe
+# ---------------------------------------------------------------------------
+def test_recipe_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="bits"):
+        QuantRecipe(bits="w3a3")
+    with pytest.raises(ValueError, match="method"):
+        QuantRecipe(method="minmax")
+    r = QuantRecipe(bits="w6a6", method="ho",
+                    skip_patterns=["router", "final"])
+    assert (r.wbits, r.abits) == (6, 6)
+    assert not r.kernel_deployable and QuantRecipe().kernel_deployable
+    assert r.skip_patterns == ("router", "final")     # list normalized
+    assert QuantRecipe.from_dict(r.to_dict()) == r
+    with pytest.raises(ValueError, match="unknown QuantRecipe fields"):
+        QuantRecipe.from_dict({"bits": "w8a8", "frobnicate": 1})
+    d = RANGE_RECIPE.diff(HO_RECIPE)
+    assert "method" in d and d["method"] == ("range", "ho")
+    assert "bits" not in d
+
+
+def test_recipe_matches_ptq_config():
+    """The 'ho' dispatch must reproduce PTQConfig semantics exactly —
+    the recipe is a rename, not a re-tune."""
+    from repro.core import PTQConfig
+    r = QuantRecipe(bits="w6a6", method="ho", rounds=2, n_alpha=7,
+                    use_mrq=False, bias_correct=True, seed=3)
+    cfg = r.ptq_config(tgq_groups=5)
+    assert cfg == PTQConfig(wbits=6, abits=6, rounds=2, n_alpha=7,
+                            use_mrq=False, bias_correct=True, seed=3,
+                            tgq_groups=5)
+
+
+# ---------------------------------------------------------------------------
+# shared group resolution (quickcal borrow == kernel clamp contract)
+# ---------------------------------------------------------------------------
+def test_resolve_group_nearest():
+    assert resolve_group(2, calibrated=[0, 2, 3]) == 2     # exact wins
+    assert resolve_group(2, calibrated=[0, 3]) == 3        # nearest
+    assert resolve_group(9, calibrated=[0, 3]) == 3
+    assert resolve_group(2, calibrated=[1, 3]) == 1        # tie -> smaller
+    with pytest.raises(ValueError, match="empty"):
+        resolve_group(0, calibrated=[])
+
+
+def test_resolve_group_clamp():
+    assert resolve_group(None, 4) == 0                     # no group info
+    assert resolve_group(3, 1) == 0                        # per-tensor pack
+    assert int(resolve_group(2, 4)) == 2
+    assert int(resolve_group(9, 4)) == 3                   # clamped
+    assert int(resolve_group(-1, 4)) == 0
+    # traced (the sampler's scan threads a traced tgroup)
+    traced = jax.jit(lambda g: resolve_group(g, 4))(jnp.int32(7))
+    assert int(traced) == 3
+    with pytest.raises(ValueError, match="n_groups"):
+        resolve_group(2)
+
+
+def test_group_boundaries_cover_chain():
+    bounds = group_boundaries(T=40, G=4)
+    assert bounds == [(0, 10), (10, 20), (20, 30), (30, 40)]
+    bounds = group_boundaries(T=10, G=3)                   # ragged
+    assert bounds[0][0] == 0 and bounds[-1][1] == 10
+    assert all(lo < hi for lo, hi in bounds)
+    assert all(bounds[i][1] == bounds[i + 1][0]
+               for i in range(len(bounds) - 1))
+
+
+# ---------------------------------------------------------------------------
+# artifact consumption
+# ---------------------------------------------------------------------------
+def test_w6a6_artifact_has_no_packs_and_refuses_kernel(tiny_dit):
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, QuantRecipe(bits="w6a6", method="range",
+                                            n_per_group=1, calib_batch=1))
+    assert not art.has_kernel_packs
+    assert art.context().kernel is False                   # fake-quant
+    with pytest.raises(ValueError, match="no int8 kernel packs"):
+        art.context(kernel=True)
+
+
+def test_range_method_rejects_ho_only_knobs(tiny_dit):
+    """method='range' must not silently record knobs its pipeline cannot
+    honor — the artifact's recipe has to describe what actually ran."""
+    cfg, p = tiny_dit
+    for bad in (dict(skip_patterns=("attn",)), dict(use_mrq=False),
+                dict(use_tgq=False), dict(weight_only_patterns=("fc",)),
+                dict(rounds=2), dict(n_alpha=8), dict(bias_correct=True)):
+        with pytest.raises(ValueError, match="cannot honor"):
+            quantize(p, cfg, DIF, QuantRecipe(method="range", n_per_group=1,
+                                              calib_batch=1, **bad))
+
+
+def test_calib_data_group_tag_validation(tiny_dit):
+    cfg, p = tiny_dit
+    fake_calib = [({"xt": None}, 0), ({"xt": None}, 7)]   # tag 7 >= G=4
+    with pytest.raises(ValueError, match="out of range"):
+        quantize(p, cfg, DIF, QuantRecipe(method="ho"),
+                 calib_data=fake_calib)
+    # overriding the group count with caller-built calib is ambiguous
+    with pytest.raises(ValueError, match="overrides"):
+        quantize(p, cfg, DIF, QuantRecipe(method="ho", tgq_groups=2),
+                 calib_data=[({"xt": None}, 0)])
+
+
+def test_recipe_tgq_groups_overrides_dif(tiny_dit):
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, QuantRecipe(bits="w8a8", method="range",
+                                            tgq_groups=2, n_per_group=1,
+                                            calib_batch=1))
+    assert art.meta["tgq_groups"] == 2
+    assert art.dif_cfg().tgq_groups == 2
+    assert len(art.meta["tgq_group_boundaries"]) == 2
+    assert any(v.get("int8", {}).get("groups") == 2
+               for v in art.qparams.values())
+
+
+def test_artifact_recipe_mismatch_raises(tiny_dit, tmp_path):
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, RANGE_RECIPE)
+    path = str(tmp_path / "art")
+    art.save(path)
+    with pytest.raises(ValueError, match="recipe mismatch.*method"):
+        QuantArtifact.load(path, expect_recipe=HO_RECIPE)
+    # matching recipe loads fine
+    assert QuantArtifact.load(
+        path, expect_recipe=RANGE_RECIPE).recipe == RANGE_RECIPE
+    with pytest.raises(FileNotFoundError, match="artifact"):
+        QuantArtifact.load(str(tmp_path / "nope"))
+
+
+def test_artifact_detects_json_shard_mismatch(tiny_dit, tmp_path):
+    """An interrupted overwrite (old artifact.json paired with new leaf
+    shards) must fail loudly, not decode new leaves under a stale spec."""
+    import json as _json
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, RANGE_RECIPE)
+    path = str(tmp_path / "art")
+    art.save(path)
+    doc_path = os.path.join(path, "artifact.json")
+    with open(doc_path) as f:
+        doc = _json.load(f)
+    doc["leaf_hashes"] = {k: "0" * 16 for k in doc["leaf_hashes"]}
+    with open(doc_path, "w") as f:
+        _json.dump(doc, f)
+    with pytest.raises(ValueError, match="interrupted overwrite"):
+        QuantArtifact.load(path)
+
+
+# ---------------------------------------------------------------------------
+# save -> load in a FRESH process -> bit-identical served samples
+# ---------------------------------------------------------------------------
+_PARAMS_SRC = r"""
+import jax
+from repro.models import DiTCfg, dit_init
+cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=64, n_layers=2,
+             n_heads=4, n_classes=8)
+p = dit_init(jax.random.PRNGKey(0), cfg)
+p["blocks"] = jax.tree.map(
+    lambda a: a + jax.random.normal(jax.random.PRNGKey(1), a.shape) * 0.01,
+    p["blocks"])
+"""
+
+_LOAD_AND_SERVE_SRC = _PARAMS_SRC + r"""
+import sys
+import numpy as np
+from repro.quant import QuantArtifact
+from repro.serving import GenRequest, ServeEngine
+
+for path, out in zip(sys.argv[1::2], sys.argv[2::2]):
+    art = QuantArtifact.load(path)
+    eng = ServeEngine.from_artifact(p, art, microbatch=2, step_buckets=(4,))
+    res = eng.serve([GenRequest(request_id=i, label=i % 8, steps=4,
+                                cfg_scale=1.5, seed=600 + i)
+                     for i in range(2)])
+    np.save(out, np.stack([res[i].sample for i in range(2)]))
+print("SERVED")
+"""
+
+
+def _exec_params():
+    ns = {}
+    exec(compile(_PARAMS_SRC, "<params>", "exec"), ns)
+    return ns["cfg"], ns["p"]
+
+
+def _serve_in_memory(p, art):
+    eng = ServeEngine.from_artifact(p, art, microbatch=2, step_buckets=(4,))
+    res = eng.serve([GenRequest(request_id=i, label=i % 8, steps=4,
+                                cfg_scale=1.5, seed=600 + i)
+                     for i in range(2)])
+    return np.stack([res[i].sample for i in range(2)])
+
+
+def test_artifact_roundtrip_fresh_process_bit_identical(tmp_path):
+    """The cold-start guarantee, for BOTH calibration methods at w8a8:
+    an artifact saved here and loaded in a subprocess serves samples
+    bit-identical to the in-memory artifact (same requests/seeds)."""
+    cfg, p = _exec_params()
+    jobs = []
+    for name, recipe in (("range", RANGE_RECIPE), ("ho", HO_RECIPE)):
+        art = quantize(p, cfg, DIF, recipe)
+        assert art.has_kernel_packs, name
+        in_mem = _serve_in_memory(p, art)
+        path = str(tmp_path / f"art_{name}")
+        art.save(path)
+        jobs.append((name, path, str(tmp_path / f"{name}.npy"), in_mem))
+
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    argv = [a for _, path, out, _ in jobs for a in (path, out)]
+    r = subprocess.run([sys.executable, "-c", _LOAD_AND_SERVE_SRC, *argv],
+                       env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SERVED" in r.stdout
+    for name, _, out, in_mem in jobs:
+        fresh = np.load(out)
+        assert np.array_equal(in_mem, fresh), \
+            f"{name}: fresh-process serve diverged from in-memory artifact"
+
+
+# ---------------------------------------------------------------------------
+# CLI acceptance: --load-artifact cold-start, zero calibration
+# ---------------------------------------------------------------------------
+def test_serve_cli_load_artifact_no_calibration_bit_identical(tmp_path):
+    """`python -m repro.launch.serve --quantize w8a8 --load-artifact X`
+    serves WITHOUT running any calibration and its samples are
+    bit-identical to the serve that calibrated in-process with the same
+    recipe and seed."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    art = str(tmp_path / "cli_art")
+    base = [sys.executable, "-m", "repro.launch.serve", "--arch", "dit-xl-2",
+            "--smoke", "--requests", "2", "--microbatch", "2", "--steps",
+            "2", "--quantize", "w8a8", "--seed", "0"]
+    a_npy, b_npy = str(tmp_path / "a.npy"), str(tmp_path / "b.npy")
+
+    r1 = subprocess.run(base + ["--save-artifact", art,
+                                "--dump-samples", a_npy],
+                        env=env, capture_output=True, text=True, timeout=560)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    assert "range-calibrated" in r1.stdout
+
+    r2 = subprocess.run(base + ["--load-artifact", art,
+                                "--dump-samples", b_npy],
+                        env=env, capture_output=True, text=True, timeout=560)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "no calibration run" in r2.stdout
+    assert "calibrated" not in r2.stdout.replace("no calibration run", "")
+    assert np.array_equal(np.load(a_npy), np.load(b_npy)), \
+        "cold-started serve diverged from the calibrating serve"
+
+    # bits mismatch between the flag and the stored artifact fails fast
+    mismatch = [x if x != "w8a8" else "w6a6" for x in base]
+    r3 = subprocess.run(mismatch + ["--load-artifact", art],
+                        env=env, capture_output=True, text=True, timeout=560)
+    assert r3.returncode != 0
+    assert "w6a6" in (r3.stdout + r3.stderr)

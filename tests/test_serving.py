@@ -14,9 +14,9 @@ import pytest
 
 from repro.diffusion import DiffusionCfg, ddpm_sample_paired, make_schedule
 from repro.models import dit_apply
+from repro.quant import QuantRecipe, quantize
 from repro.serving import (
     GenRequest, RequestScheduler, ServeEngine, bucket_steps, coalesce,
-    range_calibrate,
 )
 
 DIF = DiffusionCfg(T=40, tgq_groups=4)
@@ -214,18 +214,20 @@ def test_engine_w8a8_kernel_path(tiny_dit, monkeypatch):
     """Quantized serving through the engine: TGQ-packed fused int8 kernels
     fire under the shard_map'd scan, samples are finite, and mesh vs
     no-mesh execution is bit-identical."""
-    from repro.core import make_quant_context
     from repro.kernels import ops as kops
 
     cfg, p = tiny_dit
     sched = make_schedule(DIF)
-    qp, weights = range_calibrate(p, cfg, DIF, sched, n_per_group=1, batch=1)
-    qp2 = kops.convert_for_kernels(qp, weights)
+    art = quantize(p, cfg, DIF,
+                   QuantRecipe(bits="w8a8", method="range", n_per_group=1,
+                               calib_batch=1), sched=sched)
+    qp2 = art.qparams
     n_pack = sum(1 for v in qp2.values() if "int8" in v or "int8_mrq" in v)
     assert n_pack >= 5, "range calibration must pack the DiT linears"
     assert any(v.get("int8", {}).get("groups") == DIF.tgq_groups
                for v in qp2.values()), "packs must be time-grouped"
-    ctx = make_quant_context(qp2, kernel=True)
+    ctx = art.context()
+    assert ctx.kernel, "w8a8 artifact must default to the kernel path"
 
     calls = []
     orig = kops.int8_matmul_fq
@@ -255,11 +257,10 @@ def test_engine_w8a8_kernel_path(tiny_dit, monkeypatch):
 _SHARDED_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 assert jax.device_count() == 2, jax.device_count()
-from repro.core import make_quant_context
 from repro.diffusion import DiffusionCfg, make_schedule
-from repro.kernels import ops as kops
 from repro.models import DiTCfg, dit_init
-from repro.serving import GenRequest, ServeEngine, range_calibrate
+from repro.quant import QuantRecipe, quantize
+from repro.serving import GenRequest, ServeEngine
 
 cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=32, n_layers=2,
              n_heads=4, n_classes=8)
@@ -268,15 +269,16 @@ p = jax.tree.map(
     lambda a: a + jax.random.normal(jax.random.PRNGKey(1), a.shape) * 0.01, p)
 dif = DiffusionCfg(T=40, tgq_groups=4)
 sched = make_schedule(dif)
-qp, weights = range_calibrate(p, cfg, dif, sched, n_per_group=1, batch=1)
-ctx = make_quant_context(kops.convert_for_kernels(qp, weights), kernel=True)
+art = quantize(p, cfg, dif, QuantRecipe(bits="w8a8", method="range",
+                                        n_per_group=1, calib_batch=1),
+               sched=sched)
 reqs = [GenRequest(request_id=i, label=i % 8, steps=4, cfg_scale=1.5,
                    seed=300 + i) for i in range(4)]
 out = {}
 for nd in (2, 1):
     mesh = jax.make_mesh((nd, 1), ("data", "model"))
-    eng = ServeEngine(p, cfg, dif, sched, ctx=ctx, mesh=mesh, microbatch=4,
-                      step_buckets=(4,))
+    eng = ServeEngine.from_artifact(p, art, sched=sched, mesh=mesh,
+                                    microbatch=4, step_buckets=(4,))
     out[nd] = eng.serve(reqs)
 ok = all(np.array_equal(out[2][i].sample, out[1][i].sample)
          for i in range(4))

@@ -14,7 +14,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 def test_quantized_sampler_end_to_end(tiny_dit):
     """Calibrate TQ-DiT at W8A8 and sample: outputs stay close to FP."""
-    from repro.core import (run_ptq, make_quant_context,
+    from repro.core import (QuantContext, run_ptq,
                             build_dit_calibration, dit_loss_fn)
     from repro.core.baselines import tq_dit
     from repro.diffusion import DiffusionCfg, make_schedule, ddpm_sample
@@ -35,7 +35,7 @@ def test_quantized_sampler_end_to_end(tiny_dit):
     y = jnp.array([0, 1])
     fp = ddpm_sample(eps, dif, sched, (2, 8, 8, 4), y, key, steps=10)
     qt = ddpm_sample(eps, dif, sched, (2, 8, 8, 4), y, key, steps=10,
-                     ctx=make_quant_context(qp))
+                     ctx=QuantContext(qparams=qp))
     assert bool(jnp.all(jnp.isfinite(qt)))
     rel = float(jnp.abs(fp - qt).mean() / (jnp.abs(fp).mean() + 1e-9))
     assert rel < 0.15, f"W8A8 sampling drifted {rel:.3f} from FP"
@@ -45,7 +45,7 @@ def test_lm_ptq_end_to_end():
     """The technique transfers to an LM arch (MRQ-SiLU, no TGQ): W8A8
     loss stays near FP."""
     from repro.configs import get_smoke
-    from repro.core import (run_ptq, make_quant_context,
+    from repro.core import (QuantContext, run_ptq,
                             build_lm_calibration, lm_loss_fn,
                             RecordingContext)
     from repro.core.baselines import tq_dit
@@ -60,7 +60,7 @@ def test_lm_ptq_end_to_end():
     loss = lm_loss_fn(p, cfg)
     qp, rep = run_ptq(loss, calib, tq_dit(8, 8, n_alpha=6, rounds=1))
     fp_loss = float(loss(FPContext(), calib[0][0]))
-    q_loss = float(loss(make_quant_context(qp), calib[0][0]))
+    q_loss = float(loss(QuantContext(qparams=qp), calib[0][0]))
     assert abs(q_loss - fp_loss) / fp_loss < 0.05
     # post-silu hooks discovered (quantized AT the hook on swiglu archs —
     # the gate feeds an elementwise product, not a matmul directly) and
