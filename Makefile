@@ -1,5 +1,5 @@
-.PHONY: verify verify-all kernel-micro bench-attn serve-throughput \
-	docs-check artifact-smoke
+.PHONY: verify verify-all kernel-micro bench-attn bench-flash \
+	serve-throughput docs-check artifact-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -12,10 +12,16 @@ verify-all:
 kernel-micro:
 	PYTHONPATH=src python -m benchmarks.kernel_micro
 
-# attention rows only: int8 QK^T / softmax->codes / P·V correctness +
-# modeled probs-traffic saving (fp round-trip vs int8 codes)
+# attention rows only: int8 QK^T / softmax->codes / P·V / flash
+# correctness + modeled probs-traffic saving (fp round-trip vs int8 codes)
 bench-attn:
 	PYTHONPATH=src python -m benchmarks.kernel_micro --attn
+
+# flash rows only: the fused single-kernel attention vs the composed
+# three-kernel path (correctness within the documented tolerance + the
+# whole-attention traffic cut from eliminating the (S,S) HBM round-trip)
+bench-flash:
+	PYTHONPATH=src python -m benchmarks.kernel_micro --flash
 
 serve-throughput:
 	PYTHONPATH=src python -m benchmarks.serve_throughput

@@ -11,16 +11,25 @@ is meaningless; the TPU win is structural and computed from traffic).
   softmax_mrq        : probs tile stays in VMEM; saves read+write of the
                        (rows, cols) f32 probs per attention.
   act_mrq            : saves read+write of the (tokens, d_ff) hidden tensor.
-  int8_bmm_qk /      : the int8 attention path. The headline saving is the
-  softmax_mrq_codes /  PROBS tensor: the fp path writes + reads the (S,S)
-  int8_bmm_pv          f32 probabilities through HBM every attention; the
-                       fused path moves int8 CODES instead — 4x less
-                       probs traffic (1B write + 1B read vs 4B + 4B).
+  int8_bmm_qk /      : the composed int8 attention path. The headline
+  softmax_mrq_codes /  saving is the PROBS tensor: the fp path writes +
+  int8_bmm_pv          reads the (S,S) f32 probabilities through HBM
+                       every attention; the fused path moves int8 CODES
+                       instead — 4x less probs traffic (1B write + 1B
+                       read vs 4B + 4B).
+  flash_attn_mrq     : the flash-style fused kernel subsumes all three —
+                       scores, softmax state and prob codes stay in
+                       VMEM, so the ENTIRE (S,S) HBM round-trip (f32
+                       scores write+read + int8 codes write+read, 10B
+                       per score element) is eliminated: >=3x whole-
+                       attention traffic cut vs composed at DiT-XL/2
+                       shapes.
 
 The traffic functions are importable (tests assert the structural-saving
 floors, e.g. >=1.5x for the MRQ linear, >=2x probs traffic for fused
-attention). ``--attn`` prints only the attention rows (``make
-bench-attn``).
+attention, >=3x whole-attention for flash at S>=256). ``--attn`` prints
+only the attention rows (``make bench-attn``); ``--flash`` only the
+flash rows (``make bench-flash``).
 """
 from __future__ import annotations
 
@@ -31,9 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.kernels import (act_mrq, int8_bmm_pv, int8_bmm_qk, int8_matmul,
-                           int8_matmul_fq, int8_matmul_mrq_fq, softmax_mrq,
-                           softmax_mrq_codes, ref)
+from repro.kernels import (act_mrq, flash_attn_mrq, int8_bmm_pv, int8_bmm_qk,
+                           int8_matmul, int8_matmul_fq, int8_matmul_mrq_fq,
+                           softmax_mrq, softmax_mrq_codes, ref)
 
 
 # ---------------------------------------------------------------------------
@@ -110,10 +119,44 @@ def traffic_attention_qk(BH: int, S: int, D: int) -> dict:
             "fused": 2 * BH * S * D * 4 + BH * S * S * 4}
 
 
-def _attention_rows(rows) -> None:
+def traffic_attention_flash(BH: int, S: int, D: int,
+                            bm: int | None = None) -> dict:
+    """Whole-attention HBM bytes: composed three-kernel int8 path vs the
+    flash-style fused kernel (``kernels.flash_attn_mrq``).
+
+    composed — ``int8_bmm_qk`` -> ``softmax_mrq_codes`` -> ``int8_bmm_pv``
+      still round-trips the quadratic (S, S) tensors through HBM:
+      f32 scores write (4B) + read (4B), int8 prob-code write (1B) +
+      read (1B) — 10 bytes per score element — on top of the f32 q/k/v
+      reads and the output write.
+    flash — q is read once and the output written once in f32; the K/V
+      stream is charged HONESTLY at one fetch per q-tile
+      (``ceil(S/bm)`` reads each — the kernel's kv BlockSpec index maps
+      revisit every kv tile for every q-tile, so Pallas cannot elide the
+      re-fetch). With the kernel's default ``bm = 256`` that is exactly
+      ONE fetch at DiT-serving lengths. Scores, running softmax state
+      and prob codes never leave VMEM: the (S, S) round-trip is
+      ELIMINATED — ``scores_codes_eliminated`` counts those bytes.
+
+    At DiT-XL/2 attention shape (S = 256, hd = 72) the cut is >= 3x
+    (asserted in ``tests/test_flash_attn.py``).
+    """
+    from repro.kernels.flash_attn_mrq import DEFAULT_BM
+    bm = DEFAULT_BM if bm is None else bm
+    n_qtiles = -(-S // bm)
+    flash = BH * S * D * 4 * (2 + 2 * n_qtiles)  # q+out once, k/v per q-tile
+    scores_codes = BH * S * S * (4 + 4 + 1 + 1)
+    composed = 4 * BH * S * D * 4 + scores_codes
+    return {"composed": composed,
+            "flash": flash,
+            "scores_codes_eliminated": scores_codes}
+
+
+def _attention_rows(rows, flash_only: bool = False) -> None:
     key = jax.random.PRNGKey(7)
     # DiT-XL/2 attention shape: 256 tokens, 16 heads, head dim 72 — and a
-    # ragged case to exercise padding.
+    # ragged case to exercise padding (and, for flash, the NEG_INF lane
+    # masking ahead of the online max).
     for (BH, S, D) in [(16, 256, 72), (3, 130, 17)]:
         k1, k2, k3 = jax.random.split(key, 3)
         q = jax.random.normal(k1, (BH, S, D)) * 2
@@ -123,37 +166,57 @@ def _attention_rows(rows) -> None:
         s_k = jnp.full((1, 1), 0.04, jnp.float32)
         scale = s_q * s_k * (D ** -0.5)
         scores = int8_bmm_qk(q, k, s_q, s_k, scale, interpret=True)
-        want = ref.int8_bmm_qk_ref(q, k, s_q, s_k, scale)
-        err = float(jnp.max(jnp.abs(scores - want)))
-        t = traffic_attention_qk(BH, S, D)
-        rows.append(("int8_bmm_qk", f"{BH}x{S}x{D}", f"{err:.1e}",
-                     t["unfused"], t["fused"],
-                     round(t["unfused"] / t["fused"], 2)))
-
         s1 = jnp.full((1, 1), 2e-3, jnp.float32)
         codes = softmax_mrq_codes(scores, s1, interpret=True)
-        cerr = int(jnp.max(jnp.abs(
-            codes.astype(jnp.int32)
-            - ref.softmax_mrq_codes_ref(scores, s1).astype(jnp.int32))))
-        tp = traffic_attention_probs(BH, S, D)
-        rows.append(("softmax_mrq_codes", f"{BH}x{S}x{S}", f"{cerr:d}",
-                     tp["probs_unfused"], tp["probs_fused"],
-                     round(tp["probs_unfused"] / tp["probs_fused"], 2)))
-
         s_v = jnp.full((1, 1), 0.05, jnp.float32)
         out = int8_bmm_pv(codes, v, s_v, s1 * s_v, (1.0 / 128) * s_v,
                           interpret=True)
-        pwant = ref.int8_bmm_pv_ref(codes, v, s_v, s1 * s_v,
-                                    (1.0 / 128) * s_v)
-        perr = float(jnp.max(jnp.abs(out - pwant)))
-        rows.append(("int8_bmm_pv", f"{BH}x{S}x{D}", f"{perr:.1e}",
-                     tp["unfused"], tp["fused"],
-                     round(tp["unfused"] / tp["fused"], 2)))
+        t = traffic_attention_qk(BH, S, D)
+        tp = traffic_attention_probs(BH, S, D)
+        if not flash_only:
+            want = ref.int8_bmm_qk_ref(q, k, s_q, s_k, scale)
+            err = float(jnp.max(jnp.abs(scores - want)))
+            rows.append(("int8_bmm_qk", f"{BH}x{S}x{D}", f"{err:.1e}",
+                         t["unfused"], t["fused"],
+                         round(t["unfused"] / t["fused"], 2)))
+
+            cerr = int(jnp.max(jnp.abs(
+                codes.astype(jnp.int32)
+                - ref.softmax_mrq_codes_ref(scores, s1).astype(jnp.int32))))
+            rows.append(("softmax_mrq_codes", f"{BH}x{S}x{S}", f"{cerr:d}",
+                         tp["probs_unfused"], tp["probs_fused"],
+                         round(tp["probs_unfused"] / tp["probs_fused"], 2)))
+
+            pwant = ref.int8_bmm_pv_ref(codes, v, s_v, s1 * s_v,
+                                        (1.0 / 128) * s_v)
+            perr = float(jnp.max(jnp.abs(out - pwant)))
+            rows.append(("int8_bmm_pv", f"{BH}x{S}x{D}", f"{perr:.1e}",
+                         tp["unfused"], tp["fused"],
+                         round(tp["unfused"] / tp["fused"], 2)))
+
+        # flash-style fused kernel: whole block in one launch, (S,S)
+        # scores/codes never in HBM. max_err is vs the COMPOSED output
+        # above (the exactness oracle; documented tolerance contract in
+        # kernels/ref.py::flash_vs_composed_atol), traffic vs composed.
+        fout = flash_attn_mrq(
+            q, k, v, s_q, s_k, scale, s1, s_v, s1 * s_v,
+            (1.0 / 128) * s_v, interpret=True)
+        ferr = float(jnp.max(jnp.abs(fout - out)))
+        tf = traffic_attention_flash(BH, S, D)
+        rows.append(("flash_attn_mrq", f"{BH}x{S}x{D}", f"{ferr:.1e}",
+                     tf["composed"], tf["flash"],
+                     round(tf["composed"] / tf["flash"], 2)))
 
 
-def main(attn_only: bool = False) -> None:
+def main(attn_only: bool = False, flash_only: bool = False) -> None:
     rows = [("kernel", "case", "max_err", "hbm_bytes_unfused",
              "hbm_bytes_fused", "traffic_saving")]
+    if flash_only:
+        _attention_rows(rows, flash_only=True)
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        C.emit("kernel_micro_flash", rows)
+        return
     if attn_only:
         _attention_rows(rows)
         for r in rows:
@@ -251,4 +314,5 @@ def main(attn_only: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    main(attn_only="--attn" in sys.argv[1:])
+    main(attn_only="--attn" in sys.argv[1:],
+         flash_only="--flash" in sys.argv[1:])

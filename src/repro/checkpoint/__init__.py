@@ -1,3 +1,3 @@
 from repro.checkpoint.ckpt import (
-    save, save_async, wait_async, restore, latest_step,
+    content_hash, save, save_async, wait_async, restore, latest_step,
 )

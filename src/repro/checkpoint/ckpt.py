@@ -31,6 +31,29 @@ def _tree_paths(tree):
     return flat, treedef
 
 
+def content_hash(tree: Any) -> dict:
+    """Content identity of a pytree WITHOUT writing it to disk — the same
+    sha256[:16] convention the shard manifests use, computed per leaf
+    over (dtype, shape, raw bytes) in flatten order plus one combined
+    digest. ``QuantArtifact`` records this for the fp params a
+    quantization was calibrated against, so a serving process fails fast
+    on a wrong-checkpoint mismatch instead of silently sampling garbage.
+    """
+    flat, _ = _tree_paths(tree)
+    leaves = []
+    combined = hashlib.sha256()
+    for leaf in flat:
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h = hashlib.sha256()
+        h.update(str(a.dtype).encode())
+        h.update(str(tuple(a.shape)).encode())
+        h.update(a.tobytes())
+        leaves.append(h.hexdigest()[:16])
+        combined.update(h.digest())
+    return {"n_leaves": len(flat), "leaves": leaves,
+            "digest": combined.hexdigest()[:16]}
+
+
 def save(path: str, step: int, tree: Any, keep: int = 3,
          shard_bytes: int = _SHARD_BYTES) -> str:
     """Synchronous atomic save. Returns the checkpoint directory."""

@@ -246,14 +246,22 @@ class QuantContext(OpContext):
     kernel=True routes W8A8 linears through the fused int8 Pallas kernels
     ('int8' pack -> fused-quantize matmul, 'int8_mrq' pack -> single-pass
     MRQ matmul) and whole attention blocks through the int8 attention
-    kernels (the ``attention`` seam lowers to QK^T -> fused softmax-MRQ
-    codes -> P·V when the op's '/qk' qparams carry an 'int8_qk' pack and
-    its '/pv' qparams an 'int8_pv' pack); the TGQ timestep group
-    (``self.tgroup``, possibly traced) is resolved inside the kernels —
-    no per-group repacking or retracing.
+    kernels (the ``attention`` seam lowers when the op's '/qk' qparams
+    carry an 'int8_qk' pack and its '/pv' qparams an 'int8_pv' pack);
+    the TGQ timestep group (``self.tgroup``, possibly traced) is resolved
+    inside the kernels — no per-group repacking or retracing.
+
+    ``attn_impl`` picks the attention lowering (kernel=True only):
+    'flash' (default) runs the whole block as ONE Pallas kernel —
+    ``kernels.flash_attn_mrq``: int8 QK^T -> online softmax -> MRQ codes
+    -> dual-region P·V with the (S, S) scores/codes never touching HBM;
+    'composed' keeps the three-kernel chain (``int8_bmm_qk`` ->
+    ``softmax_mrq_codes`` -> ``int8_bmm_pv``) — the exactness oracle the
+    flash path is toleranced against (``ref.flash_vs_composed_atol``).
     """
     qparams: Dict[str, dict] = dataclasses.field(default_factory=dict)
     kernel: bool = False
+    attn_impl: str = "flash"
 
     def _q_in(self, qp, x):
         q = qp.get("x")
@@ -306,17 +314,27 @@ class QuantContext(OpContext):
         return y + ob if ob is not None else y
 
     def attention(self, name, q, k, v, *, mask=None, scale=1.0):
-        # The einsum sites of the attention seam lower to the int8 Pallas
-        # kernels exactly like ctx.linear sites: when serving packs exist
-        # for BOTH matmuls, the whole block runs QK^T -> softmax-to-codes
-        # -> P·V with the probs travelling as int8 codes. Otherwise fall
-        # back to the composed fake-quant seams (OpContext default).
+        # The attention seam lowers to the int8 Pallas kernels exactly
+        # like ctx.linear sites: when serving packs exist for BOTH
+        # matmuls, the whole block runs int8 with the probs never in HBM
+        # as fp — as ONE flash kernel (attn_impl='flash', scores/codes
+        # never in HBM at all) or the composed three-kernel chain
+        # (attn_impl='composed'). Otherwise fall back to the composed
+        # fake-quant seams (OpContext default).
         if self.kernel:
             qk_qp = self.qparams.get(f"{name}/qk") or {}
             pv_qp = self.qparams.get(f"{name}/pv") or {}
             if (qk_qp.get("int8_qk") is not None
                     and pv_qp.get("int8_pv") is not None):
                 from repro.kernels import ops as kops
+                if self.attn_impl == "flash":
+                    return kops.flash_attention(
+                        q, k, v, qk_qp["int8_qk"], pv_qp["int8_pv"],
+                        mask=mask, scale=scale, tgroup=self.tgroup)
+                if self.attn_impl != "composed":
+                    raise ValueError(
+                        f"QuantContext.attn_impl must be 'flash' or "
+                        f"'composed', got {self.attn_impl!r}")
                 return kops.int8_attention(
                     q, k, v, qk_qp["int8_qk"], pv_qp["int8_pv"], mask=mask,
                     scale=scale, tgroup=self.tgroup)

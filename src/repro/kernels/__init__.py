@@ -9,6 +9,10 @@
   - int8_bmm_qk        — batched symmetric int8 QK^T (attention scores),
   - int8_bmm_pv        — batched dual-region int8 P·V consuming the
                          region-signed MRQ prob codes directly,
+  - flash_attn_mrq     — flash-style fused attention: int8 QK^T ->
+                         online softmax -> MRQ codes -> dual-region P·V
+                         in ONE kernel (no (S,S) HBM round-trip; the
+                         serving default, attn_impl="flash"),
   - softmax_mrq        — fused softmax -> MRQ two-region quant-dequant,
   - softmax_mrq_codes  — fused softmax -> MRQ int8 CODES (deployment:
                          feeds int8_bmm_pv; probs never hit HBM as fp),
@@ -20,6 +24,7 @@ pure-jnp oracles tests compare against.
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
+from repro.kernels.flash_attn_mrq import flash_attn_mrq
 from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ops, ref

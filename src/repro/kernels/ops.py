@@ -9,12 +9,17 @@ Serving path (single fused kernel family, see ``int8_fused``):
   - MRQ-signed (post-GELU) inputs -> ``int8_matmul_mrq_fq`` (single W
     traversal, dual region accumulators; replaces the two-matmul
     decomposition),
-  - attention (activation x activation) -> ``int8_attention``: symmetric
-    QK^T (``int8_bmm_qk``), softmax straight to region-signed MRQ codes
-    (``softmax_mrq_codes``), and dual-region P·V consuming the codes
-    directly (``int8_bmm_pv``) — the probabilities never exist in HBM as
-    floats. ``pack_int8_qk`` / ``pack_int8_pv`` build the packs from the
-    calibrated ``attn/qk`` and ``attn/pv`` einsum qparams.
+  - attention (activation x activation) -> ``flash_attention`` (the
+    serving default, ``attn_impl="flash"``): the whole block as ONE
+    ``flash_attn_mrq`` kernel — int8 QK^T, online softmax, MRQ codes and
+    dual-region P·V with the (S, S) scores/codes never touching HBM; or
+    ``int8_attention`` (``attn_impl="composed"``, the exactness oracle):
+    symmetric QK^T (``int8_bmm_qk``), softmax straight to region-signed
+    MRQ codes (``softmax_mrq_codes``), and dual-region P·V consuming the
+    codes directly (``int8_bmm_pv``) — the probabilities never exist in
+    HBM as floats. Both consume the SAME packs, built by
+    ``pack_int8_qk`` / ``pack_int8_pv`` from the calibrated ``attn/qk``
+    and ``attn/pv`` einsum qparams.
 
 Activation-side parameters are packed STACKED along a leading (G,) TGQ
 group axis — per-tensor quantizers pack as G=1 — and the timestep group
@@ -40,6 +45,7 @@ from repro.quant.groups import resolve_group
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
+from repro.kernels.flash_attn_mrq import flash_attn_mrq
 from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ref
@@ -329,6 +335,47 @@ def int8_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
     out = int8_bmm_pv(
         codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"], pv_pack["scale1"],
         pv_pack["scale2"], g=g_pv, out_dtype=out_dtype, interpret=INTERPRET)
+    return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+
+
+def flash_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
+                    scale=1.0, tgroup=None, out_dtype=None):
+    """Flash-style int8 grouped SDPA: ONE kernel per (batch·head, q-tile),
+    no (S, S) scores/codes HBM round-trip.
+
+    Same contract and packs as :func:`int8_attention` (which remains the
+    composed three-kernel exactness oracle — ``attn_impl="composed"``):
+    q: (B, Sq, Hk, G, hd); k, v: (B, Skv, Hk, hd); mask broadcastable to
+    (B, Hk, G, Sq, Skv) boolean or None; ``scale`` folded into the QK^T
+    dequant scale. The two pack sides resolve their TGQ groups
+    independently (different group counts allowed) and both indices ride
+    one scalar-prefetch vector, so the surrounding ``ddpm_sample`` scan
+    still compiles once. Flash ≡ composed within
+    ``ref.flash_vs_composed_atol`` (the online-rescale rounding
+    contract); kv tiles stream with NEG_INF lane masking applied before
+    the online max, so ragged Skv (e.g. S = 77) is exact.
+    """
+    out_dtype = out_dtype or q.dtype
+    B, Sq, Hk, G, hd = q.shape
+    Skv = k.shape[1]
+    BHG = B * Hk * G
+    g_qk = _group_index(qk_pack, tgroup)
+    g_pv = _group_index(pv_pack, tgroup)
+
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(BHG, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
+    mf = None
+    if mask is not None:
+        mf = jnp.broadcast_to(mask, (B, Hk, G, Sq, Skv)
+                              ).reshape(BHG, Sq, Skv)
+
+    out = flash_attn_mrq(
+        qf, kf, vf, qk_pack["s_q"], qk_pack["s_k"],
+        qk_pack["scale"] * jnp.float32(scale), pv_pack["s1"],
+        pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+        g_qk=g_qk, g_pv=g_pv, mask=mf, out_dtype=out_dtype,
+        interpret=INTERPRET)
     return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 

@@ -176,6 +176,111 @@ def int8_attention_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
                            pv_pack["scale2"], g=g, out_dtype=out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# flash-style fused attention (single kernel, no (S,S) HBM round-trip)
+# ---------------------------------------------------------------------------
+def flash_attn_mrq_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
+                       g_qk=0, g_pv=0, bits: int = 8, bn: int = 128,
+                       out_dtype=jnp.float32):
+    """Tile-faithful oracle for ``flash_attn_mrq`` over FLATTENED
+    (B, S, hd) operands (kv materialized per q batch — the kernel's
+    ``b // rep`` GQA gather is equivalence-tested separately).
+
+    Replays the kernel's exact per-kv-tile recurrence — int8 QK^T,
+    NEG_INF lane masking BEFORE the online max, running max/denominator,
+    MRQ two-region codes against the running normalization, dual-region
+    integer P·V with the fp rescale — so kernel vs oracle comparisons are
+    (jitted) bit-exact, the same contract as the composed kernels.
+    """
+    from repro.nn.ctx import NEG_INF
+    from repro.kernels.int8_matmul import _ceil
+    B, M, D = q.shape
+    N = k.shape[1]
+    half = 2 ** (bits - 1)
+    bn_ = min(bn, _ceil(N))                    # the kernel's tile rounding
+    Np = -bn_ * (-N // bn_)
+
+    sq_g = jnp.take(qk_pack["s_q"], g_qk, axis=0)[0]
+    sk_g = jnp.take(qk_pack["s_k"], g_qk, axis=0)[0]
+    qs_g = jnp.take(qk_pack["scale"], g_qk, axis=0)[0] * scale
+    s1_g = jnp.take(pv_pack["s1"], g_pv, axis=0)[0]
+    sv_g = jnp.take(pv_pack["s_v"], g_pv, axis=0)[0]
+    sc1_g = jnp.take(pv_pack["scale1"], g_pv, axis=0)[0]
+    sc2_g = jnp.take(pv_pack["scale2"], g_pv, axis=0)[0]
+    s2 = 1.0 / half
+
+    q8 = sym_quantize_int8_ref(q, sq_g, bits).astype(jnp.int32)
+    k8 = sym_quantize_int8_ref(
+        jnp.pad(k.astype(jnp.float32), ((0, 0), (0, Np - N), (0, 0))),
+        sk_g, bits).astype(jnp.int32)
+    v8 = sym_quantize_int8_ref(
+        jnp.pad(v.astype(jnp.float32), ((0, 0), (0, Np - N), (0, 0))),
+        sv_g, bits).astype(jnp.int32)
+    if mask is not None:
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, Np - N)))
+
+    m_run = jnp.full((B, M, 1), -1e30, jnp.float32)
+    l_run = jnp.zeros((B, M, 1), jnp.float32)
+    acc1 = jnp.zeros((B, M, D), jnp.float32)
+    acc2 = jnp.zeros((B, M, D), jnp.float32)
+    col = jnp.arange(Np)
+    for n0 in range(0, Np, bn_):
+        kt = k8[:, n0:n0 + bn_]
+        vt = v8[:, n0:n0 + bn_]
+        s = jax.lax.dot_general(
+            q8, kt, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32).astype(jnp.float32) * qs_g
+        s = jnp.where(col[n0:n0 + bn_][None, None, :] < N, s, NEG_INF)
+        if mask is not None:
+            s = jnp.where(mask[:, :, n0:n0 + bn_], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m_new)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(e, axis=-1, keepdims=True)
+        p = e / l_new
+        region1 = p < half * s1_g
+        c1 = jnp.where(region1, jnp.clip(jnp.round(p / s1_g), 0, half - 1),
+                       0.0).astype(jnp.int32)
+        c2 = jnp.where(region1, 0.0, jnp.clip(jnp.round(p / s2), 0, half)
+                       ).astype(jnp.int32)
+        dims = (((2,), (1,)), ((0,), (0,)))
+        d1 = jax.lax.dot_general(c1, vt, dims,
+                                 preferred_element_type=jnp.int32)
+        d2 = jax.lax.dot_general(c2, vt, dims,
+                                 preferred_element_type=jnp.int32)
+        rho = corr * l_run / l_new
+        acc1 = acc1 * rho + d1.astype(jnp.float32)
+        acc2 = acc2 * rho + d2.astype(jnp.float32)
+        m_run, l_run = m_new, l_new
+    return (acc1 * sc1_g + acc2 * sc2_g).astype(out_dtype)
+
+
+def flash_vs_composed_atol(pv_pack, g, n_kv: int, bits: int = 8) -> float:
+    """The documented flash ≡ composed tolerance contract (worst case).
+
+    Both paths dequantize each probability to within half a step of the
+    true softmax value; the flash path's codes round against the RUNNING
+    normalization, but the running estimate times the subsequent rescale
+    factors equals the final normalized probability exactly in real
+    arithmetic, and every rescale factor is <= 1 — so the per-element
+    dequantized-probability divergence between the two paths is bounded
+    by one coarse step ``s2 = 1/2^{k-1}`` (fine-region elements are
+    tighter). Each output element sums ``n_kv`` such probabilities
+    against dequantized values of magnitude <= (2^{k-1}-1)·s_v[g]:
+
+        |flash - composed| <= n_kv · s2 · (2^{k-1}-1) · s_v[g]
+
+    This is deliberately loose (worst case, every code off by a full
+    region-2 step in the same direction); the sweeps in
+    ``tests/test_flash_attn.py`` additionally assert the observed error
+    sits far inside it.
+    """
+    import numpy as np
+    half = 2 ** (bits - 1)
+    s_v = float(np.asarray(jnp.take(pv_pack["s_v"], g, axis=0))[0])
+    return n_kv * (1.0 / half) * (half - 1) * s_v
+
+
 def act_mrq_ref(x, s_neg, s_pos, bits: int, kind: str = "gelu",
                 out_dtype=jnp.float32):
     """GELU/SiLU (f32) then MRQ signed two-region quant-dequant."""

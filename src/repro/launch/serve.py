@@ -65,6 +65,13 @@ def main() -> None:
     ap.add_argument("--calib", default="range", choices=("range", "ho"),
                     help="w8a8/w6a6 calibration: fast range-only (serving "
                          "bring-up) or the paper's full HO search")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=("flash", "composed"),
+                    help="w8a8 attention lowering: 'flash' = one fused "
+                         "Pallas kernel (default; no (S,S) HBM "
+                         "round-trip), 'composed' = the three-kernel "
+                         "exactness oracle. Unset keeps the recipe/"
+                         "artifact default")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="after calibrating, persist the QuantArtifact "
                          "(qparams + int8 packs + recipe + provenance) so "
@@ -131,7 +138,7 @@ def main() -> None:
             # source of truth (the CLI-built schedule would silently win
             # over an artifact calibrated under a different chain)
             engine = ServeEngine.from_artifact(
-                params, artifact, mesh=mesh,
+                params, artifact, mesh=mesh, attn_impl=args.attn_impl,
                 microbatch=args.microbatch, step_buckets=(args.steps,))
         else:
             if args.quantize != "none":
@@ -140,6 +147,8 @@ def main() -> None:
                 # recipe must describe what ran (quantize() enforces it)
                 ho_kw = {"n_alpha": 8, "rounds": 2} \
                     if args.calib == "ho" else {}
+                if args.attn_impl is not None:
+                    ho_kw["attn_impl"] = args.attn_impl
                 recipe = QuantRecipe(bits=args.quantize, method=args.calib,
                                      seed=args.seed, **ho_kw)
                 t0 = time.perf_counter()

@@ -133,10 +133,14 @@ def quantize(params, model_cfg, dif_cfg, recipe: QuantRecipe,
         from repro.kernels.ops import convert_for_kernels
         qparams = convert_for_kernels(qparams, weights)
 
+    from repro.checkpoint import ckpt
     meta = {
         "format_version": ARTIFACT_VERSION,
         "model": {"class": type(model_cfg).__name__,
                   "cfg": dataclasses.asdict(model_cfg)},
+        # content identity of the fp tree this calibration ran against —
+        # from_artifact / load(params=...) fail fast on any other params
+        "params_hash": ckpt.content_hash(params),
         "dif": dataclasses.asdict(dif_cfg),
         "tgq_groups": dif_cfg.tgq_groups,
         "tgq_group_boundaries": [list(b) for b in group_boundaries(

@@ -124,10 +124,14 @@ class QuantArtifact:
                                          "int8_pv"))
                    for qp in self.qparams.values())
 
-    def context(self, kernel: Optional[bool] = None):
+    def context(self, kernel: Optional[bool] = None,
+                attn_impl: Optional[str] = None):
         """The op context serving this artifact — replaces
         ``make_quant_context``. ``kernel=None`` auto-selects the fused
-        int8 kernel path exactly when the artifact carries packs."""
+        int8 kernel path exactly when the artifact carries packs;
+        ``attn_impl=None`` uses the recipe's recorded attention lowering
+        ('flash' fused single-kernel / 'composed' three-kernel oracle —
+        both consume the same packs, so overriding is always safe)."""
         from repro.core.contexts import QuantContext
         if kernel is None:
             kernel = self.has_kernel_packs
@@ -136,7 +140,41 @@ class QuantArtifact:
                 "artifact has no int8 kernel packs (recipe "
                 f"{self.recipe.bits}/{self.recipe.method}); serve it with "
                 "kernel=False (fake-quant) or re-quantize at w8a8")
-        return QuantContext(qparams=self.qparams, kernel=kernel)
+        if attn_impl is None:
+            attn_impl = self.recipe.attn_impl
+        return QuantContext(qparams=self.qparams, kernel=kernel,
+                            attn_impl=attn_impl)
+
+    # -- model identity -----------------------------------------------------
+    @property
+    def params_hash(self) -> Optional[dict]:
+        """The fp-params content hash recorded at quantize() time
+        (``checkpoint.ckpt.content_hash``), or None for artifacts written
+        before hashes were recorded."""
+        return self.meta.get("params_hash")
+
+    def check_params(self, params) -> None:
+        """Fail fast if ``params`` is not the fp tree this artifact was
+        calibrated against. Artifacts without a recorded hash (older
+        format) pass — there is nothing to check against."""
+        want = self.params_hash
+        if want is None:
+            return
+        got = ckpt.content_hash(params)
+        if got["digest"] == want["digest"]:
+            return
+        if got["n_leaves"] != want["n_leaves"]:
+            raise ValueError(
+                f"params mismatch: artifact was calibrated against a tree "
+                f"with {want['n_leaves']} leaves, got {got['n_leaves']} — "
+                "wrong checkpoint for this artifact?")
+        n_bad = sum(1 for a, b in zip(got["leaves"], want["leaves"])
+                    if a != b)
+        raise ValueError(
+            f"params content hash mismatch: {n_bad}/{want['n_leaves']} "
+            f"leaves differ from the fp params this artifact was "
+            f"calibrated against (digest {got['digest']} != "
+            f"{want['digest']}) — wrong checkpoint for this artifact?")
 
     def model_cfg(self):
         m = self.meta.get("model") or {}
@@ -193,12 +231,15 @@ class QuantArtifact:
         return path
 
     @classmethod
-    def load(cls, path: str,
-             expect_recipe: Optional[QuantRecipe] = None) -> "QuantArtifact":
+    def load(cls, path: str, expect_recipe: Optional[QuantRecipe] = None,
+             params=None) -> "QuantArtifact":
         """Load from ``path``. With ``expect_recipe``, raise ``ValueError``
         if the stored recipe differs (field-by-field diff in the message)
         — the cold-start guard against serving a stale/mismatched
-        deployment artifact."""
+        deployment artifact. With ``params``, additionally verify the fp
+        tree against the artifact's recorded content hash
+        (:meth:`check_params`) — the wrong-checkpoint guard
+        (``ServeEngine.from_artifact`` runs the same check)."""
         doc_path = os.path.join(path, _ARTIFACT_JSON)
         if not os.path.exists(doc_path):
             raise FileNotFoundError(f"no quantization artifact at {path} "
@@ -235,4 +276,7 @@ class QuantArtifact:
                              f"{doc['n_leaves']} vs ckpt {len(like)}")
         leaves = ckpt.restore(path, like, step=step) if like else []
         qparams = _decode(doc["spec"], list(leaves))
-        return cls(qparams=qparams, recipe=recipe, meta=doc["meta"])
+        art = cls(qparams=qparams, recipe=recipe, meta=doc["meta"])
+        if params is not None:
+            art.check_params(params)
+        return art

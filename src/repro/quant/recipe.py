@@ -23,6 +23,7 @@ from typing import Optional, Tuple
 
 BITS = {"w8a8": (8, 8), "w6a6": (6, 6), "w4a4": (4, 4)}
 METHODS = ("range", "ho")
+ATTN_IMPLS = ("flash", "composed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,13 @@ class QuantRecipe:
               values under method='range' (that pipeline has no such
               knobs, and silently recording them in the artifact would
               describe a calibration that never happened).
+    attn_impl : how w8a8 serving lowers the attention seam — 'flash'
+              (default: one fused Pallas kernel, no (S,S) HBM
+              round-trip) or 'composed' (the three-kernel exactness
+              oracle). A serving-lowering choice, not a calibration
+              one — both impls consume the identical packs — but it
+              rides the recipe so an artifact records the lowering its
+              deployment was validated against (both methods honor it).
     seed    : base PRNG seed for calibration draws and row subsampling.
     """
     bits: str = "w8a8"
@@ -67,6 +75,7 @@ class QuantRecipe:
     calib_batch: int = 4
     skip_patterns: Tuple[str, ...] = ("router",)
     weight_only_patterns: Tuple[str, ...] = ()
+    attn_impl: str = "flash"
     seed: int = 0
 
     def __post_init__(self):
@@ -78,6 +87,10 @@ class QuantRecipe:
             raise ValueError(
                 f"QuantRecipe.method must be one of {METHODS}, "
                 f"got {self.method!r}")
+        if self.attn_impl not in ATTN_IMPLS:
+            raise ValueError(
+                f"QuantRecipe.attn_impl must be one of {ATTN_IMPLS}, "
+                f"got {self.attn_impl!r}")
         # frozen dataclass: normalize list -> tuple via object.__setattr__
         for f in ("skip_patterns", "weight_only_patterns"):
             object.__setattr__(self, f, tuple(getattr(self, f)))

@@ -19,10 +19,11 @@ One :class:`ServeEngine` owns
   index), so all timestep groups share one executable; only a new step
   bucket triggers a compile. With int8-packed qparams the executable
   contains the WHOLE quantized block: fused int8 linears AND the int8
-  attention path (QK^T -> softmax-to-MRQ-codes -> P·V via
-  ``kernels.int8_bmm`` / ``softmax_mrq_codes``, probs travelling as int8
-  codes) — the DDPM scan stays one compiled program with no fp attention
-  island inside.
+  attention path — by default ONE flash-style kernel per block
+  (``kernels.flash_attn_mrq``: int8 QK^T -> online softmax -> MRQ codes
+  -> P·V, the (S,S) scores/codes never touching HBM), or the composed
+  three-kernel chain under ``attn_impl="composed"`` — so the DDPM scan
+  stays one compiled program with no fp attention island inside.
 
 ``check_rep=False`` on the shard_map is required: pallas_call has no
 replication rule, and the body is embarrassingly data-parallel anyway.
@@ -92,7 +93,8 @@ class ServeEngine:
         }
 
     @classmethod
-    def from_artifact(cls, params, artifact, *, kernel=None, sched=None,
+    def from_artifact(cls, params, artifact, *, kernel=None,
+                      attn_impl: Optional[str] = None, sched=None,
                       mesh: Optional[Mesh] = None, microbatch: int = 8,
                       step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
                       clip_x0: Optional[float] = None) -> "ServeEngine":
@@ -101,13 +103,20 @@ class ServeEngine:
         calibration in the serving process.
 
         The artifact supplies the model/diffusion configs and the op
-        context (``artifact.context(kernel=...)``: fused int8 kernels
-        when packs exist, fake-quant otherwise); ``params`` are the fp
-        model weights (artifacts carry quantizer state and int8 weight
-        codes, never the fp tree). A d_model mismatch between ``params``
-        and the artifact's recorded config fails fast here rather than
-        as a shape error inside the compiled sampler.
+        context (``artifact.context(kernel=..., attn_impl=...)``: fused
+        int8 kernels when packs exist, fake-quant otherwise;
+        ``attn_impl=None`` serves the attention lowering the artifact's
+        recipe records — 'flash' single-kernel by default, 'composed'
+        for the three-kernel oracle); ``params`` are the fp model
+        weights (artifacts carry quantizer state and int8 weight codes,
+        never the fp tree). Two identity guards fail fast here rather
+        than as garbage samples inside the compiled sampler: a d_model
+        mismatch against the artifact's recorded config, and — when the
+        artifact records an fp-params content hash — any params tree
+        other than the one the calibration ran against
+        (``artifact.check_params``).
         """
+        artifact.check_params(params)
         dcfg = artifact.model_cfg()
         d_model = params.get("x_proj", {}).get("w", None) if isinstance(
             params, dict) else None
@@ -117,9 +126,9 @@ class ServeEngine:
                 f"DiTCfg.d_model {dcfg.d_model} — wrong checkpoint for this "
                 "artifact?")
         return cls(params, dcfg, artifact.dif_cfg(), sched,
-                   ctx=artifact.context(kernel=kernel), mesh=mesh,
-                   microbatch=microbatch, step_buckets=step_buckets,
-                   clip_x0=clip_x0)
+                   ctx=artifact.context(kernel=kernel, attn_impl=attn_impl),
+                   mesh=mesh, microbatch=microbatch,
+                   step_buckets=step_buckets, clip_x0=clip_x0)
 
     # -- executable construction -------------------------------------------
     def _build(self, steps: int):

@@ -28,7 +28,7 @@ from repro.kernels import ops, ref
 
 BMM_SHAPES = [  # (B, M, N, D) — batched attention matrices, incl. ragged
     (1, 8, 8, 8), (2, 16, 16, 16), (3, 7, 13, 5), (1, 130, 129, 17),
-    (4, 33, 65, 24), (2, 1, 5, 3),
+    (4, 33, 65, 24), (2, 1, 5, 3), (2, 77, 77, 24),   # S=77 odd length
 ]
 
 
@@ -315,9 +315,11 @@ def test_int8_attention_matches_composed_oracle():
 
 
 def test_quant_context_attention_routes_through_kernels():
-    """QuantContext(kernel=True).attention with both packs present takes
-    the int8 path; without kernel it composes the fake-quant seams, and
-    the two agree closely (same quantizers, int vs fp arithmetic)."""
+    """QuantContext(kernel=True, attn_impl='composed').attention with both
+    packs present takes the composed int8 path; without kernel it
+    composes the fake-quant seams, and the two agree closely (same
+    quantizers, int vs fp arithmetic). The default attn_impl='flash'
+    routing is covered in tests/test_flash_attn.py."""
     G = 4
     qk_qp, pv_qp = _attn_qparams(G, seed=3)
     qparams = {"attn/qk": dict(qk_qp, int8_qk=ops.pack_int8_qk(qk_qp)),
@@ -339,7 +341,7 @@ def test_quant_context_attention_routes_through_kernels():
     try:
         for g in range(G):
             y_kern = QuantContext(qparams=qparams, kernel=True,
-                                  tgroup=g).attention(
+                                  attn_impl="composed", tgroup=g).attention(
                 "attn", q, k, v, scale=hd ** -0.5)
             y_fake = QuantContext(qparams=qparams, tgroup=g).attention(
                 "attn", q, k, v, scale=hd ** -0.5)
@@ -363,9 +365,11 @@ def test_quant_context_attention_routes_through_kernels():
 # serving: one compiled executable with int8 attention inside the scan
 # ---------------------------------------------------------------------------
 def test_engine_w8a8_runs_int8_attention_compile_once(tiny_dit, monkeypatch):
-    """The engine's w8a8 step executable runs QK^T, softmax->MRQ codes,
-    and P·V through the new kernels, traces ONCE across all timestep
-    groups of the scan, and produces finite samples."""
+    """The engine's w8a8 step executable with attn_impl='composed' runs
+    QK^T, softmax->MRQ codes, and P·V through the three kernels, traces
+    ONCE across all timestep groups of the scan, and produces finite
+    samples (the flash default's single-kernel contract is asserted in
+    tests/test_flash_attn.py)."""
     from repro.diffusion import DiffusionCfg, make_schedule
     from repro.kernels import ops as kops
     from repro.models import dit_apply
@@ -384,7 +388,7 @@ def test_engine_w8a8_runs_int8_attention_compile_once(tiny_dit, monkeypatch):
     assert all(v["int8_pv"]["groups"] == dif.tgq_groups
                for v in qp2.values() if "int8_pv" in v)
     from repro.core import QuantContext
-    ctx = QuantContext(qparams=qp2, kernel=True)
+    ctx = QuantContext(qparams=qp2, kernel=True, attn_impl="composed")
 
     calls = {"qk": 0, "sm": 0, "pv": 0}
     for key, fname in (("qk", "int8_bmm_qk"), ("sm", "softmax_mrq_codes"),

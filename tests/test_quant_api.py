@@ -48,6 +48,18 @@ def test_recipe_validation_and_roundtrip():
     assert "bits" not in d
 
 
+def test_recipe_attn_impl():
+    with pytest.raises(ValueError, match="attn_impl"):
+        QuantRecipe(attn_impl="fused")
+    r = QuantRecipe(attn_impl="composed")
+    assert QuantRecipe.from_dict(r.to_dict()) == r
+    assert QuantRecipe().attn_impl == "flash"              # serving default
+    assert "attn_impl" in QuantRecipe().diff(r)
+    # a lowering choice, not a calibration one: valid under both methods
+    assert QuantRecipe(method="range", attn_impl="composed").attn_impl \
+        == "composed"
+
+
 def test_recipe_matches_ptq_config():
     """The 'ho' dispatch must reproduce PTQConfig semantics exactly —
     the recipe is a rename, not a re-tune."""
@@ -142,6 +154,41 @@ def test_recipe_tgq_groups_overrides_dif(tiny_dit):
     assert len(art.meta["tgq_group_boundaries"]) == 2
     assert any(v.get("int8", {}).get("groups") == 2
                for v in art.qparams.values())
+
+
+def test_artifact_params_hash_binding(tiny_dit, tmp_path):
+    """quantize() records the fp-params content hash; from_artifact and
+    load(params=...) fail fast on any other params tree (the
+    wrong-checkpoint guard); hash-less (older) artifacts skip the check."""
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, RANGE_RECIPE)
+    ph = art.params_hash
+    assert ph is not None and ph["n_leaves"] > 0 and ph["digest"]
+    art.check_params(p)                                    # the right tree
+    ServeEngine.from_artifact(p, art, microbatch=2, step_buckets=(2,))
+
+    bad = jax.tree.map(lambda a: a, p)
+    bad["final"]["w"] = bad["final"]["w"] + 1e-3           # one leaf off
+    with pytest.raises(ValueError, match="content hash mismatch"):
+        ServeEngine.from_artifact(bad, art, microbatch=2, step_buckets=(2,))
+    with pytest.raises(ValueError, match="1/"):            # counts bad leaves
+        art.check_params(bad)
+
+    # the hash survives save -> load; load(params=...) runs the check
+    path = str(tmp_path / "art")
+    art.save(path)
+    art2 = QuantArtifact.load(path, params=p)
+    assert art2.params_hash == ph
+    with pytest.raises(ValueError, match="content hash mismatch"):
+        QuantArtifact.load(path, params=bad)
+
+    # artifacts from before hashes were recorded have nothing to check
+    art2.meta.pop("params_hash")
+    art2.check_params(bad)                                 # no raise
+
+    # a structurally different tree reports the leaf-count mismatch
+    with pytest.raises(ValueError, match="leaves"):
+        art.check_params({"only": p["final"]["w"]})
 
 
 def test_artifact_recipe_mismatch_raises(tiny_dit, tmp_path):
