@@ -1,5 +1,6 @@
 .PHONY: verify verify-all kernel-micro bench-attn bench-flash \
-	serve-throughput docs-check artifact-smoke
+	serve-throughput serve-poisson chaos serve-async-smoke docs-check \
+	artifact-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -25,6 +26,22 @@ bench-flash:
 
 serve-throughput:
 	PYTHONPATH=src python -m benchmarks.serve_throughput
+
+# open-loop Poisson arrivals: continuous batching vs the step-bucketed
+# baseline at equal modeled cost, + async==sync bit-identity (measured)
+serve-poisson:
+	PYTHONPATH=src python -m benchmarks.serve_throughput --arrivals poisson
+
+# fault-injection suite under a hard timeout (a hung async loop must
+# FAIL, not stall); CI runs the same command in its chaos job
+chaos:
+	timeout 600 python -m pytest tests/test_chaos.py tests/test_async_serving.py -q
+
+# async continuous-batching serving smoke on CPU (quantized)
+serve-async-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-2 --smoke \
+		--async --requests 4 --microbatch 2 --steps 2 --chunk 2 \
+		--quantize w8a8
 
 # docs link/anchor check + execution of the `# ci-smoke` quickstart lines
 docs-check:

@@ -150,6 +150,51 @@ def latest_step(path: str) -> Optional[int]:
     return best
 
 
+def _shard_leaves(manifest: dict, shard_idx: int) -> list:
+    """Leaf indices stored in shard ``shard_idx`` (manifest order)."""
+    return [int(i) for i, si in manifest["index"].items()
+            if int(si) == shard_idx]
+
+
+def verify_shards(path: str, step: Optional[int] = None) -> None:
+    """Integrity-check every npz shard of a committed checkpoint against
+    the manifest's recorded sha256[:16] content hashes.
+
+    A flipped byte in a shard otherwise surfaces as a cryptic
+    numpy/zlib/zip exception deep inside ``np.load`` (or worse, decodes to
+    silently wrong values in the uncompressed regions) far from the
+    checkpoint path. This names the offending shard file AND the leaves it
+    carries (index/dtype/shape), so the error points at what is actually
+    lost. Raises ``ValueError`` on corruption, ``FileNotFoundError`` on a
+    missing/truncated-away shard.
+    """
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    for si_name in sorted(manifest["hashes"]):
+        fn = os.path.join(d, si_name)
+        if not os.path.exists(fn):
+            raise FileNotFoundError(
+                f"checkpoint shard {fn} is missing (manifest lists it)")
+        with open(fn, "rb") as f:
+            got = hashlib.sha256(f.read()).hexdigest()[:16]
+        want = manifest["hashes"][si_name]
+        if got == want:
+            continue
+        si = int(si_name[len("shard_"):-len(".npz")])
+        leaves = _shard_leaves(manifest, si)
+        desc = ", ".join(
+            f"leaf {i} ({manifest['dtypes'][i]}"
+            f"{tuple(manifest['shapes'][i])})" for i in leaves[:8])
+        more = f", … {len(leaves) - 8} more" if len(leaves) > 8 else ""
+        raise ValueError(
+            f"checkpoint shard {fn} is corrupted: content hash {got} != "
+            f"manifest {want}; expected leaves: {desc}{more}")
+
+
 def restore(path: str, like: Any, step: Optional[int] = None) -> Any:
     """Restore into the structure of ``like`` (shape/dtype-checked)."""
     step = step if step is not None else latest_step(path)
@@ -166,7 +211,15 @@ def restore(path: str, like: Any, step: Optional[int] = None) -> Any:
     for i, proto in enumerate(flat_like):
         si = manifest["index"][str(i)]
         if si not in cache:
-            cache[si] = np.load(os.path.join(d, f"shard_{si:05d}.npz"))
+            fn = os.path.join(d, f"shard_{si:05d}.npz")
+            try:
+                cache[si] = np.load(fn)
+            except Exception as e:
+                raise ValueError(
+                    f"checkpoint shard {fn} failed to load "
+                    f"({type(e).__name__}: {e}) — run "
+                    "checkpoint.ckpt.verify_shards for an integrity "
+                    "report") from e
         a = cache[si][f"leaf_{i}"]
         assert list(a.shape) == list(proto.shape), \
             f"leaf {i}: ckpt {a.shape} vs model {proto.shape}"

@@ -245,6 +245,126 @@ def ddpm_sample_paired(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y,
     return x
 
 
+# ---------------------------------------------------------------------------
+# slot-wise chunked sampler (continuous batching)
+# ---------------------------------------------------------------------------
+def make_slot_schedule(cfg: DiffusionCfg, sched, step_buckets):
+    """Stacked per-bucket respaced schedules for :func:`ddpm_chunk_slots`.
+
+    The async engine's slot pool mixes requests from DIFFERENT step
+    buckets (and different positions within them) in one dispatch, so the
+    chunk executable gathers its schedule per slot: each configured bucket
+    ``b`` contributes one row of ``use_ts`` (descending original-chain
+    timesteps) and of every respaced-schedule array (ascending respaced
+    index, exactly ``respaced_schedule``'s layout), padded to the longest
+    bucket. Padding cells are never gathered — the per-slot respaced index
+    is always clamped into ``[0, n_of[bucket])``.
+    """
+    buckets = tuple(sorted(int(b) for b in step_buckets))
+    uts = [respaced_timesteps(cfg.T, b) for b in buckets]
+    rss = [respaced_schedule(sched, u) for u in uts]
+    n_of = np.asarray([len(u) for u in uts], np.int32)
+    n_max = int(n_of.max())
+    use_ts = np.zeros((len(buckets), n_max), np.int32)
+    fields = ("abar", "abar_prev", "betas", "alphas", "post_var")
+    stk = {f: np.full((len(buckets), n_max), 0.5, np.float32)
+           for f in fields}
+    for k, (u, rs) in enumerate(zip(uts, rss)):
+        use_ts[k, :len(u)] = u
+        for f in fields:
+            stk[f][k, :len(u)] = np.asarray(rs[f])
+    out = {"buckets": buckets, "n_of": jnp.asarray(n_of),
+           "use_ts": jnp.asarray(use_ts)}
+    out.update({f: jnp.asarray(stk[f]) for f in fields})
+    return out
+
+
+def ddpm_init_latent(seed, n, sshape):
+    """The initial latent of :func:`ddpm_sample_paired` for one request:
+    ``normal(fold_in(PRNGKey(seed), n))`` where ``n`` is the request's
+    respaced chain length (``seed``/``n`` may be traced)."""
+    return jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(seed), n), tuple(sshape),
+        jnp.float32)
+
+
+def ddpm_chunk_slots(eps_fn: Callable, cfg: DiffusionCfg, slot_sched,
+                     x, pos, bk, y, seeds, guidance, *, null_label: int,
+                     chunk: int, ctx=_FP, clip_x0: Optional[float] = None):
+    """Advance every slot ``chunk`` denoising steps from its OWN position.
+
+    The continuous-batching core: ``x[b]`` is slot ``b``'s latent,
+    ``pos[b]`` its scan position in bucket ``bk[b]``'s respaced chain
+    (``slot_sched`` from :func:`make_slot_schedule`). A slot with
+    ``pos >= n_of[bk]`` is finished/free and is skipped entirely
+    (``lax.cond`` — free slots cost no model forwards, unlike sync-path
+    padding).
+
+    Bit-identity contract: a slot's trajectory is bit-identical to
+    ``ddpm_sample_paired`` run on its request alone — same
+    ``fold_in(PRNGKey(seed), i)`` noise (``i`` = scan position), same
+    CFG-paired 2-row forward, same update arithmetic. Slots run under
+    ``lax.map`` (a scan, not vmap), so each slot's TGQ group stays a
+    SCALAR for the fused kernels' scalar-prefetch contract even when the
+    pool mixes timesteps — which is exactly why ONE executable serves all
+    timestep mixtures. The trade: the kernel-path model weights are
+    re-read per slot, so per-dispatch cost scales with ACTIVE slots; at
+    the latency-optimized serving point (one slot per device) this equals
+    the sync path's cost (``benchmarks/serve_throughput.py`` charges it
+    honestly).
+
+    Returns ``(x, pos, bad)``; ``bad[b]`` flags any non-finite value in
+    slot ``b``'s latent — the post-chunk NaN/Inf quarantine guard, checked
+    on device so the host never pulls the pool to look for poison.
+    """
+    S = slot_sched
+    n_of, use_ts = S["n_of"], S["use_ts"]
+    sshape = tuple(x.shape[1:])
+    null = jnp.asarray(null_label, jnp.int32)
+
+    def one_slot(args):
+        xb, p, b, yb, sd, gs = args
+        n = n_of[b]
+
+        def body(carry, _):
+            xc, pc = carry
+            run = pc < n
+            i = jnp.minimum(pc, n - 1)                # safe gather when done
+            idx = n - 1 - i                           # respaced index (asc)
+            t_orig = use_ts[b, i]
+            g = tgroup_of(t_orig, cfg.T, cfg.tgq_groups)
+            tb = jnp.full((2,), t_orig, jnp.int32)
+            yy = jnp.stack([yb.astype(jnp.int32), null])
+            eps2 = eps_fn(jnp.concatenate([xc[None], xc[None]]), tb, yy,
+                          ctx.with_tgroup(g))
+            eps = eps2[1] + gs * (eps2[0] - eps2[1])  # eps_u + s(eps_c-eps_u)
+
+            abar = S["abar"][b, idx]
+            abar_prev = S["abar_prev"][b, idx]
+            beta = S["betas"][b, idx]
+            alpha = S["alphas"][b, idx]
+            x0 = (xc - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+            if clip_x0 is not None:
+                x0 = jnp.clip(x0, -clip_x0, clip_x0)
+            mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                    + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * xc)
+            noise = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(sd), i), sshape,
+                jnp.float32)
+            nonzero = (idx > 0).astype(jnp.float32)
+            xn = mean + nonzero * jnp.sqrt(S["post_var"][b, idx]) * noise
+            return (jnp.where(run, xn, xc), jnp.where(run, pc + 1, pc)), None
+
+        def advance(carry):
+            return jax.lax.scan(body, carry, None, length=chunk)[0]
+
+        return jax.lax.cond(p < n, advance, lambda c: c, (xb, p))
+
+    x, pos = jax.lax.map(one_slot, (x, pos, bk, y, seeds, guidance))
+    bad = ~jnp.all(jnp.isfinite(x.reshape(x.shape[0], -1)), axis=1)
+    return x, pos, bad
+
+
 def ddpm_sample_python(eps_fn: Callable, cfg: DiffusionCfg, sched, shape, y,
                        key, steps: Optional[int] = None, ctx=_FP,
                        clip_x0: Optional[float] = None):

@@ -84,6 +84,22 @@ def main() -> None:
                     help="np.save the served samples (request-id order) — "
                          "used by tests to assert bit-identity across "
                          "artifact save/load")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="DiT: serve through the fault-tolerant async "
+                         "continuous-batching engine (slot pool, chunked "
+                         "dispatches, NaN quarantine, deadlines) instead "
+                         "of the synchronous step-bucketed path; samples "
+                         "are bit-identical either way")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="async: denoising steps advanced per compiled "
+                         "dispatch (the admission/cancellation granularity)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="async: per-request deadline; requests not "
+                         "finished by a chunk boundary past it are "
+                         "CANCELLED (structured outcome, slot freed)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="async: NaN-quarantine retries per request before "
+                         "a structured FAILED outcome")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.save_artifact is not None and (args.quantize == "none"
@@ -91,6 +107,10 @@ def main() -> None:
         ap.error("--save-artifact requires --quantize (and excludes "
                  "--load-artifact): there is no freshly calibrated "
                  "artifact to save otherwise")
+    if args.async_mode and args.dp > 1:
+        ap.error("--async is single-device (the slot pool trades shard_map "
+                 "DP for continuous-batching freedom); drop --dp or use "
+                 "the synchronous path")
 
     if args.dp > 1:
         os.environ["XLA_FLAGS"] = (
@@ -112,13 +132,19 @@ def main() -> None:
         from repro.diffusion import DiffusionCfg, make_schedule
         from repro.launch.mesh import make_serving_mesh
         from repro.models import dit_init
-        from repro.serving import RequestScheduler, ServeEngine
+        from repro.serving import AsyncServeEngine, RequestScheduler, \
+            ServeEngine
 
         params = dit_init(key, cfg)
         dif = DiffusionCfg(T=1000)
         sched = make_schedule(dif)
-        mesh = make_serving_mesh()
+        mesh = None if args.async_mode else make_serving_mesh()
         artifact = None
+        deadline_s = (args.deadline_ms / 1000.0
+                      if args.deadline_ms is not None else None)
+        async_kw = dict(microbatch=args.microbatch,
+                        step_buckets=(args.steps,), chunk=args.chunk,
+                        max_retries=args.max_retries, deadline_s=deadline_s)
 
         if args.load_artifact is not None:
             # cold-start: the saved artifact IS the calibration — nothing
@@ -137,9 +163,13 @@ def main() -> None:
             # no sched= here: the artifact's recorded DiffusionCfg is the
             # source of truth (the CLI-built schedule would silently win
             # over an artifact calibrated under a different chain)
-            engine = ServeEngine.from_artifact(
-                params, artifact, mesh=mesh, attn_impl=args.attn_impl,
-                microbatch=args.microbatch, step_buckets=(args.steps,))
+            if args.async_mode:
+                engine = AsyncServeEngine.from_artifact(
+                    params, artifact, attn_impl=args.attn_impl, **async_kw)
+            else:
+                engine = ServeEngine.from_artifact(
+                    params, artifact, mesh=mesh, attn_impl=args.attn_impl,
+                    microbatch=args.microbatch, step_buckets=(args.steps,))
         else:
             if args.quantize != "none":
                 from repro.quant import QuantRecipe, quantize
@@ -161,13 +191,47 @@ def main() -> None:
                 if args.save_artifact is not None:
                     artifact.save(args.save_artifact)
                     print(f"saved artifact -> {args.save_artifact}")
-            engine = ServeEngine(params, cfg, dif, sched, ctx=ctx,
-                                 mesh=mesh, microbatch=args.microbatch,
-                                 step_buckets=(args.steps,))
-        sched_q = RequestScheduler(microbatch=args.microbatch,
-                                   step_buckets=(args.steps,))
+            if args.async_mode:
+                engine = AsyncServeEngine(params, cfg, dif, sched, ctx=ctx,
+                                          **async_kw)
+            else:
+                engine = ServeEngine(params, cfg, dif, sched, ctx=ctx,
+                                     mesh=mesh, microbatch=args.microbatch,
+                                     step_buckets=(args.steps,))
         rkey = jax.random.PRNGKey(args.seed + 1)
         labels = jax.random.randint(rkey, (args.requests,), 0, cfg.n_classes)
+
+        if args.async_mode:
+            t0 = time.perf_counter()
+            for i in range(args.requests):
+                engine.submit(int(labels[i]), steps=args.steps,
+                              cfg_scale=args.cfg_scale,
+                              seed=args.seed * 100_000 + i)
+            outcomes = engine.run_until_drained()
+            dt = time.perf_counter() - t0
+            ok = {r: o for r, o in outcomes.items() if o.status == "OK"}
+            samples = np.stack([ok[r].sample for r in sorted(ok)])
+            if args.dump_samples is not None:
+                np.save(args.dump_samples, samples)
+                print(f"dumped {samples.shape} samples -> "
+                      f"{args.dump_samples}")
+            st, m = engine.stats, engine.metrics()
+            print(f"async-served {len(outcomes)} requests x {args.steps} "
+                  f"steps (chunk={args.chunk}) in {dt:.2f}s: "
+                  f"{m['by_status']}, goodput {m['goodput_rps']:.2f} ok/s, "
+                  f"latency p50/p99 {m['latency_p50_s']:.2f}/"
+                  f"{m['latency_p99_s']:.2f}s, queue-wait p50 "
+                  f"{m['queue_wait_p50_s']:.2f}s")
+            print(f"{st['dispatches']} dispatches, {st['chunk_traces']} "
+                  f"chunk trace(s), {st['retries']} retries, "
+                  f"{len(st['degradations'])} degradations")
+            print(f"sample mean={samples.mean():.4f} "
+                  f"std={samples.std():.4f}")
+            return
+
+        sched_q = RequestScheduler(microbatch=args.microbatch,
+                                   step_buckets=(args.steps,),
+                                   n_classes=cfg.n_classes)
         for i in range(args.requests):
             sched_q.submit(int(labels[i]), steps=args.steps,
                            cfg_scale=args.cfg_scale,

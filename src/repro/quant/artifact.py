@@ -274,6 +274,10 @@ class QuantArtifact:
         if len(like) != doc["n_leaves"]:
             raise ValueError(f"leaf count drift at {path}: spec "
                              f"{doc['n_leaves']} vs ckpt {len(like)}")
+        # fail-fast on bit-rot BEFORE np.load touches the shards: a corrupt
+        # byte otherwise surfaces as a cryptic zip/zlib exception (or
+        # silently wrong leaves) far from the artifact path
+        ckpt.verify_shards(path, step=step)
         leaves = ckpt.restore(path, like, step=step) if like else []
         qparams = _decode(doc["spec"], list(leaves))
         art = cls(qparams=qparams, recipe=recipe, meta=doc["meta"])

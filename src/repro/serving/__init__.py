@@ -18,8 +18,16 @@ from repro.serving.batching import (
     DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, bucket_steps,
     coalesce,
 )
-from repro.serving.scheduler import RequestScheduler
-from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import RequestScheduler, validate_label
+from repro.serving.engine import AsyncServeEngine, ServeEngine
+from repro.serving.faults import (
+    EngineFault, FakeClock, Fault, FaultInjected, FaultInjector,
+    degrade_context,
+)
+from repro.serving.lifecycle import (
+    CANCELLED, FAILED, OK, QUEUED, REJECTED, RUNNING, TERMINAL,
+    FaultInfo, RequestOutcome, RequestRecord, summarize,
+)
 from repro.serving.quickcal import range_calibrate as _range_calibrate
 
 

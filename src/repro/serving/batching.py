@@ -26,7 +26,7 @@ CFG request costs two model rows but one scheduling slot.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -41,6 +41,9 @@ class GenRequest:
     steps: int = 50              # requested sampler steps (bucketed up)
     cfg_scale: float = 1.0       # CFG: 1 = conditional, 0 = uncond, >1 guided
     seed: int = 0                # per-request PRNG seed
+    requested_steps: Optional[int] = None   # pre-bucketing ask (None: == steps)
+    deadline_s: Optional[float] = None      # relative deadline from submit
+                                            # (async engine; None = no deadline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +54,8 @@ class GenResult:
     steps: int                   # bucketed step count actually run
     microbatch: int              # size of the batch it rode in
     wall_s: float                # wall time of that microbatch
+    requested_steps: Optional[int] = None   # what the caller asked for
+                                            # before `bucket_steps` rounding
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +71,9 @@ class MicroBatch:
     guidance: np.ndarray         # (B,) float32 CFG scales
     valid: np.ndarray            # (B,) bool
     request_ids: Tuple[int, ...]
+    requested_steps: Tuple[int, ...] = ()   # pre-bucketing asks, parallel to
+                                            # request_ids (() for legacy
+                                            # hand-built microbatches)
 
     @property
     def batch(self) -> int:
@@ -123,5 +131,8 @@ def coalesce(requests: Sequence[GenRequest], batch: int,
                     [r.cfg_scale for r in chunk] + [1.0] * pad, np.float32),
                 valid=np.asarray([True] * len(chunk) + [False] * pad, bool),
                 request_ids=tuple(r.request_id for r in chunk),
+                requested_steps=tuple(
+                    r.requested_steps if r.requested_steps is not None
+                    else r.steps for r in chunk),
             ))
     return out

@@ -31,7 +31,9 @@ replication rule, and the body is embarrassingly data-parallel anyway.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional, Sequence
+import warnings
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,12 +42,19 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.diffusion import DiffusionCfg, ddpm_sample_paired, make_schedule
+from repro.diffusion.ddpm import (
+    ddpm_chunk_slots, ddpm_init_latent, make_slot_schedule,
+)
 from repro.distributed import batch_spec, dp_size, replicated, request_spec
 from repro.models import DiTCfg, dit_apply
 from repro.nn.ctx import FPContext
+from repro.serving import lifecycle as lc
 from repro.serving.batching import (
-    DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, coalesce,
+    DEFAULT_STEP_BUCKETS, GenRequest, GenResult, MicroBatch, bucket_steps,
+    coalesce,
 )
+from repro.serving.faults import EngineFault, degrade_context
+from repro.serving.scheduler import validate_label
 
 
 class ServeEngine:
@@ -185,7 +194,10 @@ class ServeEngine:
             for slot, rid in enumerate(mb.request_ids):
                 results[rid] = GenResult(
                     request_id=rid, sample=samples[slot], steps=mb.steps,
-                    microbatch=mb.batch, wall_s=dt)
+                    microbatch=mb.batch, wall_s=dt,
+                    requested_steps=(mb.requested_steps[slot]
+                                     if slot < len(mb.requested_steps)
+                                     else None))
             self.stats["microbatches"] += 1
             self.stats["requests"] += mb.n_valid
             self.stats["padded_slots"] += mb.n_padded
@@ -196,3 +208,411 @@ class ServeEngine:
         """Convenience: coalesce + run a request list in one call."""
         return self.run(coalesce(requests, self.microbatch,
                                  self.step_buckets))
+
+
+class AsyncServeEngine:
+    """Continuous-batching engine: a slot pool advanced ``chunk`` steps per
+    compiled dispatch, with a full request-lifecycle robustness layer.
+
+    Where :class:`ServeEngine` buckets requests by step count and runs each
+    bucket's whole chain in one blocking call, this engine keeps a pool of
+    ``microbatch`` in-flight slots, each carrying its own
+    ``(pos, bucket, label, seed, guidance)`` state, and every dispatch
+    advances ALL active slots ``chunk`` denoising steps — requests at
+    different timesteps, even different step buckets, share ONE compiled
+    executable (TGQ resolves the timestep group as a traced scalar inside
+    the kernels; see ``ddpm_chunk_slots``). Finished slots are swapped out
+    and queued requests admitted at the next chunk boundary, so a 25-step
+    request never waits for a 100-step neighbour to drain.
+
+    Robustness layer (``repro.serving.lifecycle`` / ``.faults``):
+
+    - bounded-queue admission: ``submit`` rejects with a structured
+      ``queue_full`` / ``bad_label`` outcome instead of dropping;
+    - per-request deadlines + ``cancel``: checked at chunk boundaries, the
+      slot is freed and the request ends ``CANCELLED`` (a request that
+      FINISHES by the boundary still delivers ``OK``);
+    - NaN/Inf quarantine: a post-chunk on-device finiteness guard flags
+      only the poisoned slot; it is reset and retried with the SAME
+      ``fold_in(PRNGKey(seed), step)`` keys — bit-identical on success —
+      and ends ``FAILED`` with a ``nan_poisoned`` error after
+      ``max_retries``;
+    - degradation ladder on dispatch faults: flash attn -> composed
+      kernels -> fake-quant, each step logged; ladder exhausted =>
+      every live request fails structured and :class:`EngineFault` raises.
+
+    The engine runs un-sharded (one device): continuous batching trades
+    the sync path's DP shard_map for slot-level scheduling freedom. Slot
+    state lives on device; per-chunk host traffic is two (B,) arrays
+    (positions + bad flags) — the full latent is pulled once per request,
+    at completion. ``clock`` is injectable (``faults.FakeClock``) so
+    deadline tests never sleep.
+    """
+
+    # a freed slot parks at pos >= every bucket length: bucket 0, pos n_max
+    def __init__(self, params, dcfg: DiTCfg, dif: DiffusionCfg,
+                 sched=None, *, ctx=None, microbatch: int = 4,
+                 step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
+                 chunk: int = 4, max_queue: int = 64, max_retries: int = 2,
+                 deadline_s: Optional[float] = None, clock=time.monotonic,
+                 injector=None, clip_x0: Optional[float] = None):
+        self.dcfg = dcfg
+        self.dif = dif
+        self.sched = sched if sched is not None else make_schedule(dif)
+        self.ctx = ctx if ctx is not None else FPContext()
+        self.microbatch = int(microbatch)
+        self.step_buckets = tuple(sorted(int(b) for b in step_buckets))
+        self.chunk = int(chunk)
+        self.max_queue = int(max_queue)
+        self.max_retries = int(max_retries)
+        self.deadline_s = deadline_s
+        self.clip_x0 = clip_x0
+        self._clock = clock
+        self._injector = injector
+        self.params = params
+
+        self._slot_sched = make_slot_schedule(dif, self.sched,
+                                              self.step_buckets)
+        self._n_of = np.asarray(self._slot_sched["n_of"])
+        self._n_max = int(self._n_of.max())
+        self._bucket_idx = {b: i for i, b in
+                            enumerate(self._slot_sched["buckets"])}
+        B = self.microbatch
+        sshape = (dcfg.img_size, dcfg.img_size, dcfg.in_ch)
+        self._x = jnp.zeros((B,) + sshape, jnp.float32)
+        self._pos = jnp.full((B,), self._n_max, jnp.int32)   # all free
+        self._bk = jnp.zeros((B,), jnp.int32)
+        self._y = jnp.zeros((B,), jnp.int32)
+        self._seeds = jnp.zeros((B,), jnp.uint32)
+        self._gs = jnp.ones((B,), jnp.float32)
+
+        self._slot_rid: List[Optional[int]] = [None] * B
+        self._pos_host = np.full((B,), self._n_max, np.int64)
+        self.queue: deque = deque()                  # request ids, FIFO
+        self.records: Dict[int, lc.RequestRecord] = {}
+        self.outcomes: Dict[int, lc.RequestOutcome] = {}
+        self._next_id = 0
+        self._warned_roundings: set = set()
+        self._t0 = clock()
+
+        self.stats: Dict[str, Any] = {
+            "dispatches": 0, "chunk_traces": 0, "degradations": [],
+            "admitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "cancelled": 0, "retries": 0, "queue_peak": 0,
+        }
+        self._chunk_fn = self._build_chunk()
+        self._init_fn = jax.jit(
+            lambda seed, n: ddpm_init_latent(seed, n, sshape))
+
+    @classmethod
+    def from_artifact(cls, params, artifact, *, kernel=None,
+                      attn_impl: Optional[str] = None, sched=None,
+                      **kw) -> "AsyncServeEngine":
+        """Async engine from a ``QuantArtifact`` (same identity guards as
+        ``ServeEngine.from_artifact``)."""
+        artifact.check_params(params)
+        return cls(params, artifact.model_cfg(), artifact.dif_cfg(), sched,
+                   ctx=artifact.context(kernel=kernel, attn_impl=attn_impl),
+                   **kw)
+
+    # -- executable construction -------------------------------------------
+    def _build_chunk(self):
+        dcfg, dif, S = self.dcfg, self.dif, self._slot_sched
+        ctx, clip, chunk = self.ctx, self.clip_x0, self.chunk
+        null_label = dcfg.n_classes
+        stats = self.stats
+
+        def run(params, x, pos, bk, y, seeds, gs):
+            stats["chunk_traces"] += 1      # python side effect: counts
+            eps = lambda xx, t, yy, c: dit_apply(   # TRACES, not dispatches
+                params, dcfg, xx, t, yy, ctx=c)
+            return ddpm_chunk_slots(eps, dif, S, x, pos, bk, y, seeds, gs,
+                                    null_label=null_label, chunk=chunk,
+                                    ctx=ctx, clip_x0=clip)
+
+        return jax.jit(run)
+
+    # -- admission ----------------------------------------------------------
+    def _reject(self, req: GenRequest, code: str, message: str) -> int:
+        now = self._clock()
+        rec = lc.RequestRecord(request=req, status=lc.REJECTED,
+                               submit_ts=now, finish_ts=now,
+                               error=lc.FaultInfo(code=code, message=message))
+        self.records[req.request_id] = rec
+        self.outcomes[req.request_id] = lc.outcome_of(rec, None, now)
+        self.stats["rejected"] += 1
+        return req.request_id
+
+    def submit_request(self, req: GenRequest) -> int:
+        """Admission control for a pre-built request: validates the label,
+        applies bounded-queue backpressure, and either queues the request
+        or records a structured ``REJECTED`` outcome (never raises, never
+        drops silently). Returns the request id either way."""
+        rid = req.request_id
+        if rid in self.records:
+            raise ValueError(f"duplicate request id {rid}")
+        try:
+            validate_label(req.label, self.dcfg.n_classes, rid)
+        except ValueError as e:
+            return self._reject(req, lc.BAD_LABEL, str(e))
+        if len(self.queue) >= self.max_queue:
+            return self._reject(
+                req, lc.QUEUE_FULL,
+                f"request {rid}: queue full ({self.max_queue} waiting) — "
+                "retry with backoff")
+        now = self._clock()
+        dl = req.deadline_s if req.deadline_s is not None else self.deadline_s
+        rec = lc.RequestRecord(
+            request=req, submit_ts=now,
+            deadline_ts=(now + dl) if dl is not None else None)
+        rec.log(now, "queued")
+        self.records[rid] = rec
+        self.queue.append(rid)
+        self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                       len(self.queue))
+        return rid
+
+    def submit(self, label: int, steps: int = 50, cfg_scale: float = 1.0,
+               seed: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Build + submit one request; returns its id. Check
+        ``outcomes[rid]`` for an immediate structured rejection."""
+        rid = self._next_id
+        self._next_id += 1
+        bucketed = bucket_steps(steps, self.step_buckets)
+        if bucketed != int(steps) and int(steps) not in self._warned_roundings:
+            self._warned_roundings.add(int(steps))
+            warnings.warn(
+                f"requested {int(steps)} sampler steps rounded to bucket "
+                f"{bucketed} (step_buckets={self.step_buckets}); "
+                "RequestOutcome.requested_steps records the original ask",
+                stacklevel=2)
+        return self.submit_request(GenRequest(
+            request_id=rid, label=int(label), steps=bucketed,
+            cfg_scale=float(cfg_scale),
+            seed=int(seed) if seed is not None else rid,
+            requested_steps=int(steps), deadline_s=deadline_s))
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation. Queued requests resolve at admission;
+        running ones free their slot at the next chunk boundary. Returns
+        False if the request is already terminal."""
+        rec = self.records.get(rid)
+        if rec is None or rec.status in lc.TERMINAL:
+            return False
+        rec.cancel_requested = True
+        return True
+
+    # -- slot management ----------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [s for s, rid in enumerate(self._slot_rid) if rid is None]
+
+    def _place(self, slot: int, rec: lc.RequestRecord) -> None:
+        req = rec.request
+        bi = self._bucket_idx[bucket_steps(req.steps, self.step_buckets)]
+        n = int(self._n_of[bi])
+        x0 = self._init_fn(jnp.uint32(req.seed), jnp.int32(n))
+        self._x = self._x.at[slot].set(x0)
+        self._pos = self._pos.at[slot].set(0)
+        self._bk = self._bk.at[slot].set(bi)
+        self._y = self._y.at[slot].set(req.label)
+        self._seeds = self._seeds.at[slot].set(jnp.uint32(req.seed))
+        self._gs = self._gs.at[slot].set(req.cfg_scale)
+        self._slot_rid[slot] = req.request_id
+        self._pos_host[slot] = 0
+        rec.slot = slot
+        if rec.admit_ts is None:       # retries keep the original admit time
+            rec.admit_ts = self._clock()
+            self.stats["admitted"] += 1
+        rec.status = lc.RUNNING
+        rec.log(self._clock(), f"slot {slot}")
+
+    def _release(self, slot: int) -> None:
+        self._x = self._x.at[slot].set(0.0)   # clear poison from the pool
+        self._pos = self._pos.at[slot].set(self._n_max)
+        self._bk = self._bk.at[slot].set(0)
+        self._slot_rid[slot] = None
+        self._pos_host[slot] = self._n_max
+
+    def _finish(self, rec: lc.RequestRecord, status: str,
+                sample: Optional[np.ndarray],
+                error: Optional[lc.FaultInfo] = None) -> None:
+        now = self._clock()
+        rec.status = status
+        rec.error = error
+        rec.finish_ts = now
+        rec.log(now, status)
+        if rec.slot is not None:
+            self._release(rec.slot)
+            rec.slot = None
+        self.outcomes[rec.request.request_id] = lc.outcome_of(
+            rec, sample, now)
+        key = {lc.OK: "completed", lc.FAILED: "failed",
+               lc.CANCELLED: "cancelled"}[status]
+        self.stats[key] += 1
+
+    def _admit(self) -> None:
+        free = self._free_slots()
+        while free and self.queue:
+            rid = self.queue.popleft()
+            rec = self.records[rid]
+            now = self._clock()
+            if rec.cancel_requested:
+                self._finish(rec, lc.CANCELLED, None, lc.FaultInfo(
+                    code=lc.CANCELLED_BY_USER,
+                    message=f"request {rid} cancelled while queued"))
+                continue
+            if rec.deadline_ts is not None and now > rec.deadline_ts:
+                self._finish(rec, lc.CANCELLED, None, lc.FaultInfo(
+                    code=lc.DEADLINE,
+                    message=f"request {rid} deadline passed after "
+                            f"{now - rec.submit_ts:.3f}s in queue"))
+                continue
+            self._place(free.pop(0), rec)
+
+    # -- the pump ------------------------------------------------------------
+    @property
+    def active(self) -> int:
+        return sum(1 for r in self._slot_rid if r is not None)
+
+    def _fail_all_live(self, error: lc.FaultInfo) -> None:
+        for rid in list(self.queue):
+            self._finish(self.records[rid], lc.FAILED, None, error)
+        self.queue.clear()
+        for slot, rid in enumerate(self._slot_rid):
+            if rid is not None:
+                self._finish(self.records[rid], lc.FAILED, None, error)
+
+    def _dispatch(self):
+        """One chunk dispatch with the degradation ladder. Slot state is
+        only replaced AFTER the blocking reads succeed, so a failed
+        dispatch (trace error, kernel fault, injected) is side-effect free
+        and the same chunk can be retried on a degraded context."""
+        while True:
+            self.stats["dispatches"] += 1
+            try:
+                if self._injector is not None:
+                    self._injector.before_dispatch(self.stats["dispatches"])
+                x, pos, bad = self._chunk_fn(
+                    self.params, self._x, self._pos, self._bk, self._y,
+                    self._seeds, self._gs)
+                # block on the SMALL outputs only; x stays device-resident
+                pos_h = np.array(pos)      # writable copy: retries reset it
+                bad_h = np.array(bad)
+                return x, pos_h, bad_h
+            except Exception as e:            # noqa: BLE001 — ladder seam
+                down = degrade_context(self.ctx)
+                if down is None:
+                    err = lc.FaultInfo(
+                        code=lc.ENGINE_FAULT,
+                        message=f"dispatch failed with no degradation rung "
+                                f"left: {type(e).__name__}: {e}")
+                    self._fail_all_live(err)
+                    raise EngineFault(err.message) from e
+                self.ctx, reason = down
+                self.stats["degradations"].append(
+                    {"reason": reason, "error": f"{type(e).__name__}: {e}"})
+                self._chunk_fn = self._build_chunk()
+
+    def pump(self) -> bool:
+        """One engine cycle: admit -> dispatch one chunk -> resolve slots.
+        Returns False when there was nothing to do (pool empty and queue
+        empty after admission)."""
+        self._admit()
+        if self.active == 0:
+            return False
+        x, pos_h, bad_h = self._dispatch()
+        didx = self.stats["dispatches"]
+        now = self._clock()
+
+        for slot, rid in enumerate(self._slot_rid):
+            if rid is None:
+                continue
+            rec = self.records[rid]
+            n = int(self._n_of[self._bucket_idx[
+                bucket_steps(rec.request.steps, self.step_buckets)]])
+            p_before, p_after = int(self._pos_host[slot]), int(pos_h[slot])
+            poisoned = bool(bad_h[slot])
+            fault = None
+            if self._injector is not None:
+                fault = self._injector.poison(didx, rid, p_before, p_after)
+                if fault is not None:
+                    x = x.at[slot].set(jnp.nan)   # poison ONLY this slot
+                    poisoned = True
+            if poisoned:
+                step = fault.at_step if fault is not None else p_before
+                code = (lc.SLOT_ERROR if fault is not None
+                        and fault.kind == "slot_error" else lc.NAN_POISONED)
+                if rec.retries >= self.max_retries:
+                    self._x = x   # keep the pool consistent before release
+                    self._finish(rec, lc.FAILED, None, lc.FaultInfo(
+                        code=code, step=step, retries=rec.retries,
+                        message=f"request {rid}: non-finite latent at scan "
+                                f"position ~{step}; gave up after "
+                                f"{rec.retries} retries"))
+                    x = self._x
+                    continue
+                # quarantine: reset THIS slot to scan position 0 with the
+                # same fold_in(PRNGKey(seed), i) keys — the retry replays
+                # the identical trajectory, bit-identical on success
+                rec.retries += 1
+                self.stats["retries"] += 1
+                rec.log(now, f"quarantined@{step} retry {rec.retries}")
+                x = x.at[slot].set(self._init_fn(
+                    jnp.uint32(rec.request.seed), jnp.int32(n)))
+                pos_h[slot] = 0
+                continue
+            if p_after >= n:                      # finished: the ONE place
+                self._x = x                       # the full latent leaves
+                sample = np.asarray(self._x[slot])     # the device
+                self._finish(rec, lc.OK, sample)
+                x = self._x
+                continue
+            if rec.cancel_requested:
+                self._x = x
+                self._finish(rec, lc.CANCELLED, None, lc.FaultInfo(
+                    code=lc.CANCELLED_BY_USER, step=p_after,
+                    message=f"request {rid} cancelled at chunk boundary"))
+                x = self._x
+                continue
+            if rec.deadline_ts is not None and now > rec.deadline_ts:
+                self._x = x
+                self._finish(rec, lc.CANCELLED, None, lc.FaultInfo(
+                    code=lc.DEADLINE, step=p_after,
+                    message=f"request {rid}: deadline exceeded at chunk "
+                            f"boundary (scan position {p_after}/{n})"))
+                x = self._x
+                continue
+
+        self._x = x
+        self._pos = jnp.asarray(pos_h, jnp.int32)
+        for slot, rid in enumerate(self._slot_rid):
+            if rid is not None:
+                self._pos_host[slot] = int(pos_h[slot])
+        return True
+
+    def run_until_drained(self, max_pumps: int = 100_000
+                          ) -> Dict[int, lc.RequestOutcome]:
+        """Pump until every submitted request is terminal."""
+        pumps = 0
+        while self.queue or self.active:
+            if not self.pump():
+                break
+            pumps += 1
+            if pumps > max_pumps:
+                raise EngineFault(
+                    f"async loop did not drain within {max_pumps} pumps — "
+                    f"{self.active} slots active, {len(self.queue)} queued")
+        return self.outcomes
+
+    def serve(self, requests: Sequence[GenRequest]
+              ) -> Dict[int, lc.RequestOutcome]:
+        """Submit pre-built requests (keeping their ids) and drain."""
+        for r in requests:
+            self.submit_request(r)
+        return self.run_until_drained()
+
+    def metrics(self) -> Dict[str, Any]:
+        """Lifecycle metrics over everything terminal so far."""
+        wall = self._clock() - self._t0
+        return lc.summarize(list(self.outcomes.values()), wall)

@@ -17,6 +17,7 @@ Policy knobs:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 from repro.serving.batching import (
@@ -25,26 +26,69 @@ from repro.serving.batching import (
 )
 
 
+def validate_label(label: int, n_classes: Optional[int],
+                   request_id) -> None:
+    """Admission-time label check. An out-of-range label does NOT fail the
+    model forward — the class-embedding gather silently reads garbage (or
+    the null-label row) and the request gets back a corrupt sample — so
+    the only safe place to catch it is BEFORE the request enters a
+    microbatch, with an error that names the request."""
+    if n_classes is None:
+        return
+    if not 0 <= int(label) < int(n_classes):
+        raise ValueError(
+            f"request {request_id}: label {int(label)} out of range "
+            f"[0, {int(n_classes)}) — an out-of-range label would gather "
+            "garbage from the class-embedding table and return a corrupt "
+            "sample instead of failing")
+
+
 class RequestScheduler:
-    """Coalesces an incoming request stream into engine-ready microbatches."""
+    """Coalesces an incoming request stream into engine-ready microbatches.
+
+    ``n_classes`` (when given, usually ``dcfg.n_classes``) enables
+    admission-time label validation in :meth:`submit`/:meth:`submit_all`.
+    """
 
     def __init__(self, microbatch: int = 8,
-                 step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS):
+                 step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
+                 n_classes: Optional[int] = None):
         self.microbatch = int(microbatch)
         self.step_buckets = tuple(sorted(int(b) for b in step_buckets))
+        self.n_classes = None if n_classes is None else int(n_classes)
         self.pending: List[GenRequest] = []
         self._next_id = 0
+        self._warned_roundings: set = set()
+
+    def _warn_rounding(self, requested: int, bucketed: int) -> None:
+        """Once per distinct requested step count: the caller asked for a
+        step count the deployment doesn't compile and is silently getting
+        a different one — worth a warning, not worth per-request spam."""
+        if bucketed == requested or requested in self._warned_roundings:
+            return
+        self._warned_roundings.add(requested)
+        warnings.warn(
+            f"requested {requested} sampler steps rounded to the "
+            f"{'larger' if bucketed > requested else 'SMALLER'} configured "
+            f"bucket {bucketed} (step_buckets={self.step_buckets}); "
+            "GenResult.requested_steps records the original ask",
+            stacklevel=3)
 
     def submit(self, label: int, steps: int = 50, cfg_scale: float = 1.0,
                seed: Optional[int] = None) -> int:
-        """Queue one request; returns its request id."""
+        """Queue one request; returns its request id. Raises ``ValueError``
+        (naming the request id) on an out-of-range label when the
+        scheduler knows ``n_classes``."""
         rid = self._next_id
+        validate_label(label, self.n_classes, rid)
+        bucketed = bucket_steps(steps, self.step_buckets)
+        self._warn_rounding(int(steps), bucketed)
         self._next_id += 1
         self.pending.append(GenRequest(
-            request_id=rid, label=int(label),
-            steps=bucket_steps(steps, self.step_buckets),
+            request_id=rid, label=int(label), steps=bucketed,
             cfg_scale=float(cfg_scale),
-            seed=int(seed) if seed is not None else rid))
+            seed=int(seed) if seed is not None else rid,
+            requested_steps=int(steps)))
         return rid
 
     def submit_all(self, requests: Sequence[GenRequest]) -> List[int]:
@@ -58,6 +102,8 @@ class RequestScheduler:
         dups = sorted({i for i in ids if ids.count(i) > 1 or i in taken})
         if dups:
             raise ValueError(f"duplicate request ids: {dups}")
+        for r in requests:
+            validate_label(r.label, self.n_classes, r.request_id)
         self.pending.extend(requests)
         if requests:
             self._next_id = max([self._next_id] + [i + 1 for i in ids])

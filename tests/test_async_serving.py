@@ -1,0 +1,182 @@
+"""The async continuous-batching engine (`repro.serving.AsyncServeEngine`):
+bit-identity to the synchronous step-bucketed path across mixed step
+buckets and timestep mixtures (fp and w8a8 kernel contexts), compile-once
+for the in-flight executable, structured admission control (bad label,
+bounded queue), `requested_steps` recording with a once-per-count rounding
+warning, and the cancellation API."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.diffusion import DiffusionCfg
+from repro.quant import QuantRecipe, quantize
+from repro.serving import (
+    AsyncServeEngine, GenRequest, RequestScheduler, ServeEngine,
+    summarize,
+)
+
+DIF = DiffusionCfg(T=40, tgq_groups=4)
+BUCKETS = (4, 6)
+
+REQS = [
+    GenRequest(request_id=0, label=1, steps=4, cfg_scale=1.5, seed=10),
+    GenRequest(request_id=1, label=2, steps=6, cfg_scale=1.0, seed=11),
+    GenRequest(request_id=2, label=3, steps=4, cfg_scale=0.0, seed=12),
+    GenRequest(request_id=3, label=4, steps=6, cfg_scale=2.0, seed=13),
+    GenRequest(request_id=4, label=5, steps=4, cfg_scale=1.0, seed=14),
+]
+
+
+@pytest.fixture(scope="module")
+def sync_ref(tiny_dit):
+    """Synchronous step-bucketed reference samples for REQS."""
+    cfg, p = tiny_dit
+    eng = ServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    return eng.serve(REQS)
+
+
+@pytest.fixture(scope="module")
+def w8a8(tiny_dit):
+    cfg, p = tiny_dit
+    return quantize(p, cfg, DIF, QuantRecipe(bits="w8a8", method="range",
+                                             n_per_group=1, calib_batch=1))
+
+
+def test_async_matches_sync_mixed_buckets(tiny_dit, sync_ref):
+    """The tentpole acceptance bit: a pool mixing step buckets 4 and 6,
+    every slot at a different timestep mid-flight, served chunk-by-chunk
+    — every sample bit-identical to the synchronous path, with the
+    in-flight executable compiled exactly ONCE across all mixtures."""
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS,
+                           chunk=2)
+    out = eng.serve(REQS)
+    assert all(o.status == "OK" for o in out.values())
+    for rid, o in out.items():
+        assert np.array_equal(o.sample, sync_ref[rid].sample), rid
+    assert eng.stats["chunk_traces"] == 1
+    assert eng.stats["dispatches"] > 1        # genuinely continuous
+    assert eng.stats["admitted"] == len(REQS)
+
+
+def test_async_matches_sync_w8a8_kernels(tiny_dit, w8a8):
+    """Same contract through the fused int8 kernel path: per-slot TGQ
+    groups stay traced scalars inside the Pallas kernels, so the slot
+    pool's timestep mixture still shares one executable."""
+    cfg, p = tiny_dit
+    sync = ServeEngine.from_artifact(p, w8a8, microbatch=2,
+                                     step_buckets=BUCKETS)
+    ref = sync.serve(REQS)
+    eng = AsyncServeEngine.from_artifact(p, w8a8, microbatch=2,
+                                         step_buckets=BUCKETS, chunk=3)
+    out = eng.serve(REQS)
+    for rid, o in out.items():
+        assert o.status == "OK"
+        assert np.array_equal(o.sample, ref[rid].sample), rid
+    assert eng.stats["chunk_traces"] == 1
+
+
+def test_chunk_size_does_not_change_samples(tiny_dit, sync_ref):
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=3, step_buckets=BUCKETS,
+                           chunk=5)                # chunk > shortest chain
+    out = eng.serve(REQS)
+    for rid, o in out.items():
+        assert np.array_equal(o.sample, sync_ref[rid].sample), rid
+
+
+def test_bad_label_rejected_naming_request(tiny_dit):
+    """Admission control: an out-of-range label gets a structured REJECTED
+    outcome naming the request id — never a slot, never a silent corrupt
+    sample."""
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    rid = eng.submit(label=cfg.n_classes + 3, steps=4)
+    o = eng.outcomes[rid]
+    assert o.status == "REJECTED"
+    assert o.error.code == "bad_label"
+    assert f"request {rid}" in o.error.message
+    assert str(cfg.n_classes + 3) in o.error.message
+    assert eng.stats["rejected"] == 1
+    # the sync scheduler raises instead (a blocking frontend)
+    sch = RequestScheduler(microbatch=2, step_buckets=BUCKETS,
+                           n_classes=cfg.n_classes)
+    with pytest.raises(ValueError, match="request 0: label"):
+        sch.submit(label=-1, steps=4)
+
+
+def test_queue_full_backpressure(tiny_dit):
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS,
+                           max_queue=2)
+    rids = [eng.submit(label=1, steps=4) for _ in range(4)]
+    rejected = [r for r in rids if r in eng.outcomes
+                and eng.outcomes[r].status == "REJECTED"]
+    assert len(rejected) == 2
+    assert all(eng.outcomes[r].error.code == "queue_full" for r in rejected)
+    out = eng.run_until_drained()
+    assert sum(1 for o in out.values() if o.status == "OK") == 2
+    assert len(out) == 4                      # nothing dropped silently
+
+
+def test_requested_steps_recorded_and_rounding_warns_once(tiny_dit):
+    cfg, p = tiny_dit
+    sch = RequestScheduler(microbatch=2, step_buckets=BUCKETS)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sch.submit(label=1, steps=5)          # rounds 5 -> 6
+        sch.submit(label=2, steps=5)          # same count: no second warning
+        sch.submit(label=3, steps=4)          # exact: no warning
+    assert len(w) == 1 and "rounded" in str(w[0].message)
+    eng = ServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    res = sch.run(eng)
+    assert res[0].steps == 6 and res[0].requested_steps == 5
+    assert res[2].steps == 4 and res[2].requested_steps == 4
+
+    aeng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rid = aeng.submit(label=1, steps=5)
+        aeng.submit(label=2, steps=5)
+    assert len(w) == 1
+    out = aeng.run_until_drained()
+    assert out[rid].steps == 6 and out[rid].requested_steps == 5
+
+
+def test_cancel_queued_and_running(tiny_dit):
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=1, step_buckets=BUCKETS,
+                           chunk=2)
+    r0 = eng.submit(label=1, steps=6, seed=1)
+    r1 = eng.submit(label=2, steps=6, seed=2)   # waits behind r0 (1 slot)
+    assert eng.pump()                            # r0 running
+    assert eng.cancel(r0) and eng.cancel(r1)
+    out = eng.run_until_drained()
+    assert out[r0].status == "CANCELLED"         # freed at chunk boundary
+    assert out[r0].error.code == "cancelled"
+    assert out[r1].status == "CANCELLED"         # resolved at admission
+    assert eng.cancel(r0) is False               # already terminal
+
+
+def test_lifecycle_metrics(tiny_dit):
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    out = eng.serve(REQS[:3])
+    m = eng.metrics()
+    assert m["requests"] == 3 and m["ok"] == 3
+    assert m["by_status"] == {"OK": 3}
+    assert m["goodput_rps"] > 0
+    assert m["latency_p99_s"] >= m["latency_p50_s"] > 0
+    # summarize is pure over outcomes
+    again = summarize(list(out.values()), m["wall_s"])
+    assert again["ok"] == 3
+
+
+def test_duplicate_request_id_rejected(tiny_dit):
+    cfg, p = tiny_dit
+    eng = AsyncServeEngine(p, cfg, DIF, microbatch=2, step_buckets=BUCKETS)
+    eng.submit_request(REQS[0])
+    with pytest.raises(ValueError, match="duplicate request id"):
+        eng.submit_request(REQS[0])
