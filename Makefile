@@ -1,4 +1,4 @@
-.PHONY: verify verify-all kernel-micro bench-attn bench-flash \
+.PHONY: verify verify-all kernel-micro bench-attn bench-flash bench-int4 \
 	serve-throughput serve-poisson chaos serve-async-smoke docs-check \
 	artifact-smoke
 
@@ -23,6 +23,12 @@ bench-attn:
 # whole-attention traffic cut from eliminating the (S,S) HBM round-trip)
 bench-flash:
 	PYTHONPATH=src python -m benchmarks.kernel_micro --flash
+
+# packed-int4 rows only: int4_matmul_fq / int4_matmul_mrq_fq vs their
+# oracles + packed-kv flash bit-identity; ASSERTS the >=1.8x
+# weight-traffic cut vs int8 (nibble payload + per-K-group metadata)
+bench-int4:
+	PYTHONPATH=src python -m benchmarks.kernel_micro --int4
 
 serve-throughput:
 	PYTHONPATH=src python -m benchmarks.serve_throughput

@@ -126,6 +126,23 @@ def calibrate(scheme: str, bits: int, params, cfg, calib=None,
     return qp, rep
 
 
+def capture_weights(params, cfg):
+    """One eager forward through ``CalibrationContext`` to (re)capture
+    the FP weight of every quantized op, keyed by op name — exactly the
+    second argument ``kernels.ops.convert_for_kernels`` wants. The
+    cached per-scheme PTQ reports deliberately strip their in-process
+    weight copy (see :func:`calibrate`), so kernel-path benchmarks that
+    load from cache recapture here (~one tiny forward, no search)."""
+    from repro.core.contexts import CalibrationContext
+    cal = CalibrationContext(max_rows_per_batch=1)
+    cal.begin_batch()
+    x = jnp.zeros((1, cfg.img_size, cfg.img_size, cfg.in_ch))
+    t = jnp.zeros((1,), jnp.int32)
+    y = jnp.zeros((1,), jnp.int32)
+    dit_apply(params, cfg, x, t, y, ctx=cal)
+    return dict(cal.weights)
+
+
 def generate(params, cfg, ctx=None, steps=50, n=N_GEN, seed=123):
     """Sample n latents with the (possibly quantized) model."""
     from repro.nn.ctx import FPContext

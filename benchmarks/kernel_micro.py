@@ -25,11 +25,19 @@ is meaningless; the TPU win is structural and computed from traffic).
                        attention traffic cut vs composed at DiT-XL/2
                        shapes.
 
+  int4_matmul_fq /   : nibble-packed weights (two 4-bit codes per byte,
+  int4_matmul_mrq_fq   per-K-group scales) HALVE the weight stream vs
+                       int8 — ~1.88x weight-traffic cut at DiT linear
+                       shapes after charging the per-group metadata
+                       (asserted >= 1.8x under ``--int4``).
+
 The traffic functions are importable (tests assert the structural-saving
 floors, e.g. >=1.5x for the MRQ linear, >=2x probs traffic for fused
-attention, >=3x whole-attention for flash at S>=256). ``--attn`` prints
-only the attention rows (``make bench-attn``); ``--flash`` only the
-flash rows (``make bench-flash``).
+attention, >=3x whole-attention for flash at S>=256, >=1.8x weight
+bytes for packed int4). ``--attn`` prints only the attention rows
+(``make bench-attn``); ``--flash`` only the flash rows
+(``make bench-flash``); ``--int4`` only the packed-int4 rows
+(``make bench-int4``).
 """
 from __future__ import annotations
 
@@ -81,6 +89,68 @@ def traffic_mrq_linear(M: int, K: int, N: int) -> dict:
     combine = 3 * M * N * 4
     return {"unfused": split + two_matmuls + combine,
             "fused": M * K * 4 + K * N * 1 + M * N * 4}
+
+
+def traffic_int4_linear(M: int, K: int, N: int, group_k: int = 256) -> dict:
+    """W4A4 linear (``int4_matmul_fq``) vs the W8A8 fused path: the
+    weight stream HALVES (two codes per byte) at the price of per-K-group
+    metadata — one f32 scale + one s32 zero-correction per
+    (K-group, out-channel), i.e. ``ceil(K/group_k) * N * 8`` bytes.  At
+    DiT linear shapes (K >= 2048, group_k = 256) the metadata is ~6% of
+    the nibble payload, so the weight-traffic cut lands at ~1.88x
+    (asserted >= 1.8x in CI via ``--int4``).  Activation read and output
+    write are identical between the two paths (fp32 in / fp32 out; codes
+    never leave VMEM), so ``fused_int8``/``fused_int4`` differ only by
+    the weight stream."""
+    nk = -(-K // group_k)
+    kp = nk * group_k                      # pack-time padding (code-0 rows)
+    int8_weight = K * N * 1
+    int4_weight = (kp * N) // 2 + nk * N * (4 + 4)
+    return {"int8_weight": int8_weight, "int4_weight": int4_weight,
+            "fused_int8": M * K * 4 + int8_weight + M * N * 4,
+            "fused_int4": M * K * 4 + int4_weight + M * N * 4}
+
+
+def traffic_int4_mrq_linear(M: int, K: int, N: int,
+                            group_k: int = 256) -> dict:
+    """W4A4 MRQ linear (``int4_matmul_mrq_fq``): same nibble payload as
+    the uniform path; the metadata is the twin-region scale pair
+    (scale_neg + scale_pos, 2 x f32 per (K-group, out-channel)) and no
+    zero-correction (both regions are symmetric) — the same 8 bytes per
+    (group, channel), so the same ~1.88x weight cut."""
+    nk = -(-K // group_k)
+    kp = nk * group_k
+    int8_weight = K * N * 1
+    int4_weight = (kp * N) // 2 + nk * N * (4 + 4)
+    return {"int8_weight": int8_weight, "int4_weight": int4_weight,
+            "fused_int8": M * K * 4 + int8_weight + M * N * 4,
+            "fused_int4": M * K * 4 + int4_weight + M * N * 4}
+
+
+def traffic_attention_flash_packed(BH: int, S: int, D: int,
+                                   bm: int | None = None) -> dict:
+    """Flash attention kv stream: unpacked fp32 vs 4-bit nibble-packed.
+
+    unpacked — k/v are fetched in fp32 once per q-tile:
+      ``BH*S*D * (8 + 8*n_qtiles)`` (q read + out write, then 2x4B per
+      kv element per q-tile).
+    packed — ONE fp32 read of k/v to quantize + nibble-pack them
+      (2x4B), one packed write (2x0.5B), then each q-tile streams the
+      packed codes (2x0.5B each):
+      ``BH*S*D * (8 + 8 + 1 + n_qtiles)``.
+
+    The trade is honest: packing costs an extra 9B/elt up front, so it
+    WINS only when the kv stream is re-fetched — n_qtiles >= 2 (e.g.
+    S = 512 with the default bm = 256).  At n_qtiles = 1 the unpacked
+    path is strictly cheaper and ``ops.flash_attention`` still uses the
+    packed path for 4-bit packs only because the code path must match
+    the pack bits, not for traffic."""
+    from repro.kernels.flash_attn_mrq import DEFAULT_BM
+    bm = DEFAULT_BM if bm is None else bm
+    n_qtiles = -(-S // bm)
+    return {"unpacked": BH * S * D * (8 + 8 * n_qtiles),
+            "packed": BH * S * D * (8 + 8 + 1 + n_qtiles),
+            "n_qtiles": n_qtiles}
 
 
 def traffic_attention_probs(BH: int, S: int, D: int) -> dict:
@@ -208,9 +278,94 @@ def _attention_rows(rows, flash_only: bool = False) -> None:
                      round(tf["composed"] / tf["flash"], 2)))
 
 
-def main(attn_only: bool = False, flash_only: bool = False) -> None:
+def _int4_rows(rows) -> None:
+    """Packed-int4 linear family + packed-kv flash: correctness vs the
+    ref.py oracles through the REAL pack builders, and the weight-stream
+    traffic cut (asserted >= 1.8x at DiT linear shapes — the CI gate for
+    ``make bench-int4``)."""
+    from repro.core.quantizers import (ChannelQ, MRQSignedQ, TGQ, UniformQ,
+                                       channel_scale_from_absmax,
+                                       weight_absmax)
+    from repro.kernels import ops
+
+    G = 3
+    for (M, K, N) in [(256, 2048, 2048), (256, 4608, 1152)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(11 + K), 2)
+        w = jax.random.normal(kw, (K, N)) * 0.05
+
+        x = jax.random.normal(kx, (M, K)) * 2.0
+        qp = {"x": TGQ(UniformQ(scale=jnp.linspace(0.01, 0.05, G),
+                                zero=jnp.round(jnp.linspace(5.6, 9.4, G)),
+                                bits=4)),
+              "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 4),
+                            4)}
+        pack = ops.pack_int4_linear(qp, np.asarray(w))
+        out = ops.int4_linear(x, pack, tgroup=1)
+        want = ref.int4_matmul_fq_ref(
+            x, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
+            pack["corr"], g=1, group_k=pack["group_k"])
+        err = float(jnp.max(jnp.abs(out - want)))
+        t = traffic_int4_linear(M, K, N, group_k=pack["group_k"])
+        cut = t["int8_weight"] / t["int4_weight"]
+        assert cut >= 1.8, (
+            f"int4 weight-traffic cut {cut:.2f}x < 1.8x at {M}x{K}x{N}")
+        rows.append(("int4_matmul_fq", f"{M}x{K}x{N}", f"{err:.1e}",
+                     t["int8_weight"], t["int4_weight"], round(cut, 2)))
+
+        xg = jax.nn.gelu(jax.random.normal(kx, (M, K)) * 1.5)
+        qpm = {"x": TGQ(MRQSignedQ(s_neg=jnp.geomspace(1e-4, 2e-3, G),
+                                   s_pos=jnp.geomspace(1e-3, 2e-2, G),
+                                   bits=4)),
+               "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), 4),
+                             4)}
+        packm = ops.pack_int4_mrq_linear(qpm, np.asarray(w))
+        outm = ops.int4_linear_mrq(xg, packm, tgroup=1)
+        wantm = ref.int4_matmul_mrq_fq_ref(
+            xg, packm["wp"], packm["s_neg"], packm["s_pos"],
+            packm["scale_neg"], packm["scale_pos"], g=1,
+            group_k=packm["group_k"])
+        errm = float(jnp.max(jnp.abs(outm - wantm)))
+        tm = traffic_int4_mrq_linear(M, K, N, group_k=packm["group_k"])
+        cutm = tm["int8_weight"] / tm["int4_weight"]
+        assert cutm >= 1.8, (
+            f"int4 MRQ weight-traffic cut {cutm:.2f}x < 1.8x at {M}x{K}x{N}")
+        rows.append(("int4_matmul_mrq_fq", f"{M}x{K}x{N}", f"{errm:.1e}",
+                     tm["int8_weight"], tm["int4_weight"], round(cutm, 2)))
+
+    # packed-kv flash: packed vs unpacked 4-bit kv stream is BIT-identical
+    # (same codes either way); traffic quoted at the multi-q-tile shape
+    # where packing actually wins (S = 512 > bm = 256 -> n_qtiles = 2).
+    BH, S, D, bn = 3, 130, 17, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(k1, (BH, S, D)) * 2
+    k = jax.random.normal(k2, (BH, S, D)) * 2
+    v = jax.random.normal(k3, (BH, S, D))
+    s_q = jnp.full((1, 1), 0.03, jnp.float32)
+    s_k = jnp.full((1, 1), 0.04, jnp.float32)
+    scale = s_q * s_k * (D ** -0.5)
+    s1 = jnp.full((1, 1), 2e-3, jnp.float32)
+    s_v = jnp.full((1, 1), 0.05, jnp.float32)
+    kwargs = dict(bits=4, bn=bn, interpret=True)
+    f_packed = flash_attn_mrq(q, k, v, s_q, s_k, scale, s1, s_v, s1 * s_v,
+                              (1.0 / 8) * s_v, packed_kv=True, **kwargs)
+    f_plain = flash_attn_mrq(q, k, v, s_q, s_k, scale, s1, s_v, s1 * s_v,
+                             (1.0 / 8) * s_v, packed_kv=False, **kwargs)
+    ferr = float(jnp.max(jnp.abs(f_packed - f_plain)))
+    tf = traffic_attention_flash_packed(16, 512, 72)
+    assert tf["n_qtiles"] >= 2
+    rows.append(("flash_attn_mrq[packed_kv]", "16x512x72", f"{ferr:.1e}",
+                 tf["unpacked"], tf["packed"],
+                 round(tf["unpacked"] / tf["packed"], 2)))
+
+
+def main(attn_only: bool = False, flash_only: bool = False,
+         int4_only: bool = False) -> None:
     rows = [("kernel", "case", "max_err", "hbm_bytes_unfused",
              "hbm_bytes_fused", "traffic_saving")]
+    if int4_only:
+        _int4_rows(rows)
+        C.emit("kernel_micro_int4", rows)
+        return
     if flash_only:
         _attention_rows(rows, flash_only=True)
         for r in rows:
@@ -315,4 +470,5 @@ def main(attn_only: bool = False, flash_only: bool = False) -> None:
 
 if __name__ == "__main__":
     main(attn_only="--attn" in sys.argv[1:],
-         flash_only="--flash" in sys.argv[1:])
+         flash_only="--flash" in sys.argv[1:],
+         int4_only="--int4" in sys.argv[1:])

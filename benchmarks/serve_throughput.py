@@ -17,6 +17,11 @@ Two sections, same philosophy as ``kernel_micro``:
    (``attn_impl="composed"``) reported alongside — the roofline and the
    kernel micro-bench share ONE attention traffic model per impl, so the
    end-to-end ratio is honest rather than attention-at-fp conservative.
+   The w4a4 recipe is reported as ``int4_packed``: packed-int4 linears
+   (nibble payload + per-K-group metadata,
+   ``kernel_micro.traffic_int4_linear``) and flash attention with the
+   nibble-packed kv stream — asserted faster than int8 at the
+   weight-bound serving point.
    Elementwise chains (LN, modulate, GELU, residuals) are XLA-fused into
    their surrounding ops on both paths and carry no modeled traffic of
    their own. Per-op time is ``max(bytes/hbm_bw, flops/peak)``. Serving
@@ -61,7 +66,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from benchmarks.kernel_micro import (
-    traffic_attention_flash, traffic_attention_probs, traffic_attention_qk,
+    traffic_attention_flash, traffic_attention_flash_packed,
+    traffic_attention_probs, traffic_attention_qk, traffic_int4_linear,
 )
 from repro.launch.mesh import HW
 from repro.models.dit import DiTCfg
@@ -84,6 +90,13 @@ def _linear(M: int, K: int, N: int, path: str) -> Dict[str, float]:
     if path == "fp":
         return {"bytes": 4 * M * K + 4 * K * N + 4 * M * N, "flops": flops,
                 "peak": HW["peak_bf16_flops"]}
+    if path == "int4":
+        # packed-int4 weight stream: nibble payload + per-K-group
+        # scale/corr metadata (kernel_micro.traffic_int4_linear); the
+        # widened nibbles feed the same int8 MXU.
+        t = traffic_int4_linear(M, K, N)
+        return {"bytes": 4 * M * K + t["int4_weight"] + 4 * M * N,
+                "flops": flops, "peak": HW["peak_int8_ops"]}
     return {"bytes": 4 * M * K + 1 * K * N + 4 * M * N, "flops": flops,
             "peak": HW["peak_int8_ops"]}
 
@@ -117,6 +130,15 @@ def _attention(R: int, T: int, d: int, H: int, path: str) -> Dict[str, float]:
         return {"bytes": traffic_attention_qk(BH, T, hd)["fused"]
                 + traffic_attention_probs(BH, T, hd)["fused"],
                 "flops": flops, "peak": HW["peak_int8_ops"]}
+    if path == "int4":
+        # w4a4 serving lowers attention onto flash with a nibble-packed
+        # kv stream (``ops.flash_attention`` packs whenever the attention
+        # packs are 4-bit); charged HONESTLY — the pack pass reads kv in
+        # fp and writes the codes, so at n_qtiles == 1 this is slightly
+        # MORE traffic than the unpacked flash model, paid for by the
+        # linear weight-stream halving.
+        return {"bytes": traffic_attention_flash_packed(BH, T, hd)["packed"],
+                "flops": flops, "peak": HW["peak_int8_ops"]}
     return {"bytes": traffic_attention_flash(BH, T, hd)["flash"],
             "flops": flops, "peak": HW["peak_int8_ops"]}
 
@@ -125,8 +147,9 @@ def modeled_dit_step(cfg: DiTCfg, b_local: int, path: str) -> Dict[str, float]:
     """One CFG-paired denoising step on one device: ``b_local`` requests
     run as a 2*b_local model batch. Returns summed bytes/flops and the
     per-op roofline time. ``path``: 'fp', 'int8' (flash attention — the
-    serving default) or 'int8_composed' (three-kernel attention)."""
-    assert path in ("fp", "int8", "int8_composed")
+    serving default), 'int8_composed' (three-kernel attention) or 'int4'
+    (packed-int4 linears + packed-kv flash, the w4a4 recipe)."""
+    assert path in ("fp", "int8", "int8_composed", "int4")
     R = 2 * b_local                     # CFG pairing doubles the model batch
     T, d, f = cfg.n_tokens, cfg.d_model, cfg.d_ff
     Mt = R * T                          # per-token rows
@@ -355,16 +378,18 @@ def main() -> None:
 
     # --- modeled TPU v5e throughput, DiT-XL/2 at 100 steps -------------------
     steps = 100
-    floor_ratio = composed_floor = None
+    floor_ratio = composed_floor = int4_floor = None
     for batch in (N_DEV, 2 * N_DEV, 4 * N_DEV):
         fp = modeled_requests_per_sec(XL2, batch, N_DEV, steps, "fp")
         q8 = modeled_requests_per_sec(XL2, batch, N_DEV, steps, "int8")
         qc = modeled_requests_per_sec(XL2, batch, N_DEV, steps,
                                       "int8_composed")
+        q4 = modeled_requests_per_sec(XL2, batch, N_DEV, steps, "int4")
         ratio = q8["req_per_s"] / fp["req_per_s"]
         if batch == N_DEV:
             floor_ratio = ratio
             composed_floor = qc["req_per_s"] / fp["req_per_s"]
+            int4_floor = q4["req_per_s"] / fp["req_per_s"]
         rows.append(("modeled_xl2", "fp", batch,
                      round(fp["req_per_s"], 3), round(fp["ms_per_step"], 3),
                      1.0))
@@ -374,6 +399,9 @@ def main() -> None:
         rows.append(("modeled_xl2", "int8_fused", batch,
                      round(q8["req_per_s"], 3), round(q8["ms_per_step"], 3),
                      round(ratio, 2)))
+        rows.append(("modeled_xl2", "int4_packed", batch,
+                     round(q4["req_per_s"], 3), round(q4["ms_per_step"], 3),
+                     round(q4["req_per_s"] / fp["req_per_s"], 2)))
 
     # --- executed: small DiT through the real engine -------------------------
     cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=64, n_layers=2,
@@ -425,10 +453,15 @@ def main() -> None:
     assert floor_ratio > composed_floor, (
         f"flash attention must beat the composed three-kernel model "
         f"({floor_ratio:.2f}x vs {composed_floor:.2f}x)")
+    assert int4_floor is not None and int4_floor > floor_ratio, (
+        f"packed-int4 must beat int8 at the weight-bound serving point "
+        f"({int4_floor:.2f}x vs {floor_ratio:.2f}x) — the halved weight "
+        "stream is the whole point")
     print(f"fused-int8 serving: {floor_ratio:.2f}x requests/sec over fp at "
           f"batch {N_DEV} on {N_DEV} devices (modeled, DiT-XL/2, flash "
           f"attention traffic charged; composed-attention path: "
-          f"{composed_floor:.2f}x); sharded == single-device: {identical}")
+          f"{composed_floor:.2f}x; packed-int4 w4a4: {int4_floor:.2f}x); "
+          f"sharded == single-device: {identical}")
 
 
 if __name__ == "__main__":

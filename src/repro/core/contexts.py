@@ -11,8 +11,8 @@ Pipeline (Algorithm 1):
      every op output; ``jax.grad`` w.r.t. the taps yields exactly
      dL/dz^(l), the Fisher weights of Hessian-guided optimization.
   4. ``QuantContext``        — applies the calibrated quantizers
-     (simulated quant-dequant). ``kernel=True`` routes W8A8 linears
-     through the int8 Pallas kernel instead.
+     (simulated quant-dequant). ``kernel=True`` routes packed linears
+     through the int8/int6/packed-int4 Pallas kernels instead.
 
 Provenance tracking uses tensor identity: ``act(name, x, kind)`` marks
 ``id(x)`` so the directly-consuming matmul knows its operand is the
@@ -243,13 +243,17 @@ class QuantContext(OpContext):
       'x_prescale': array | None,      # PTQ4DiT-like channel balancing
       'out_bias': array | None,        # PTQD-like bias correction
     }
-    kernel=True routes W8A8 linears through the fused int8 Pallas kernels
-    ('int8' pack -> fused-quantize matmul, 'int8_mrq' pack -> single-pass
-    MRQ matmul) and whole attention blocks through the int8 attention
-    kernels (the ``attention`` seam lowers when the op's '/qk' qparams
-    carry an 'int8_qk' pack and its '/pv' qparams an 'int8_pv' pack);
-    the TGQ timestep group (``self.tgroup``, possibly traced) is resolved
-    inside the kernels — no per-group repacking or retracing.
+    kernel=True routes packed linears through the fused Pallas kernels
+    ('int8' pack -> fused-quantize matmul at 8 or 6 bits, 'int8_mrq' pack
+    -> single-pass MRQ matmul, 'int4' / 'int4_mrq' packs -> the
+    nibble-packed int4 family with per-K-group weight scales) and whole
+    attention blocks through the int8 attention kernels (the
+    ``attention`` seam lowers when the op's '/qk' qparams carry an
+    'int8_qk' pack and its '/pv' qparams an 'int8_pv' pack; the packs'
+    ``bits`` tag sets the code range, and 4-bit flash streams
+    nibble-packed kv); the TGQ timestep group (``self.tgroup``, possibly
+    traced) is resolved inside the kernels — no per-group repacking or
+    retracing.
 
     ``attn_impl`` picks the attention lowering (kernel=True only):
     'flash' (default) runs the whole block as ONE Pallas kernel —
@@ -291,6 +295,17 @@ class QuantContext(OpContext):
         if self.kernel and qp.get("int8_mrq") is not None:
             from repro.kernels import ops as kops
             y = kops.int8_linear_mrq(x, qp["int8_mrq"], bias=b,
+                                     tgroup=self.tgroup)
+            ob = qp.get("out_bias")
+            return y + ob if ob is not None else y
+        if self.kernel and qp.get("int4") is not None:
+            from repro.kernels import ops as kops
+            y = kops.int4_linear(x, qp["int4"], bias=b, tgroup=self.tgroup)
+            ob = qp.get("out_bias")
+            return y + ob if ob is not None else y
+        if self.kernel and qp.get("int4_mrq") is not None:
+            from repro.kernels import ops as kops
+            y = kops.int4_linear_mrq(x, qp["int4_mrq"], bias=b,
                                      tgroup=self.tgroup)
             ob = qp.get("out_bias")
             return y + ob if ob is not None else y

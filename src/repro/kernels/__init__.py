@@ -12,7 +12,12 @@
   - flash_attn_mrq     — flash-style fused attention: int8 QK^T ->
                          online softmax -> MRQ codes -> dual-region P·V
                          in ONE kernel (no (S,S) HBM round-trip; the
-                         serving default, attn_impl="flash"),
+                         serving default, attn_impl="flash"; at 4 bits a
+                         packed-kv variant streams nibble-packed k/v),
+  - int4_matmul_fq     — packed-int4 (W4A4) fused matmul: nibble weights
+                         widen in the VMEM prologue, per-K-group scales
+                         (Q-DiT), f32 accumulation,
+  - int4_matmul_mrq_fq — packed-int4 single-pass MRQ matmul,
   - softmax_mrq        — fused softmax -> MRQ two-region quant-dequant,
   - softmax_mrq_codes  — fused softmax -> MRQ int8 CODES (deployment:
                          feeds int8_bmm_pv; probs never hit HBM as fp),
@@ -23,6 +28,9 @@ pure-jnp oracles tests compare against.
 """
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
+from repro.kernels.int4_packed import (
+    int4_matmul_fq, int4_matmul_mrq_fq, nibble_split, pack_int4, unpack_int4,
+)
 from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
 from repro.kernels.flash_attn_mrq import flash_attn_mrq
 from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes

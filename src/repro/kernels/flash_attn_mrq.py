@@ -82,6 +82,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.int4_packed import nibble_split, pack_int4
 from repro.kernels.int8_bmm import _sym_codes
 from repro.kernels.int8_matmul import _ceil, _pad_to
 
@@ -93,7 +94,8 @@ _M_INIT = -1e30         # below any masked score; exp(_M_INIT - m) == 0.0
 
 
 def _flash_kernel(g_ref, *refs, nkv: int, half: int, n_real: int, bn: int,
-                  neg_inf: float, has_mask: bool):
+                  neg_inf: float, has_mask: bool, packed_kv: bool = False,
+                  bd: int = 0):
     """Grid body at (b, m, n) — n (the kv tile) innermost.
 
     ``refs`` unpacks to the tile refs (q, k, v[, mask8]), the group-``g``
@@ -102,6 +104,11 @@ def _flash_kernel(g_ref, *refs, nkv: int, half: int, n_real: int, bn: int,
     (running max / denominator as (bm, 128) lane-broadcast stats, two
     (bm, D) f32 region accumulators). ``g_ref`` ([g_qk, g_pv]) feeds the
     index maps only.
+
+    ``packed_kv``: k/v tiles arrive as (bn, bd/2) nibble-PACKED
+    pre-quantized 4-bit codes (the W4A4 path's one-time pack pass) and
+    are widened to s8-range codes here instead of running ``_sym_codes``
+    — halving the kv bytes streamed per q-tile.
     """
     del g_ref
     if has_mask:
@@ -122,9 +129,13 @@ def _flash_kernel(g_ref, *refs, nkv: int, half: int, n_real: int, bn: int,
 
     # -- int8 QK^T for this tile (scores stay in VMEM) ----------------------
     q8 = _sym_codes(q_ref[0], sq_ref[0, 0], half)
-    k8 = _sym_codes(k_ref[0], sk_ref[0, 0], half)
+    if packed_kv:                # widen two-nibbles-per-byte codes in VMEM
+        lo, hi = nibble_split(k_ref[0])
+        k8 = jnp.stack([lo, hi], axis=2).reshape(k_ref.shape[1], bd)
+    else:
+        k8 = _sym_codes(k_ref[0], sk_ref[0, 0], half).astype(jnp.int32)
     s = jax.lax.dot_general(
-        q8.astype(jnp.int32), k8.astype(jnp.int32),
+        q8.astype(jnp.int32), k8,
         (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
     ).astype(jnp.float32) * qs_ref[0, 0]
 
@@ -156,7 +167,11 @@ def _flash_kernel(g_ref, *refs, nkv: int, half: int, n_real: int, bn: int,
                    ).astype(jnp.int32)
 
     # -- dual-region P·V with fp running-rescale ----------------------------
-    v8 = _sym_codes(v_ref[0], sv_ref[0, 0], half).astype(jnp.int32)
+    if packed_kv:
+        lo_v, hi_v = nibble_split(v_ref[0])
+        v8 = jnp.stack([lo_v, hi_v], axis=2).reshape(v_ref.shape[1], bd)
+    else:
+        v8 = _sym_codes(v_ref[0], sv_ref[0, 0], half).astype(jnp.int32)
     dims = (((1,), (0,)), ((), ()))                  # ONE v-tile read
     d1 = jax.lax.dot_general(c1, v8, dims, preferred_element_type=jnp.int32)
     d2 = jax.lax.dot_general(c2, v8, dims, preferred_element_type=jnp.int32)
@@ -172,12 +187,12 @@ def _flash_kernel(g_ref, *refs, nkv: int, half: int, n_real: int, bn: int,
         o_ref[0] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "out_dtype",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("bits", "packed_kv", "bm", "bn",
+                                             "out_dtype", "interpret"))
 def flash_attn_mrq(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
                    g_qk=None, g_pv=None, mask=None, *, bits=8,
-                   bm=DEFAULT_BM, bn=DEFAULT_BN, out_dtype=jnp.float32,
-                   interpret=False):
+                   packed_kv=False, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                   out_dtype=jnp.float32, interpret=False):
     """out[B,M,D] = MRQ-quantized softmax(q8 k8^T · qk_scale[g]) @ v8 —
     one kernel, no (S, S) HBM round-trip.
 
@@ -190,6 +205,17 @@ def flash_attn_mrq(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
     TGQ groups for each pack side — python ints or traced scalars
     (scalar-prefetched together; no retrace across groups). mask:
     optional (B, M, N) boolean (True = attend), streamed as int8 tiles.
+
+    ``packed_kv`` (4-bit only): k/v are quantized with the group-g steps
+    and nibble-packed along D in ONE jnp pre-pass; the kernel then
+    streams half the kv bytes per q-tile and widens nibbles in its
+    prologue. The trade is honest: the pack pass reads kv in fp and
+    writes the packed codes once, so it wins when kv is re-streamed
+    (ceil(M/bm) > 1, long S) and is neutral at one q-tile — see
+    ``benchmarks/kernel_micro.traffic_attention_flash_packed``.
+    Numerics are IDENTICAL to the unpacked 4-bit path (same symmetric
+    codes, formed once instead of per tile), so the same oracle and
+    flash-vs-composed tolerance contract apply.
     """
     B, M, D = q.shape
     B2, N, D2 = k.shape
@@ -212,13 +238,24 @@ def flash_attn_mrq(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
     k = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, Np - N), (0, bd_ - D)))
     v = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, Np - N), (0, bd_ - D)))
 
+    kv_bd = bd_
+    if packed_kv:
+        assert bits == 4, "packed_kv streams nibbles: 4-bit codes only"
+        # one-time quantize+pack pass (jnp): group-g symmetric codes,
+        # two per byte along D. Padded lanes/dims are code 0 — inert.
+        sk_g = jnp.take(s_k.astype(jnp.float32), g[0], axis=0)[0]
+        sv_g = jnp.take(s_v.astype(jnp.float32), g[1], axis=0)[0]
+        k = pack_int4(_sym_codes(k, sk_g, half), axis=-1)
+        v = pack_int4(_sym_codes(v, sv_g, half), axis=-1)
+        kv_bd = bd_ // 2
+
     has_mask = mask is not None
     operands = [q, k, v]
     in_specs = [
         pl.BlockSpec((1, bm_, bd_), lambda b, m, n, g: (b, m, 0)),
-        pl.BlockSpec((1, bn_, bd_),
+        pl.BlockSpec((1, bn_, kv_bd),
                      lambda b, m, n, g: (b // rep, n, 0)),   # shared kv
-        pl.BlockSpec((1, bn_, bd_),
+        pl.BlockSpec((1, bn_, kv_bd),
                      lambda b, m, n, g: (b // rep, n, 0)),   # shared kv
     ]
     if has_mask:
@@ -254,7 +291,8 @@ def flash_attn_mrq(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
     )
     out = pl.pallas_call(
         functools.partial(_flash_kernel, nkv=nkv, half=half, n_real=N,
-                          bn=bn_, neg_inf=NEG_INF, has_mask=has_mask),
+                          bn=bn_, neg_inf=NEG_INF, has_mask=has_mask,
+                          packed_kv=packed_kv, bd=bd_),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Mp, bd_), out_dtype),
         interpret=interpret,

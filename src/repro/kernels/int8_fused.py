@@ -48,7 +48,7 @@ from repro.kernels.int8_matmul import (
 
 
 def _fq_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
-               bias_ref, o_ref, acc_ref, *, nk: int):
+               bias_ref, o_ref, acc_ref, *, nk: int, half: int):
     """Grid body for ``int8_matmul_fq`` at grid point (m, n, k).
 
     Refs arrive as VMEM tiles already gathered by the BlockSpec index
@@ -68,11 +68,13 @@ def _fq_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # fused-quantize prologue: fp tile -> signed int8 codes in VMEM
+    # fused-quantize prologue: fp tile -> signed codes in VMEM (the byte
+    # range is [-half, half-1] — 8-bit uses the full s8 range, 6-bit
+    # codes live in [-32, 31] inside the same int8 bytes)
     sx = sx_ref[0, 0]
     zx = zx_ref[0, 0]
-    xq = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / sx) + zx - 128,
-                  -128, 127).astype(jnp.int8)
+    xq = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / sx) + zx - half,
+                  -half, half - 1).astype(jnp.int8)
     acc_ref[...] += jax.lax.dot_general(
         xq.astype(jnp.int32), w_ref[...].astype(jnp.int32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
@@ -84,9 +86,9 @@ def _fq_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
         o_ref[...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
-                                             "interpret"))
-def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *, bits=8,
                    bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
                    out_dtype=jnp.float32, interpret=False):
     """y[M,N] = (q(x; sx[g], zx[g]) @ wq - corr[g]) * scale[g] (+ bias).
@@ -96,7 +98,11 @@ def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
     (s_x[g]*s_w per channel), corr (G,N) i32 (z_eff[g]*colsum(wq)).
     g is the group index — python int or traced scalar (scalar-prefetched,
     gathered by the BlockSpec index maps; no retrace across groups).
+    ``bits`` sets the code range (8 -> [-128, 127], 6 -> [-32, 31]);
+    sub-byte widths keep byte storage here — the nibble-PACKED weight
+    path lives in ``int4_packed``.
     """
+    half = 2 ** (bits - 1)
     M, K = x.shape
     K2, N = wq.shape
     assert K == K2, (x.shape, wq.shape)
@@ -141,7 +147,7 @@ def int8_matmul_fq(x, wq, sx, zx, scale, corr, bias=None, g=None, *,
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
     )
     out = pl.pallas_call(
-        functools.partial(_fq_kernel, nk=nk),
+        functools.partial(_fq_kernel, nk=nk, half=half),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         interpret=interpret,

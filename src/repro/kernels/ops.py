@@ -21,6 +21,14 @@ Serving path (single fused kernel family, see ``int8_fused``):
     ``pack_int8_qk`` / ``pack_int8_pv`` from the calibrated ``attn/qk``
     and ``attn/pv`` einsum qparams.
 
+Bit-widths: the pack builders are bits-driven — w8a8 and w6a6 pack for
+the byte-code ``int8_*`` kernel family (6-bit codes ride in full int8
+bytes; only the code range changes), while w4a4 packs for the
+nibble-PACKED ``int4_*`` family (``int4_packed``: two weight codes per
+byte, per-K-group weight scales à la Q-DiT, and a packed-kv flash
+variant). Every pack records its ``"bits"`` and the wrappers thread it
+to the kernels as a static argument.
+
 Activation-side parameters are packed STACKED along a leading (G,) TGQ
 group axis — per-tensor quantizers pack as G=1 — and the timestep group
 is a traced scalar resolved inside the kernels, so ``ddpm_sample``'s
@@ -42,8 +50,11 @@ from repro.core.quantizers import (
     ChannelQ, MRQSignedQ, MRQSoftmaxQ, SymQ, TGQ, UniformQ,
 )
 from repro.quant.groups import resolve_group
-from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.int8_matmul import DEFAULT_BK, _ceil, int8_matmul
 from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
+from repro.kernels.int4_packed import (
+    int4_matmul_fq, int4_matmul_mrq_fq, pack_int4, unpack_int4,
+)
 from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
 from repro.kernels.flash_attn_mrq import flash_attn_mrq
 from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
@@ -75,13 +86,17 @@ def _stack_param(p, is_tgq) -> jnp.ndarray:
     return a.reshape(-1, 1)
 
 
-def _weight_codes(wq_q: ChannelQ, w) -> Optional[tuple]:
-    """(codes (K,N) int8, sw (N,) f32) or None if not a packable 2D linear."""
+def _weight_codes(wq_q: ChannelQ, w, half: int = 128) -> Optional[tuple]:
+    """(codes (K,N) int8, sw (N,) f32) or None if not a packable 2D linear.
+
+    ``half`` follows the weight bit-width: 8-bit codes clip to ±127,
+    6-bit to ±31 (stored in full int8 bytes either way)."""
     sw = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)
     w = jnp.asarray(w, jnp.float32)
     if w.ndim != 2 or sw.shape[0] != w.shape[-1]:
         return None
-    codes = jnp.clip(jnp.round(w / sw[None, :]), -127, 127).astype(jnp.int8)
+    codes = jnp.clip(jnp.round(w / sw[None, :]), -(half - 1), half - 1
+                     ).astype(jnp.int8)
     return codes, sw
 
 
@@ -89,7 +104,9 @@ def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     """Pack one linear op for the fused int8 kernel. Accepts a per-tensor
     ``UniformQ`` or a time-grouped ``TGQ(UniformQ)`` activation quantizer
     and a ``ChannelQ`` weight quantizer. TGQ packs as stacked (G, ·)
-    scale/zero/corr arrays gathered per-group inside the kernel."""
+    scale/zero/corr arrays gathered per-group inside the kernel.
+    Bits-driven: 8- and 6-bit recipes pack here (byte codes, only the
+    code range differs); 4-bit goes to ``pack_int4_linear``."""
     if qp.get("x_prescale") is not None:
         return None       # channel-balanced ops stay on the fake-quant
         # path: their quantizers are calibrated on x/ps and w*ps, and the
@@ -98,19 +115,21 @@ def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     if not isinstance(xq_q, UniformQ) or not isinstance(qp.get("w"), ChannelQ):
         return None
     wq_q: ChannelQ = qp["w"]
-    if wq_q.bits != 8 or xq_q.bits != 8:
+    bits = int(wq_q.bits)
+    if bits not in (6, 8) or xq_q.bits != bits:
         return None
+    half = 2 ** (bits - 1)
     try:
         sx = _stack_param(xq_q.scale, is_tgq)              # (G, 1)
         zx = _stack_param(xq_q.zero, is_tgq)               # (G, 1)
     except ValueError:
         return None
-    cw = _weight_codes(wq_q, w)
+    cw = _weight_codes(wq_q, w, half)
     if cw is None:
         return None
     codes, sw = cw
     colsum = jnp.sum(codes.astype(jnp.int32), axis=0)      # (N,)
-    z_eff = jnp.round(zx).astype(jnp.int32) - 128          # (G, 1)
+    z_eff = jnp.round(zx).astype(jnp.int32) - half         # (G, 1)
     return {
         "wq": codes,
         "sx": sx,
@@ -118,6 +137,7 @@ def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "scale": sx * sw[None, :],                          # (G, N)
         "corr": z_eff * colsum[None, :],                    # (G, N)
         "groups": int(sx.shape[0]),
+        "bits": bits,
     }
 
 
@@ -132,14 +152,15 @@ def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
             qp.get("w"), ChannelQ):
         return None
     wq_q: ChannelQ = qp["w"]
-    if wq_q.bits != 8 or xq_q.bits != 8:
+    bits = int(wq_q.bits)
+    if bits not in (6, 8) or xq_q.bits != bits:
         return None
     try:
         s_neg = _stack_param(xq_q.s_neg, is_tgq)           # (G, 1)
         s_pos = _stack_param(xq_q.s_pos, is_tgq)           # (G, 1)
     except ValueError:
         return None
-    cw = _weight_codes(wq_q, w)
+    cw = _weight_codes(wq_q, w, 2 ** (bits - 1))
     if cw is None:
         return None
     codes, sw = cw
@@ -150,6 +171,108 @@ def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "scale_neg": s_neg * sw[None, :],                   # (G, N)
         "scale_pos": s_pos * sw[None, :],                   # (G, N)
         "groups": int(s_neg.shape[0]),
+        "bits": bits,
+    }
+
+
+# ---------------------------------------------------------------------------
+# packed-int4 deployment path (nibble weights, per-K-group scales)
+# ---------------------------------------------------------------------------
+def _int4_group_codes(wq_q: ChannelQ, w) -> Optional[tuple]:
+    """(codes3 (nk, group_k, N) int8 in [-7, 7], sw (nk, N) f32, group_k)
+    or None if not a packable 2D linear.
+
+    4-bit weights need finer granularity than one scale per output
+    channel (Q-DiT): the K axis is re-scaled per group of ``group_k``
+    rows — group_k is chosen to equal the int4 kernel's K tile, so each
+    grid step is exactly one scale group. The calibrated per-channel
+    ``wq_q.scale`` is superseded by the pack-time per-group absmax/7
+    (a strict refinement: every group scale <= the channel scale)."""
+    w = jnp.asarray(w, jnp.float32)
+    sw_cal = jnp.asarray(wq_q.scale, jnp.float32).reshape(-1)
+    if w.ndim != 2 or sw_cal.shape[0] != w.shape[-1]:
+        return None
+    K, N = w.shape
+    group_k = min(DEFAULT_BK, _ceil(K))
+    Kp = -group_k * (-K // group_k)
+    nk = Kp // group_k
+    w3 = jnp.pad(w, ((0, Kp - K), (0, 0))).reshape(nk, group_k, N)
+    sw = jnp.maximum(jnp.max(jnp.abs(w3), axis=1), 1e-8) / 7.0   # (nk, N)
+    codes3 = jnp.clip(jnp.round(w3 / sw[:, None, :]), -7, 7).astype(jnp.int8)
+    return codes3, sw, group_k
+
+
+def pack_int4_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack one linear op for ``int4_matmul_fq``: ``UniformQ`` /
+    ``TGQ(UniformQ)`` activations + ``ChannelQ`` weights at 4 bits.
+    Weights are nibble-packed two-per-byte; scale/corr carry the extra
+    per-K-group axis (G, nk, N)."""
+    if qp.get("x_prescale") is not None:
+        return None       # see pack_int8_linear: no prescale in the kernel
+    xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
+    if not isinstance(xq_q, UniformQ) or not isinstance(qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    if wq_q.bits != 4 or xq_q.bits != 4:
+        return None
+    try:
+        sx = _stack_param(xq_q.scale, is_tgq)              # (G, 1)
+        zx = _stack_param(xq_q.zero, is_tgq)               # (G, 1)
+    except ValueError:
+        return None
+    gc = _int4_group_codes(wq_q, w)
+    if gc is None:
+        return None
+    codes3, sw, group_k = gc
+    N = codes3.shape[-1]
+    colsum = jnp.sum(codes3.astype(jnp.int32), axis=1)     # (nk, N)
+    z_eff = jnp.round(zx).astype(jnp.int32) - 8            # (G, 1)
+    return {
+        "wp": pack_int4(codes3.reshape(-1, N)),             # (Kp/2, N)
+        "sx": sx,
+        "zx": zx,
+        "scale": sx[:, :, None] * sw[None],                 # (G, nk, N)
+        "corr": z_eff[:, :, None] * colsum[None],           # (G, nk, N)
+        "groups": int(sx.shape[0]),
+        "group_k": int(group_k),
+        "k": int(jnp.asarray(w).shape[0]),
+        "bits": 4,
+    }
+
+
+def pack_int4_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
+    """Pack an MRQ-signed-input linear (post-GELU fc2) for
+    ``int4_matmul_mrq_fq``: nibble-packed weights, per-region per-K-group
+    scales (G, nk, N), no zero-point correction."""
+    if qp.get("x_prescale") is not None:
+        return None
+    xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
+    if not isinstance(xq_q, MRQSignedQ) or not isinstance(
+            qp.get("w"), ChannelQ):
+        return None
+    wq_q: ChannelQ = qp["w"]
+    if wq_q.bits != 4 or xq_q.bits != 4:
+        return None
+    try:
+        s_neg = _stack_param(xq_q.s_neg, is_tgq)           # (G, 1)
+        s_pos = _stack_param(xq_q.s_pos, is_tgq)           # (G, 1)
+    except ValueError:
+        return None
+    gc = _int4_group_codes(wq_q, w)
+    if gc is None:
+        return None
+    codes3, sw, group_k = gc
+    N = codes3.shape[-1]
+    return {
+        "wp": pack_int4(codes3.reshape(-1, N)),             # (Kp/2, N)
+        "s_neg": s_neg,
+        "s_pos": s_pos,
+        "scale_neg": s_neg[:, :, None] * sw[None],          # (G, nk, N)
+        "scale_pos": s_pos[:, :, None] * sw[None],          # (G, nk, N)
+        "groups": int(s_neg.shape[0]),
+        "group_k": int(group_k),
+        "k": int(jnp.asarray(w).shape[0]),
+        "bits": 4,
     }
 
 
@@ -173,7 +296,7 @@ def pack_int8_qk(qp: Dict[str, Any]) -> Optional[dict]:
     bq_q, b_tgq = _unwrap_tgq(qp.get("b"))
     if not isinstance(xq_q, SymQ) or not isinstance(bq_q, SymQ):
         return None
-    if xq_q.bits != 8 or bq_q.bits != 8:
+    if xq_q.bits != bq_q.bits or xq_q.bits not in (4, 6, 8):
         return None
     try:
         s_q = _stack_param(xq_q.scale, x_tgq)              # (Gq, 1)
@@ -189,6 +312,7 @@ def pack_int8_qk(qp: Dict[str, Any]) -> Optional[dict]:
         "s_k": s_k,
         "scale": s_q * s_k,                                 # (G, 1)
         "groups": G,
+        "bits": int(xq_q.bits),
     }
 
 
@@ -200,7 +324,7 @@ def pack_int8_pv(qp: Dict[str, Any]) -> Optional[dict]:
     bq_q, b_tgq = _unwrap_tgq(qp.get("b"))
     if not isinstance(xq_q, MRQSoftmaxQ) or not isinstance(bq_q, SymQ):
         return None
-    if xq_q.bits != 8 or bq_q.bits != 8:
+    if xq_q.bits != bq_q.bits or xq_q.bits not in (4, 6, 8):
         return None
     try:
         s1 = _stack_param(xq_q.s1, x_tgq)                  # (Gp, 1)
@@ -218,26 +342,32 @@ def pack_int8_pv(qp: Dict[str, Any]) -> Optional[dict]:
         "scale1": s1 * s_v,                                 # (G, 1)
         "scale2": s2 * s_v,                                 # (G, 1)
         "groups": G,
+        "bits": int(xq_q.bits),
     }
 
 
 def convert_for_kernels(qparams: Dict[str, dict],
                         weights: Dict[str, np.ndarray]) -> Dict[str, dict]:
-    """Adds an 'int8' / 'int8_mrq' pack to every eligible linear op and an
-    'int8_qk' / 'int8_pv' pack to every eligible attention einsum —
-    ``QuantContext(kernel=True).attention`` takes the fused int8 path
-    exactly when BOTH attention packs of an op are present."""
+    """Adds an 'int8' / 'int8_mrq' (byte codes, 8- or 6-bit) or 'int4' /
+    'int4_mrq' (nibble-packed, per-K-group scales) pack to every eligible
+    linear op and an 'int8_qk' / 'int8_pv' pack (bits-tagged, 8/6/4) to
+    every eligible attention einsum — ``QuantContext(kernel=True)``
+    dispatches on whichever pack key is present; the attention path fires
+    exactly when BOTH attention packs of an op are present. The bit-width
+    is read off the op's own quantizers, so one call handles w8a8, w6a6,
+    and w4a4 recipes alike."""
     out = {}
     for name, qp in qparams.items():
         qp = dict(qp)
         if name in weights:
-            pack = pack_int8_linear(qp, weights[name])
-            if pack is not None:
-                qp["int8"] = pack
-            else:
-                mpack = pack_int8_mrq_linear(qp, weights[name])
-                if mpack is not None:
-                    qp["int8_mrq"] = mpack
+            for key, builder in (("int8", pack_int8_linear),
+                                 ("int8_mrq", pack_int8_mrq_linear),
+                                 ("int4", pack_int4_linear),
+                                 ("int4_mrq", pack_int4_mrq_linear)):
+                pack = builder(qp, weights[name])
+                if pack is not None:
+                    qp[key] = pack
+                    break
         if name.endswith("/qk"):
             qpack = pack_int8_qk(qp)
             if qpack is not None:
@@ -271,8 +401,8 @@ def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     y = int8_matmul_fq(
         xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"], pack["corr"],
         bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), out_dtype=out_dtype,
-        interpret=INTERPRET)
+        g=_group_index(pack, tgroup), bits=pack.get("bits", 8),
+        out_dtype=out_dtype, interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
@@ -286,9 +416,38 @@ def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
         xm, pack["wq"], pack["s_neg"], pack["s_pos"],
         pack["scale_neg"], pack["scale_pos"],
         bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), out_dtype=out_dtype,
-        interpret=INTERPRET)
+        g=_group_index(pack, tgroup), bits=pack.get("bits", 8),
+        out_dtype=out_dtype, interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
+
+
+def int4_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+    """Packed-int4 serving linear: nibble weights widen in the VMEM
+    prologue, f32 accumulation with per-K-group dequant (TGQ-aware)."""
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    xm = x.reshape(-1, shape[-1])
+    y = int4_matmul_fq(
+        xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"], pack["corr"],
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        g=_group_index(pack, tgroup), group_k=pack["group_k"],
+        out_dtype=out_dtype, interpret=INTERPRET)
+    return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
+
+
+def int4_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+    """Packed-int4 MRQ-input serving linear (one nibble-weight traversal,
+    dual region dots, per-K-group dequant)."""
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    xm = x.reshape(-1, shape[-1])
+    y = int4_matmul_mrq_fq(
+        xm, pack["wp"], pack["s_neg"], pack["s_pos"],
+        pack["scale_neg"], pack["scale_pos"],
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        g=_group_index(pack, tgroup), group_k=pack["group_k"],
+        out_dtype=out_dtype, interpret=INTERPRET)
+    return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
 
 
 # ---------------------------------------------------------------------------
@@ -324,17 +483,20 @@ def int8_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
 
     scores = int8_bmm_qk(
         qf, kf, qk_pack["s_q"], qk_pack["s_k"],
-        qk_pack["scale"] * jnp.float32(scale), g=g_qk, interpret=INTERPRET)
+        qk_pack["scale"] * jnp.float32(scale), g=g_qk,
+        bits=int(qk_pack.get("bits", 8)), interpret=INTERPRET)
     scores = scores.reshape(B, Hk, G, Sq, Skv)
     if mask is not None:
         from repro.nn.ctx import NEG_INF
         scores = jnp.where(mask, scores, NEG_INF)
 
-    codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g_pv,
+    pv_bits = int(pv_pack.get("bits", 8))
+    codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g_pv, bits=pv_bits,
                               interpret=INTERPRET)
     out = int8_bmm_pv(
         codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"], pv_pack["scale1"],
-        pv_pack["scale2"], g=g_pv, out_dtype=out_dtype, interpret=INTERPRET)
+        pv_pack["scale2"], g=g_pv, bits=pv_bits, out_dtype=out_dtype,
+        interpret=INTERPRET)
     return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 
@@ -370,11 +532,13 @@ def flash_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
         mf = jnp.broadcast_to(mask, (B, Hk, G, Sq, Skv)
                               ).reshape(BHG, Sq, Skv)
 
+    bits = int(qk_pack.get("bits", 8))
     out = flash_attn_mrq(
         qf, kf, vf, qk_pack["s_q"], qk_pack["s_k"],
         qk_pack["scale"] * jnp.float32(scale), pv_pack["s1"],
         pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
-        g_qk=g_qk, g_pv=g_pv, mask=mf, out_dtype=out_dtype,
+        g_qk=g_qk, g_pv=g_pv, mask=mf, bits=bits,
+        packed_kv=(bits == 4), out_dtype=out_dtype,
         interpret=INTERPRET)
     return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 

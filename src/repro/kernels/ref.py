@@ -11,13 +11,16 @@ import jax.numpy as jnp
 from repro.core.quantizers import mrq_signed_qdq, mrq_softmax_qdq
 
 
-def quantize_int8_ref(x, scale, zero):
-    """Uniform affine int8 codes: q = clip(round(x/s)+z-128, -128, 127).
+def quantize_int8_ref(x, scale, zero, bits: int = 8):
+    """Uniform affine codes: q = clip(round(x/s)+z-h, -h, h-1), h=2^{b-1}.
 
-    Codes are stored SIGNED (two's complement, offset by 128 from the
-    unsigned convention) so the MXU s8 path applies; the effective zero
-    point becomes (z - 128)."""
-    q = jnp.clip(jnp.round(x / scale) + zero - 128, -128, 127)
+    Codes are stored SIGNED (two's complement, offset by half the code
+    range from the unsigned convention) so the MXU s8 path applies; the
+    effective zero point becomes (z - 2^{b-1}). Sub-byte widths keep the
+    same convention inside int8 storage (6-bit: [-32, 31]; 4-bit:
+    [-8, 7], nibble-packed downstream)."""
+    half = 2 ** (bits - 1)
+    q = jnp.clip(jnp.round(x / scale) + zero - half, -half, half - 1)
     return q.astype(jnp.int8)
 
 
@@ -37,7 +40,7 @@ def int8_matmul_ref(xq, wq, scale, corr, bias=None, out_dtype=jnp.float32):
 
 
 def int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, bias=None, g=0,
-                       out_dtype=jnp.float32):
+                       bits: int = 8, out_dtype=jnp.float32):
     """Fused-quantize matmul oracle: quantize x with group-g params, then
     the int8 matmul + dequant epilogue.
 
@@ -46,10 +49,88 @@ def int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, bias=None, g=0,
     """
     sx_g = jnp.take(sx, g, axis=0)[0]
     zx_g = jnp.take(zx, g, axis=0)[0]
-    xq = quantize_int8_ref(x.astype(jnp.float32), sx_g, zx_g)
+    xq = quantize_int8_ref(x.astype(jnp.float32), sx_g, zx_g, bits)
     return int8_matmul_ref(xq, wq, jnp.take(scale, g, axis=0),
                            jnp.take(corr, g, axis=0), bias=bias,
                            out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# packed-int4 linears (per-K-group weight scales, f32 group accumulation)
+# ---------------------------------------------------------------------------
+def int4_matmul_fq_ref(x, wp, sx, zx, scale, corr, bias=None, g=0,
+                       group_k: int = 256, out_dtype=jnp.float32):
+    """Oracle for ``int4_matmul_fq``: unpack nibbles, quantize x at 4
+    bits with the group-g affine params, then replay the kernel's
+    GROUP-ORDERED f32 accumulation — each K group's s32 partial is
+    corrected and dequantized with its own (nk, N) scale row before the
+    next group is added, matching the kernel's per-K-step dequant.
+
+    wp: (Kp/2, N) int8 packed; scale: (G, nk, N) f32; corr: (G, nk, N)
+    i32 with nk = Kp / group_k.
+    """
+    from repro.kernels.int4_packed import unpack_int4
+    M, K = x.shape
+    Kp, N = 2 * wp.shape[0], wp.shape[1]
+    nk = Kp // group_k
+    sx_g = jnp.take(sx, g, axis=0)[0]
+    zx_g = jnp.take(zx, g, axis=0)[0]
+    xq = quantize_int8_ref(x.astype(jnp.float32), sx_g, zx_g, bits=4)
+    xq = jnp.pad(xq, ((0, 0), (0, Kp - K))).astype(jnp.int32)
+    w = unpack_int4(wp).astype(jnp.int32)
+    scale_g = jnp.take(scale, g, axis=0)
+    corr_g = jnp.take(corr, g, axis=0)
+    acc = jnp.zeros((M, N), jnp.float32)
+    for kg in range(nk):
+        sl = slice(kg * group_k, (kg + 1) * group_k)
+        partial = jax.lax.dot_general(
+            xq[:, sl], w[sl], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + ((partial - corr_g[kg][None, :]).astype(jnp.float32)
+                     * scale_g[kg][None, :])
+    if bias is not None:
+        acc = acc + bias[None, :].astype(jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def int4_matmul_mrq_fq_ref(x, wp, s_neg, s_pos, scale_neg, scale_pos,
+                           bias=None, g=0, group_k: int = 256,
+                           out_dtype=jnp.float32):
+    """Oracle for ``int4_matmul_mrq_fq``: 4-bit twin-region codes
+    (disjoint support by sign), nibble-unpacked weights, and the kernel's
+    group-ordered f32 accumulation with per-region per-K-group scales.
+    """
+    from repro.kernels.int4_packed import unpack_int4
+    half = 8
+    M, K = x.shape
+    Kp, N = 2 * wp.shape[0], wp.shape[1]
+    nk = Kp // group_k
+    xf = x.astype(jnp.float32)
+    sn = jnp.take(s_neg, g, axis=0)[0]
+    sp = jnp.take(s_pos, g, axis=0)[0]
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn), -half, 0), 0
+                   ).astype(jnp.int32)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp), 0, half - 1)
+                   ).astype(jnp.int32)
+    qn = jnp.pad(qn, ((0, 0), (0, Kp - K)))
+    qp = jnp.pad(qp, ((0, 0), (0, Kp - K)))
+    w = unpack_int4(wp).astype(jnp.int32)
+    sn_g = jnp.take(scale_neg, g, axis=0)
+    sp_g = jnp.take(scale_pos, g, axis=0)
+    dims = (((1,), (0,)), ((), ()))
+    acc = jnp.zeros((M, N), jnp.float32)
+    for kg in range(nk):
+        sl = slice(kg * group_k, (kg + 1) * group_k)
+        pn = jax.lax.dot_general(qn[:, sl], w[sl], dims,
+                                 preferred_element_type=jnp.int32)
+        pp = jax.lax.dot_general(qp[:, sl], w[sl], dims,
+                                 preferred_element_type=jnp.int32)
+        acc = acc + (pn.astype(jnp.float32) * sn_g[kg][None, :]
+                     + pp.astype(jnp.float32) * sp_g[kg][None, :])
+    if bias is not None:
+        acc = acc + bias[None, :].astype(jnp.float32)
+    return acc.astype(out_dtype)
 
 
 def int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos, scale_neg, scale_pos,
@@ -162,18 +243,19 @@ def int8_bmm_pv_ref(codes, v, s_v, scale1, scale2, g=0, bits: int = 8,
 
 
 def int8_attention_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
-                       g=0, out_dtype=jnp.float32):
+                       g=0, bits: int = 8, out_dtype=jnp.float32):
     """Full int8 attention oracle over FLATTENED (BHG, S, hd) operands:
     symmetric QK^T -> mask -> softmax-to-codes -> dual-region P·V.
     Exactly the composition ``kernels.ops.int8_attention`` runs."""
     from repro.nn.ctx import NEG_INF
     scores = int8_bmm_qk_ref(q, k, qk_pack["s_q"], qk_pack["s_k"],
-                             qk_pack["scale"] * scale, g=g)
+                             qk_pack["scale"] * scale, g=g, bits=bits)
     if mask is not None:
         scores = jnp.where(mask, scores, NEG_INF)
-    codes = softmax_mrq_codes_ref(scores, pv_pack["s1"], g=g)
+    codes = softmax_mrq_codes_ref(scores, pv_pack["s1"], g=g, bits=bits)
     return int8_bmm_pv_ref(codes, v, pv_pack["s_v"], pv_pack["scale1"],
-                           pv_pack["scale2"], g=g, out_dtype=out_dtype)
+                           pv_pack["scale2"], g=g, bits=bits,
+                           out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------

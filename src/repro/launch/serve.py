@@ -2,9 +2,10 @@
 
 DiT archs run through the sharded batched serving subsystem: a request
 stream is coalesced into fixed-shape microbatches (step-bucketed, padded,
-CFG-paired) and executed data-parallel via shard_map; ``--quantize w8a8``
-serves through the fused int8 Pallas kernels. LM archs keep the simple
-batched-decode path.
+CFG-paired) and executed data-parallel via shard_map; ``--quantize``
+serves through the Pallas kernel family for the chosen bits (w8a8/w6a6:
+fused int8 kernels; w4a4: nibble-packed int4 kernels). LM archs keep the
+simple batched-decode path.
 
 Quantized serving goes through the unified API (``repro.quant``):
 ``--quantize w8a8`` builds a ``QuantRecipe``, runs ``quantize()`` and
@@ -37,6 +38,32 @@ from __future__ import annotations
 import argparse
 import os
 import time
+import warnings
+
+
+def fake_quant_fallback_warning(artifact) -> "str | None":
+    """The message served when a quantized artifact CANNOT lower onto the
+    Pallas kernels (no packs — e.g. channel-balanced HO ops, or an
+    artifact from an older writer), or None when the kernel path is
+    active. A named helper so the no-silent-fallback contract is testable
+    without spinning up an engine: every --quantize/--load-artifact serve
+    either runs the packed kernels or says out loud that it does not.
+    """
+    if artifact.has_kernel_packs:
+        return None
+    return (
+        f"artifact {artifact.recipe.bits}/{artifact.recipe.method} carries "
+        "no kernel packs: serving falls back to the FAKE-QUANT path "
+        "(simulated quant-dequant in fp32 — no int8/int4 Pallas kernels, "
+        "no weight-traffic win). Re-quantize with a kernel-deployable "
+        "recipe (w8a8/w6a6 -> fused int8 kernels, w4a4 -> packed int4) "
+        "for the deployment path.")
+
+
+def _warn_if_fake_quant(artifact) -> None:
+    msg = fake_quant_fallback_warning(artifact)
+    if msg is not None:
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
 
 def main() -> None:
@@ -63,11 +90,11 @@ def main() -> None:
     ap.add_argument("--quantize", default="none",
                     choices=("none", "w8a8", "w6a6", "w4a4"))
     ap.add_argument("--calib", default="range", choices=("range", "ho"),
-                    help="w8a8/w6a6 calibration: fast range-only (serving "
+                    help="calibration: fast range-only (serving "
                          "bring-up) or the paper's full HO search")
     ap.add_argument("--attn-impl", default=None,
                     choices=("flash", "composed"),
-                    help="w8a8 attention lowering: 'flash' = one fused "
+                    help="attention lowering: 'flash' = one fused "
                          "Pallas kernel (default; no (S,S) HBM "
                          "round-trip), 'composed' = the three-kernel "
                          "exactness oracle. Unset keeps the recipe/"
@@ -160,6 +187,7 @@ def main() -> None:
                     f"{artifact.recipe.bits} ({artifact.summary()})")
             print(f"loaded {artifact.summary()} in "
                   f"{time.perf_counter() - t0:.1f}s — no calibration run")
+            _warn_if_fake_quant(artifact)
             # no sched= here: the artifact's recorded DiffusionCfg is the
             # source of truth (the CLI-built schedule would silently win
             # over an artifact calibrated under a different chain)
@@ -187,7 +215,8 @@ def main() -> None:
                                                 "smoke": args.smoke})
                 print(f"{args.calib}-calibrated {artifact.summary()} in "
                       f"{time.perf_counter() - t0:.1f}s")
-                ctx = artifact.context()      # int8 kernels iff w8a8 packs
+                _warn_if_fake_quant(artifact)
+                ctx = artifact.context()      # packed kernels iff packs exist
                 if args.save_artifact is not None:
                     artifact.save(args.save_artifact)
                     print(f"saved artifact -> {args.save_artifact}")

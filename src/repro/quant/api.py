@@ -15,9 +15,11 @@ Dispatch is by ``recipe.method``: 'range' runs
 ``serving.quickcal.range_calibrate`` (seconds; structurally correct TGQ
 ranges), 'ho' runs the paper's full Algorithm 1
 (``core.ptq.run_ptq`` — Fisher taps + alternating candidate search).
-Either way, w8a8 results are packed for the fused int8 Pallas kernels
-(``kernels.ops.convert_for_kernels``) before the artifact is built, so
-``artifact.context()`` serves through the deployment path by default.
+Either way, results are packed for the Pallas kernel family matching the
+recipe's bit-width (``kernels.ops.convert_for_kernels``: w8a8/w6a6 ->
+fused int8 kernels, w4a4 -> nibble-packed int4 kernels) before the
+artifact is built, so ``artifact.context()`` serves through the
+deployment path by default.
 
 Internal dispatch imports are deferred into the function body:
 ``kernels.ops`` and ``serving.quickcal`` themselves import

@@ -3,8 +3,9 @@ serializable value.
 
 The artifact is everything a serving process needs to cold-start a
 quantized deployment WITHOUT rerunning calibration: the per-op ``qparams``
-(quantizer pytrees plus, for w8a8, the packed int8 kernel parameters —
-including the int8 weight codes), the :class:`QuantRecipe` that produced
+(quantizer pytrees plus the packed kernel parameters — int8/int6 byte
+codes or nibble-packed int4 weight payloads), the :class:`QuantRecipe`
+that produced
 them, and provenance metadata (model/diffusion configs, TGQ group
 boundaries, calibration stats, caller-supplied git sha / timestamp).
 
@@ -120,8 +121,8 @@ class QuantArtifact:
     # -- consumption --------------------------------------------------------
     @property
     def has_kernel_packs(self) -> bool:
-        return any(any(p in qp for p in ("int8", "int8_mrq", "int8_qk",
-                                         "int8_pv"))
+        return any(any(p in qp for p in ("int8", "int8_mrq", "int4",
+                                         "int4_mrq", "int8_qk", "int8_pv"))
                    for qp in self.qparams.values())
 
     def context(self, kernel: Optional[bool] = None,
@@ -137,9 +138,10 @@ class QuantArtifact:
             kernel = self.has_kernel_packs
         if kernel and not self.has_kernel_packs:
             raise ValueError(
-                "artifact has no int8 kernel packs (recipe "
+                "artifact has no kernel packs (recipe "
                 f"{self.recipe.bits}/{self.recipe.method}); serve it with "
-                "kernel=False (fake-quant) or re-quantize at w8a8")
+                "kernel=False (fake-quant) or re-quantize with a "
+                "kernel-deployable recipe")
         if attn_impl is None:
             attn_impl = self.recipe.attn_impl
         return QuantContext(qparams=self.qparams, kernel=kernel,
@@ -191,11 +193,16 @@ class QuantArtifact:
         return DiffusionCfg(**self.meta["dif"])
 
     def summary(self) -> str:
-        n_packs = sum(1 for qp in self.qparams.values()
-                      if "int8" in qp or "int8_mrq" in qp)
+        n8 = sum(1 for qp in self.qparams.values()
+                 if "int8" in qp or "int8_mrq" in qp)
+        n4 = sum(1 for qp in self.qparams.values()
+                 if "int4" in qp or "int4_mrq" in qp)
         n_attn = sum(1 for qp in self.qparams.values() if "int8_qk" in qp)
+        packs = f"{n8} int8 linear packs"
+        if n4:
+            packs = f"{n4} packed-int4 linear packs"
         return (f"QuantArtifact({self.recipe.bits}/{self.recipe.method}: "
-                f"{len(self.qparams)} ops, {n_packs} int8 linear packs, "
+                f"{len(self.qparams)} ops, {packs}, "
                 f"{n_attn} int8 attention blocks, "
                 f"G={self.meta.get('tgq_groups')})")
 

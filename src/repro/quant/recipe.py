@@ -13,8 +13,10 @@ collapses all of them into one hashable, JSON-round-trippable value that
   expect_recipe=...)`).
 
 Bit-widths are named (``w8a8``/``w6a6``/``w4a4``) rather than two free
-ints because those are the repo's supported deployment points — w8a8 is
-the only one with a packed int8 kernel path; the others serve fake-quant.
+ints because those are the repo's supported deployment points — every
+one of them is kernel-real: w8a8/w6a6 run the fused int8 kernel family
+(byte codes, only the clip range differs), w4a4 the nibble-packed int4
+family with per-K-group weight scales.
 """
 from __future__ import annotations
 
@@ -105,8 +107,11 @@ class QuantRecipe:
 
     @property
     def kernel_deployable(self) -> bool:
-        """Only w8a8 has a packed fused-int8 kernel path (no 6/4-bit MXU)."""
-        return self.bits == "w8a8"
+        """Every named bit-width lowers onto a Pallas kernel family:
+        w8a8/w6a6 on the fused int8 kernels (byte codes, narrower clip
+        range at 6 bits), w4a4 on the packed-int4 kernels (two nibbles
+        per byte, per-K-group weight scales)."""
+        return self.bits in BITS
 
     def ptq_config(self, tgq_groups: int):
         """The equivalent ``PTQConfig`` for the 'ho' pipeline."""

@@ -1,12 +1,12 @@
-"""Flash-style fused int8 MRQ attention (`kernels/flash_attn_mrq.py`):
+"""Flash-style fused int8 MRQ attention (`kernels/flash_attn_mrq.py`) —
+structural and integration tests (the kernel-vs-oracle and
+flash-vs-composed shape x bits x group sweeps live in
+tests/test_kernel_conformance.py):
 
-- kernel vs the tile-faithful oracle (`ref.flash_attn_mrq_ref`) across
-  non-aligned shapes, kv-tile sizes, and TGQ groups;
 - flash vs the COMPOSED three-kernel exactness oracle: bit-tight when
   one kv tile holds the whole row (the online path degenerates to plain
   softmax), and within the documented `ref.flash_vs_composed_atol`
-  contract when the online rescale is actually exercised — swept across
-  group counts, mixed group repacks, and w8a8/w6a6 bit-widths;
+  contract across mixed group repacks and hand-built w6a6 packs;
 - the ragged-sequence NEG_INF regression (S=77-style odd lengths whose
   zero-padded kv lanes would otherwise poison the online max);
 - mask + GQA equivalence through `ops.flash_attention`;
@@ -32,12 +32,6 @@ from repro.core.quantizers import MRQSoftmaxQ, SymQ, TGQ
 from repro.kernels import flash_attn_mrq, int8_bmm_pv, int8_bmm_qk, \
     softmax_mrq_codes
 from repro.kernels import ops, ref
-
-
-SHAPES = [  # (B, M, N, D, bn) — bn < N forces the online multi-tile path
-    (1, 8, 8, 8, 128), (2, 16, 16, 16, 8), (3, 7, 13, 5, 8),
-    (1, 130, 129, 17, 64), (2, 1, 5, 3, 8), (2, 77, 77, 24, 32),
-]
 
 
 def _attn_qparams(G, seed=0):
@@ -81,23 +75,6 @@ def _composed(q, k, v, qk_pack, pv_pack, g, scale, bits=8):
 
 
 # ---------------------------------------------------------------------------
-# kernel vs tile-faithful oracle
-# ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", SHAPES)
-def test_flash_vs_oracle(shape):
-    B, M, N, D, bn = shape
-    qk_pack, pv_pack = _packs(G=3)
-    q, k, v = _case(B, M, N, D, seed=sum(shape))
-    want_fn = jax.jit(functools.partial(
-        ref.flash_attn_mrq_ref, scale=D ** -0.5, bn=bn))
-    for g in (0, 2):
-        out = _flash(q, k, v, qk_pack, pv_pack, g, D ** -0.5, bn)
-        want = want_fn(q, k, v, qk_pack, pv_pack, g_qk=g, g_pv=g)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                                   rtol=0, atol=1e-5)
-
-
-# ---------------------------------------------------------------------------
 # flash vs composed: exactness when one tile holds the row, the documented
 # tolerance contract when the online rescale actually runs
 # ---------------------------------------------------------------------------
@@ -113,25 +90,6 @@ def test_flash_single_tile_matches_composed():
         want = _composed(q, k, v, qk_pack, pv_pack, g, D ** -0.5)
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                    rtol=0, atol=1e-5)
-
-
-@pytest.mark.parametrize("G", [1, 3, 5])
-def test_flash_vs_composed_tolerance_group_sweep(G):
-    """Multi-tile flash stays inside the documented tolerance contract
-    for every TGQ group of the stacked packs — and well inside it (the
-    contract is a worst case; observed error is typically < 5% of it)."""
-    B, M, N, D, bn = 2, 13, 77, 16, 32
-    qk_pack, pv_pack = _packs(G)
-    q, k, v = _case(B, M, N, D, seed=2)
-    for g in range(G):
-        out = _flash(q, k, v, qk_pack, pv_pack, g, D ** -0.5, bn)
-        want = _composed(q, k, v, qk_pack, pv_pack, g, D ** -0.5)
-        diff = float(jnp.max(jnp.abs(out - want)))
-        atol = ref.flash_vs_composed_atol(pv_pack, g, N)
-        assert diff <= atol, (g, diff, atol)
-        assert diff <= 0.25 * atol, \
-            f"group {g}: error {diff:.3e} suspiciously close to the " \
-            f"worst-case contract {atol:.3e}"
 
 
 def test_flash_vs_composed_mixed_group_repack():

@@ -1,0 +1,491 @@
+"""Cross-bit kernel conformance suite: EVERY kernel family against its
+``ref.py`` oracle over one shared grid — bit-widths (w8a8 / w6a6 / w4a4)
+x TGQ group counts G in {1, 3, 5} x ragged shapes (incl. the CLIP-style
+S = 77) x mask / GQA. This file replaces the per-family copy-pasted
+sweep loops that used to live in test_kernels_fused.py /
+test_kernels_attn.py / test_flash_attn.py (those files keep their
+structural and integration tests: block-shape overrides, TGQ repacking
+equivalence, QuantContext routing, compile-once engine contracts).
+
+Cases are built through the REAL pack builders (``kernels.ops.pack_*``),
+so the suite conformance-tests the bits-driven packing layer together
+with the kernels. All Pallas calls run in interpret mode on CPU.
+
+Tolerance registry — the documented per-path numeric contract:
+
+  - Byte-code paths (fused/MRQ linear at 8 and 6 bits, the composed
+    attention trio at every bit-width): integer accumulation with one fp
+    epilogue. Asserted BIT-IDENTICAL to the *jitted* oracle (the kernels
+    execute under jit, where XLA may contract the epilogue multiply-add
+    into an FMA; the eager ref dispatches op-by-op and can differ by
+    1 ulp).
+  - Flash vs its tile-faithful oracle: single-kv-tile runs are exact;
+    multi-tile runs reassociate the online max/denominator rescale under
+    jit fusion, leaving ~1 f32 ulp per rescale (atol 1e-5).
+  - Packed-int4 linear family: the per-K-group dequantization
+    accumulates in f32 once per K step; the oracle replays the same
+    group order, leaving a few f32 ulp of reassociation slack (atol
+    1e-4, observed ~0).
+  - Flash packed-kv (bits=4): the nibble pre-pass is value-identical to
+    quantizing in-kernel, so packed vs unpacked flash is BIT-IDENTICAL.
+  - Flash vs composed: the online-rescale rounding contract, bounded by
+    ``ref.flash_vs_composed_atol`` (dynamic in the pv pack and kv
+    length).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import (
+    ChannelQ, MRQSignedQ, MRQSoftmaxQ, SymQ, TGQ, UniformQ,
+    channel_scale_from_absmax, weight_absmax,
+)
+from repro.kernels import (
+    flash_attn_mrq, int8_bmm_pv, int8_bmm_qk, pack_int4, softmax_mrq_codes,
+    unpack_int4,
+)
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # optional dep
+    HAVE_HYPOTHESIS = False
+
+BITS = {"w8a8": 8, "w6a6": 6, "w4a4": 4}
+GROUPS = (1, 3, 5)
+
+# (M, K, N) — MXU-aligned, ragged, sub-tile, and multi-K-tile shapes
+MM_SHAPES = [(8, 16, 8), (64, 96, 80), (7, 13, 5), (130, 257, 129),
+             (1, 5, 3), (64, 512, 96)]
+# (B, Sq, Skv, D, bn) — batched attention incl. ragged S=77 and 1-row q
+ATTN_SHAPES = [(1, 8, 8, 8, 128), (3, 7, 13, 5, 8), (1, 130, 129, 17, 64),
+               (2, 77, 77, 24, 32), (2, 1, 5, 3, 8)]
+
+# atol per conformance path; 0.0 means bit-identical to the jitted oracle
+TOLERANCES = {
+    "linear": 0.0,              # int8/int6 fused linear (s32 accumulation)
+    "linear_mrq": 0.0,          # int8/int6 single-pass MRQ linear
+    "int4_linear": 1e-4,        # f32 per-K-group accumulation
+    "int4_linear_mrq": 1e-4,
+    "attn_qk": 0.0,             # composed trio: integer kernels
+    "attn_codes": 0.0,
+    "attn_pv": 0.0,
+    "flash": 1e-5,              # vs the tile-faithful jitted oracle
+    "flash_packed_kv": 0.0,     # packed vs unpacked 4-bit flash
+}
+
+
+def _jit_ref(fn, **static):
+    return jax.jit(functools.partial(fn, **static))
+
+
+def _assert_conforms(path, got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    if TOLERANCES[path] == 0.0:
+        np.testing.assert_array_equal(got, want, err_msg=path)
+    else:
+        np.testing.assert_allclose(got, want, rtol=0,
+                                   atol=TOLERANCES[path], err_msg=path)
+
+
+# ---------------------------------------------------------------------------
+# case builders (through the real quantizers + pack builders)
+# ---------------------------------------------------------------------------
+def _uniform_linear_case(M, K, N, G, bits, seed):
+    half = 2 ** (bits - 1)
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (M, K)) * 2.0
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    bias = jax.random.normal(kb, (N,))
+    qp = {"x": TGQ(UniformQ(scale=jnp.linspace(0.01, 0.05, G),
+                            zero=jnp.round(jnp.linspace(0.7 * half,
+                                                        1.17 * half, G)),
+                            bits=bits)),
+          "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), bits),
+                        bits)}
+    return x, w, bias, qp
+
+
+def _mrq_linear_case(M, K, N, G, bits, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    x = jax.nn.gelu(jax.random.normal(kx, (M, K)) * 1.5)
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    bias = jax.random.normal(kb, (N,))
+    qp = {"x": TGQ(MRQSignedQ(s_neg=jnp.geomspace(1e-4, 2e-3, G),
+                              s_pos=jnp.geomspace(1e-3, 2e-2, G),
+                              bits=bits)),
+          "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w), bits),
+                        bits)}
+    return x, w, bias, qp
+
+
+def _attn_qparams(G, bits, seed=0):
+    qk = {"x": TGQ(SymQ(scale=jnp.linspace(0.01, 0.05, G), bits=bits)),
+          "b": TGQ(SymQ(scale=jnp.linspace(0.02, 0.06, G), bits=bits))}
+    pv = {"x": TGQ(MRQSoftmaxQ(s1=jnp.geomspace(3e-4, 6e-3, G), bits=bits)),
+          "b": TGQ(SymQ(scale=jnp.linspace(0.01, 0.04, G), bits=bits))}
+    return qk, pv
+
+
+def _attn_case(B, Sq, Skv, D, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, Sq, D)) * 2.0
+    k = jax.random.normal(k2, (B, Skv, D)) * 2.0
+    v = jax.random.normal(k3, (B, Skv, D)) * 1.5
+    return q, k, v
+
+
+def _g_probes(G):
+    return (0,) if G == 1 else (0, G - 1)
+
+
+# ---------------------------------------------------------------------------
+# fused linear family (uniform activations)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", MM_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_conformance(bname, shape):
+    bits = BITS[bname]
+    M, K, N = shape
+    for G in GROUPS:
+        x, w, bias, qp = _uniform_linear_case(M, K, N, G, bits,
+                                              seed=M * K + N + G)
+        if bits == 4:
+            pack = ops.pack_int4_linear(qp, w)
+            assert pack is not None and pack["bits"] == 4
+            want_fn = _jit_ref(ref.int4_matmul_fq_ref,
+                               group_k=pack["group_k"])
+            for g in _g_probes(G):
+                got = ops.int4_linear(x, pack, bias=bias, tgroup=g)
+                want = want_fn(x, pack["wp"], pack["sx"], pack["zx"],
+                               pack["scale"], pack["corr"], bias, g=g)
+                _assert_conforms("int4_linear", got, want)
+        else:
+            pack = ops.pack_int8_linear(qp, w)
+            assert pack is not None and pack["bits"] == bits
+            want_fn = _jit_ref(ref.int8_matmul_fq_ref, bits=bits)
+            for g in _g_probes(G):
+                got = ops.int8_linear(x, pack, bias=bias, tgroup=g)
+                want = want_fn(x, pack["wq"], pack["sx"], pack["zx"],
+                               pack["scale"], pack["corr"], bias, g=g)
+                _assert_conforms("linear", got, want)
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_mrq_conformance(bname, shape):
+    bits = BITS[bname]
+    M, K, N = shape
+    for G in GROUPS:
+        x, w, bias, qp = _mrq_linear_case(M, K, N, G, bits,
+                                          seed=M + K * N + G)
+        if bits == 4:
+            pack = ops.pack_int4_mrq_linear(qp, w)
+            assert pack is not None and pack["bits"] == 4
+            want_fn = _jit_ref(ref.int4_matmul_mrq_fq_ref,
+                               group_k=pack["group_k"])
+            for g in _g_probes(G):
+                got = ops.int4_linear_mrq(x, pack, bias=bias, tgroup=g)
+                want = want_fn(x, pack["wp"], pack["s_neg"], pack["s_pos"],
+                               pack["scale_neg"], pack["scale_pos"], bias,
+                               g=g)
+                _assert_conforms("int4_linear_mrq", got, want)
+        else:
+            pack = ops.pack_int8_mrq_linear(qp, w)
+            assert pack is not None and pack["bits"] == bits
+            want_fn = _jit_ref(ref.int8_matmul_mrq_fq_ref, bits=bits)
+            for g in _g_probes(G):
+                got = ops.int8_linear_mrq(x, pack, bias=bias, tgroup=g)
+                want = want_fn(x, pack["wq"], pack["s_neg"], pack["s_pos"],
+                               pack["scale_neg"], pack["scale_pos"], bias,
+                               g=g)
+                _assert_conforms("linear_mrq", got, want)
+
+
+# ---------------------------------------------------------------------------
+# composed attention trio (QK^T -> softmax-MRQ codes -> P·V)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", ATTN_SHAPES, ids=lambda s: "x".join(map(
+    str, s[:4])))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_attention_composed_conformance(bname, shape):
+    bits = BITS[bname]
+    B, Sq, Skv, D, _ = shape
+    for G in GROUPS:
+        qk_qp, pv_qp = _attn_qparams(G, bits, seed=sum(shape) + G)
+        qk_pack = ops.pack_int8_qk(qk_qp)
+        pv_pack = ops.pack_int8_pv(pv_qp)
+        assert qk_pack["bits"] == bits and pv_pack["bits"] == bits
+        q, k, v = _attn_case(B, Sq, Skv, D, seed=sum(shape) + G)
+        qk_ref = _jit_ref(ref.int8_bmm_qk_ref, bits=bits)
+        sm_ref = _jit_ref(ref.softmax_mrq_codes_ref, bits=bits)
+        pv_ref = _jit_ref(ref.int8_bmm_pv_ref, bits=bits)
+        for g in _g_probes(G):
+            scores = int8_bmm_qk(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                 qk_pack["scale"], g=g, bits=bits,
+                                 interpret=True)
+            _assert_conforms("attn_qk", scores,
+                             qk_ref(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                    qk_pack["scale"], g=g))
+            codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g, bits=bits,
+                                      interpret=True)
+            assert codes.dtype == jnp.int8
+            _assert_conforms("attn_codes", codes,
+                             sm_ref(scores, pv_pack["s1"], g=g))
+            out = int8_bmm_pv(codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                              pv_pack["scale2"], g=g, bits=bits,
+                              interpret=True)
+            _assert_conforms("attn_pv", out,
+                             pv_ref(codes, v, pv_pack["s_v"],
+                                    pv_pack["scale1"], pv_pack["scale2"],
+                                    g=g))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (single fused kernel; packed-kv at 4 bits)
+# ---------------------------------------------------------------------------
+def _flash(q, k, v, qk_pack, pv_pack, g, scale, bn, bits, packed_kv=False):
+    return flash_attn_mrq(
+        q, k, v, qk_pack["s_q"], qk_pack["s_k"], qk_pack["scale"] * scale,
+        pv_pack["s1"], pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+        g_qk=g, g_pv=g, bits=bits, packed_kv=packed_kv, bn=bn,
+        interpret=True)
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES, ids=lambda s: "x".join(map(
+    str, s[:4])))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_flash_conformance(bname, shape):
+    bits = BITS[bname]
+    B, Sq, Skv, D, bn = shape
+    scale = D ** -0.5
+    for G in GROUPS:
+        qk_qp, pv_qp = _attn_qparams(G, bits, seed=sum(shape) + G)
+        qk_pack = ops.pack_int8_qk(qk_qp)
+        pv_pack = ops.pack_int8_pv(pv_qp)
+        q, k, v = _attn_case(B, Sq, Skv, D, seed=sum(shape) + 7 * G)
+        want_fn = _jit_ref(ref.flash_attn_mrq_ref, bits=bits, bn=bn,
+                           scale=scale)
+        for g in _g_probes(G):
+            got = _flash(q, k, v, qk_pack, pv_pack, g, scale, bn, bits,
+                         packed_kv=(bits == 4))
+            want = want_fn(q, k, v, qk_pack, pv_pack, g_qk=g, g_pv=g)
+            _assert_conforms("flash", got, want)
+            if bits == 4:
+                # the nibble pre-pass must be value-identical to in-kernel
+                # quantization: packed-kv == unpacked bit-for-bit
+                unpacked = _flash(q, k, v, qk_pack, pv_pack, g, scale, bn,
+                                  bits, packed_kv=False)
+                _assert_conforms("flash_packed_kv", got, unpacked)
+
+
+@pytest.mark.parametrize("G", GROUPS)
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_flash_vs_composed_tolerance(bname, G):
+    """Flash == the composed trio within ``ref.flash_vs_composed_atol``
+    (the online-rescale rounding contract), at every bit-width and TGQ
+    group — multi-kv-tile so the online path actually rescales."""
+    bits = BITS[bname]
+    B, Sq, Skv, D, bn = 2, 77, 77, 24, 32
+    scale = D ** -0.5
+    qk_qp, pv_qp = _attn_qparams(G, bits, seed=17 + G)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    q, k, v = _attn_case(B, Sq, Skv, D, seed=29 + G)
+    composed_fn = _jit_ref(ref.int8_attention_ref, bits=bits, scale=scale)
+    for g in _g_probes(G):
+        got = _flash(q, k, v, qk_pack, pv_pack, g, scale, bn, bits,
+                     packed_kv=(bits == 4))
+        composed = composed_fn(q, k, v, qk_pack, pv_pack, g=g)
+        atol = ref.flash_vs_composed_atol(pv_pack, g, Skv, bits=bits)
+        diff = float(jnp.max(jnp.abs(got - composed)))
+        assert diff <= atol, (bname, G, g, diff, atol)
+
+
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_flash_mask_and_gqa_conformance(bname):
+    """Mask: flash with a boolean mask matches the masked oracle. GQA: a
+    q batch of rep x the kv batch gathers the shared kv tile via b//rep —
+    bit-identical to feeding materialized kv copies. Both per bit-width
+    (packed-kv on at 4 bits)."""
+    bits = BITS[bname]
+    G, scale, bn = 3, 24 ** -0.5, 32
+    qk_qp, pv_qp = _attn_qparams(G, bits, seed=5)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    packed = bits == 4
+
+    B, Sq, Skv, D = 2, 33, 77, 24
+    q, k, v = _attn_case(B, Sq, Skv, D, seed=31)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(6), 0.8, (B, Sq, Skv))
+    mask = mask.at[:, :, 0].set(True)          # no fully-masked rows
+    got = flash_attn_mrq(
+        q, k, v, qk_pack["s_q"], qk_pack["s_k"], qk_pack["scale"] * scale,
+        pv_pack["s1"], pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+        g_qk=1, g_pv=1, mask=mask, bits=bits, packed_kv=packed, bn=bn,
+        interpret=True)
+    want = _jit_ref(ref.flash_attn_mrq_ref, bits=bits, bn=bn, scale=scale)(
+        q, k, v, qk_pack, pv_pack, mask=mask, g_qk=1, g_pv=1)
+    _assert_conforms("flash", got, want)
+
+    rep = 3
+    qg, _, _ = _attn_case(B * rep, Sq, Skv, D, seed=37)
+    shared = _flash(qg, k, v, qk_pack, pv_pack, 1, scale, bn, bits,
+                    packed_kv=packed)
+    copied = _flash(qg, jnp.repeat(k, rep, axis=0),
+                    jnp.repeat(v, rep, axis=0), qk_pack, pv_pack, 1, scale,
+                    bn, bits, packed_kv=packed)
+    np.testing.assert_array_equal(np.asarray(shared), np.asarray(copied))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance: a w4a4 artifact serves through the packed-int4
+# kernels, compiled once, agreeing with its own fake-quant oracle
+# ---------------------------------------------------------------------------
+def test_engine_w4a4_serves_packed_int4_compile_once(tiny_dit, monkeypatch):
+    """ServeEngine with a w4a4 QuantArtifact lowers every packed linear
+    onto `int4_matmul_fq` / `int4_matmul_mrq_fq` (counted inside the
+    scan body), traces ONCE across all timestep groups, and the samples
+    agree with the fake-quant oracle on the same artifact.  At
+    d_model <= group_k the per-K-group weight scales coincide with the
+    per-channel fake-quant scales, so the only divergence is f32
+    accumulation order inside the kernel — atol 1e-4 on samples whose
+    std is ~1.  (Models with K > group_k genuinely refine the weights
+    per group; their oracle is the kernel-vs-ref sweep above, not a
+    sample-level identity.)"""
+    from repro.diffusion import DiffusionCfg, make_schedule
+    from repro.kernels import ops as kops
+    from repro.models import dit_apply
+    from repro.quant import QuantRecipe, quantize
+    from repro.serving import GenRequest, ServeEngine
+
+    cfg, p = tiny_dit
+    dif = DiffusionCfg(T=40, tgq_groups=4)
+    sched = make_schedule(dif)
+    art = quantize(p, cfg, dif, QuantRecipe(bits="w4a4", method="range",
+                                            n_per_group=1, calib_batch=1))
+    assert art.has_kernel_packs
+    n_int4 = sum(1 for qp in art.qparams.values()
+                 if "int4" in qp or "int4_mrq" in qp)
+    assert n_int4 > 0, "w4a4 quantize() must emit packed-int4 linears"
+    assert not any("int8" in qp or "int8_mrq" in qp
+                   for qp in art.qparams.values()), \
+        "w4a4 linears must not take the byte-code kernels"
+
+    calls = {"fq": 0, "mrq": 0}
+    for key, fname in (("fq", "int4_matmul_fq"), ("mrq",
+                                                  "int4_matmul_mrq_fq")):
+        orig = getattr(kops, fname)
+        monkeypatch.setattr(kops, fname, functools.partial(
+            lambda orig, key, *a, **kw: (
+                calls.__setitem__(key, calls[key] + 1), orig(*a, **kw))[1],
+            orig, key))
+
+    traces = []
+    orig_apply = dit_apply
+
+    def traced_apply(*a, **kw):
+        traces.append(1)
+        return orig_apply(*a, **kw)
+
+    import repro.serving.engine as eng_mod
+    monkeypatch.setattr(eng_mod, "dit_apply", traced_apply)
+
+    reqs = [GenRequest(request_id=i, label=i % cfg.n_classes, steps=4,
+                       cfg_scale=1.5, seed=40 + i) for i in range(2)]
+    eng = ServeEngine(p, cfg, dif, sched, ctx=art.context(), microbatch=2,
+                      step_buckets=(4,))
+    res = eng.serve(reqs)
+    assert len(traces) == 1, "sampler retraced across timestep groups"
+    assert calls["fq"] > 0, "int4 uniform kernel never fired"
+    assert calls["mrq"] > 0, "int4 MRQ (post-GELU fc2) kernel never fired"
+    n_fq, n_mrq = calls["fq"], calls["mrq"]
+    kern = np.stack([res[i].sample for i in range(2)])
+    assert np.isfinite(kern).all()
+
+    eng_fake = ServeEngine(p, cfg, dif, sched, ctx=art.context(kernel=False),
+                           microbatch=2, step_buckets=(4,))
+    res_fake = eng_fake.serve(reqs)
+    assert calls["fq"] == n_fq and calls["mrq"] == n_mrq, \
+        "fake-quant oracle must not touch the int4 kernels"
+    fake = np.stack([res_fake[i].sample for i in range(2)])
+    np.testing.assert_allclose(kern, fake, rtol=0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# nibble packing: exhaustive byte sweep + property-based round-trips
+# ---------------------------------------------------------------------------
+def test_nibble_split_exhaustive_bytes():
+    """Every one of the 256 byte patterns splits into two codes in
+    [-8, 7] and re-packs to the identical byte — the sign-extension
+    ((u ^ 8) - 8) has no wrap/overflow corner anywhere in its domain."""
+    from repro.kernels import nibble_split
+    bytes_all = jnp.arange(-128, 128, dtype=jnp.int32).astype(jnp.int8)
+    lo, hi = nibble_split(bytes_all)
+    assert int(lo.min()) >= -8 and int(lo.max()) <= 7
+    assert int(hi.min()) >= -8 and int(hi.max()) <= 7
+    interleaved = jnp.stack([lo, hi], axis=1).reshape(-1).astype(jnp.int8)
+    repacked = pack_int4(interleaved)
+    np.testing.assert_array_equal(np.asarray(repacked),
+                                  np.asarray(bytes_all))
+
+
+def test_pack_int4_odd_length_pads_inert_zero():
+    codes = jnp.array([[-8, 7], [3, -1], [5, 2]], jnp.int8)    # odd K=3
+    packed = pack_int4(codes)                                  # (2, 2)
+    assert packed.shape == (2, 2)
+    full = unpack_int4(packed)                                 # (4, 2)
+    np.testing.assert_array_equal(np.asarray(full[3]), np.zeros(2))
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed, k=3)),
+                                  np.asarray(codes))
+
+
+_hyp_skip = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                               reason="hypothesis not installed")
+
+if HAVE_HYPOTHESIS:
+    @_hyp_skip
+    @settings(max_examples=60, deadline=None)
+    @given(k=st.integers(1, 40), n=st.integers(1, 9),
+           axis=st.sampled_from([0, 1, -1]),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_nibble_roundtrip_property(k, n, axis, seed):
+        """pack -> unpack identity over random int4 tensors along any
+        axis, including odd lengths (one inert zero-pad row)."""
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-8, 8, size=(k, n)).astype(np.int8)
+        dim = codes.shape[axis]
+        packed = pack_int4(jnp.asarray(codes), axis=axis)
+        assert packed.shape[axis if axis >= 0 else packed.ndim + axis] \
+            == (dim + 1) // 2
+        out = unpack_int4(packed, k=dim, axis=axis)
+        np.testing.assert_array_equal(np.asarray(out), codes)
+
+    @_hyp_skip
+    @settings(max_examples=30, deadline=None)
+    @given(k=st.integers(1, 30), n=st.integers(1, 6),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_packed_dequant_matches_unpacked_property(k, n, seed):
+        """Dequantizing through the packed representation loses nothing:
+        unpack(pack(codes)) * scale == codes * scale elementwise."""
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-8, 8, size=(k, n)).astype(np.int8)
+        scale = rng.uniform(1e-4, 1e-1, size=(1, n)).astype(np.float32)
+        via_pack = np.asarray(unpack_int4(pack_int4(jnp.asarray(codes)),
+                                          k=k)).astype(np.float32) * scale
+        np.testing.assert_array_equal(via_pack,
+                                      codes.astype(np.float32) * scale)
+else:                                          # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_nibble_roundtrip_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_packed_dequant_matches_unpacked_property():
+        pass

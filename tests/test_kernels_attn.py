@@ -1,10 +1,12 @@
-"""Int8 attention kernels vs their oracles: non-MXU-aligned batched shape
-sweeps, TGQ group sweeps (bit-identical to per-group repacking), the
-codes-in/codes-out contract (softmax codes decode to exactly the fidelity
-qdq kernel's output; P·V consumes the codes directly), fused-vs-unfused
-equivalence of the whole attention block, QuantContext routing, and the
-compile-once serving contract with int8 attention inside the engine's
-scan. All Pallas calls run in interpret mode on CPU.
+"""Int8 attention kernels — structural and integration tests: block
+shape overrides, TGQ group sweeps (bit-identical to per-group
+repacking), the codes-in/codes-out contract (softmax codes decode to
+exactly the fidelity qdq kernel's output; P·V consumes the codes
+directly), fused-vs-unfused equivalence of the whole attention block,
+QuantContext routing, and the compile-once serving contract with int8
+attention inside the engine's scan. The kernel-vs-oracle shape x bits x
+group sweeps live in tests/test_kernel_conformance.py. All Pallas calls
+run in interpret mode on CPU.
 
 Oracle comparisons jit the ref: the kernels execute under jit, where XLA
 may contract the epilogue's multiply-add into an FMA; the eager ref
@@ -24,12 +26,6 @@ from repro.core.quantizers import (
 )
 from repro.kernels import int8_bmm_pv, int8_bmm_qk, softmax_mrq_codes
 from repro.kernels import ops, ref
-
-
-BMM_SHAPES = [  # (B, M, N, D) — batched attention matrices, incl. ragged
-    (1, 8, 8, 8), (2, 16, 16, 16), (3, 7, 13, 5), (1, 130, 129, 17),
-    (4, 33, 65, 24), (2, 1, 5, 3), (2, 77, 77, 24),   # S=77 odd length
-]
 
 
 def _jit_ref(fn, **static):
@@ -58,17 +54,6 @@ def _pv_case(B, M, N, D, G, seed=0):
 # ---------------------------------------------------------------------------
 # batched QK^T
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", BMM_SHAPES)
-def test_int8_bmm_qk_vs_ref(shape):
-    B, M, N, D = shape
-    q, k, s_q, s_k, scale = _qk_case(B, M, N, D, G=3, seed=sum(shape))
-    want_fn = _jit_ref(ref.int8_bmm_qk_ref)
-    for g in (0, 2):
-        out = int8_bmm_qk(q, k, s_q, s_k, scale, g=g, interpret=True)
-        np.testing.assert_array_equal(
-            np.asarray(out), np.asarray(want_fn(q, k, s_q, s_k, scale, g=g)))
-
-
 @pytest.mark.parametrize("block", [(32, 64, 64), (128, 128, 256)])
 def test_int8_bmm_qk_block_shapes(block):
     bm, bn, bk = block
@@ -143,18 +128,6 @@ def test_int8_bmm_qk_matches_unfused_pipeline():
 # ---------------------------------------------------------------------------
 # softmax -> MRQ codes
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", [(6, 16), (2, 3, 7, 13), (1, 257),
-                                   (130, 129)])
-def test_softmax_mrq_codes_vs_ref(shape):
-    scores = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 4.0
-    s1 = jnp.asarray([[3e-4], [2e-3], [1.0 / 128]], jnp.float32)
-    for g in range(3):
-        out = softmax_mrq_codes(scores, s1, g=g, interpret=True)
-        want = ref.softmax_mrq_codes_ref(scores, s1, g=g)
-        assert out.dtype == jnp.int8
-        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
-
-
 def test_codes_decode_to_fidelity_qdq():
     """Region-signed codes are a LOSSLESS encoding of the fidelity
     quant-dequant: decode(codes) == mrq_softmax_qdq(softmax(scores))."""
@@ -182,19 +155,6 @@ def test_codes_region2_range_fits_signed_byte():
 # ---------------------------------------------------------------------------
 # batched dual-region P·V
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", BMM_SHAPES)
-def test_int8_bmm_pv_vs_ref(shape):
-    B, M, N, D = shape
-    codes, v, s1, s_v, scale1, scale2 = _pv_case(B, M, N, D, G=3,
-                                                 seed=sum(shape))
-    want_fn = _jit_ref(ref.int8_bmm_pv_ref)
-    for g in (0, 2):
-        out = int8_bmm_pv(codes, v, s_v, scale1, scale2, g=g, interpret=True)
-        np.testing.assert_array_equal(
-            np.asarray(out),
-            np.asarray(want_fn(codes, v, s_v, scale1, scale2, g=g)))
-
-
 def test_int8_bmm_pv_matches_two_region_decomposition():
     """The dual-accumulator kernel reproduces the unfused two-region
     decomposition (separate region matmuls, combined in fp)."""

@@ -1,8 +1,9 @@
-"""Fused int8 serving kernels vs their oracles: non-MXU-aligned shape
-sweeps, TGQ group sweeps (bit-identical to per-group repacking),
-fused-vs-unfused equivalence, kernel-path routing for TGQ-wrapped ops,
-and the compile-once contract of ``ddpm_sample`` with
-``QuantContext(kernel=True)``."""
+"""Fused int8 serving kernels — structural and integration tests: block
+shape overrides, TGQ group sweeps (bit-identical to per-group
+repacking), fused-vs-unfused equivalence, kernel-path routing for
+TGQ-wrapped ops, and the compile-once contract of ``ddpm_sample`` with
+``QuantContext(kernel=True)``. The kernel-vs-oracle shape x bits x group
+sweeps live in tests/test_kernel_conformance.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,10 +16,6 @@ from repro.core.quantizers import (
 )
 from repro.kernels import int8_matmul, int8_matmul_fq, int8_matmul_mrq_fq
 from repro.kernels import ops, ref
-
-
-MM_SHAPES = [(8, 16, 8), (64, 96, 80), (128, 256, 128), (7, 13, 5),
-             (130, 257, 129), (256, 512, 384), (1, 5, 3)]
 
 
 def _rand_case(M, K, N, G, seed=0):
@@ -37,18 +34,6 @@ def _rand_case(M, K, N, G, seed=0):
 # ---------------------------------------------------------------------------
 # fused-quantize matmul
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", MM_SHAPES)
-def test_int8_matmul_fq_vs_ref(shape):
-    M, K, N = shape
-    x, wq, sx, zx, scale, corr, bias = _rand_case(M, K, N, G=3,
-                                                  seed=M * K + N)
-    for g in (0, 2):
-        out = int8_matmul_fq(x, wq, sx, zx, scale, corr, bias, g=g,
-                             interpret=True)
-        want = ref.int8_matmul_fq_ref(x, wq, sx, zx, scale, corr, bias, g=g)
-        assert float(jnp.max(jnp.abs(out - want))) <= 1e-4
-
-
 @pytest.mark.parametrize("block", [(32, 64, 64), (128, 128, 256)])
 def test_int8_matmul_fq_block_shapes(block):
     bm, bn, bk = block
@@ -74,27 +59,6 @@ def test_int8_matmul_fq_matches_unfused_pipeline():
 # ---------------------------------------------------------------------------
 # single-pass MRQ matmul
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", MM_SHAPES)
-def test_int8_matmul_mrq_fq_vs_ref(shape):
-    M, K, N = shape
-    k1, k2 = jax.random.split(jax.random.PRNGKey(sum(shape)))
-    x = jax.nn.gelu(jax.random.normal(k1, (M, K)) * 1.5)
-    wq = jax.random.randint(k2, (K, N), -128, 128, jnp.int32).astype(jnp.int8)
-    G = 3
-    s_neg = (jax.random.uniform(k1, (G, 1)) * 2e-3 + 1e-4).astype(jnp.float32)
-    s_pos = (jax.random.uniform(k2, (G, 1)) * 2e-2 + 1e-3).astype(jnp.float32)
-    sw = jax.random.uniform(k1, (N,)) * 1e-2 + 1e-4
-    scale_neg = s_neg * sw[None, :]
-    scale_pos = s_pos * sw[None, :]
-    bias = jax.random.normal(k2, (N,))
-    for g in (0, G - 1):
-        out = int8_matmul_mrq_fq(x, wq, s_neg, s_pos, scale_neg, scale_pos,
-                                 bias, g=g, interpret=True)
-        want = ref.int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos, scale_neg,
-                                          scale_pos, bias, g=g)
-        assert float(jnp.max(jnp.abs(out - want))) <= 1e-4
-
-
 def test_mrq_single_pass_matches_two_matmul_decomposition():
     """The collapsed kernel reproduces the old twin-region TWO-matmul path."""
     M, K, N = 48, 96, 64

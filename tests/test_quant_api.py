@@ -1,9 +1,10 @@
 """The unified quantization API (`repro.quant`): recipe validation, the
 shared timestep-group resolution contract, artifact save -> load in a
 FRESH process with bit-identical served samples (range and ho recipes at
-w8a8), recipe-mismatch load errors, and the CLI cold-start acceptance
-(`--load-artifact` serves with no calibration, samples bit-identical to
-the calibrating process)."""
+w8a8, plus the packed-int4 w4a4 deployment point), recipe-mismatch load
+errors, the no-silent-fake-quant serving contract, and the CLI
+cold-start acceptance (`--load-artifact` serves with no calibration,
+samples bit-identical to the calibrating process)."""
 import os
 import subprocess
 import sys
@@ -38,7 +39,10 @@ def test_recipe_validation_and_roundtrip():
     r = QuantRecipe(bits="w6a6", method="ho",
                     skip_patterns=["router", "final"])
     assert (r.wbits, r.abits) == (6, 6)
-    assert not r.kernel_deployable and QuantRecipe().kernel_deployable
+    # every named bit-width is kernel-real: w8a8/w6a6 on the byte-code
+    # int8 family, w4a4 on the nibble-packed int4 family
+    assert all(QuantRecipe(bits=b).kernel_deployable
+               for b in ("w8a8", "w6a6", "w4a4"))
     assert r.skip_patterns == ("router", "final")     # list normalized
     assert QuantRecipe.from_dict(r.to_dict()) == r
     with pytest.raises(ValueError, match="unknown QuantRecipe fields"):
@@ -110,14 +114,68 @@ def test_group_boundaries_cover_chain():
 # ---------------------------------------------------------------------------
 # artifact consumption
 # ---------------------------------------------------------------------------
-def test_w6a6_artifact_has_no_packs_and_refuses_kernel(tiny_dit):
+def test_w6a6_artifact_packs_bits_tagged_int8_kernels(tiny_dit):
+    """w6a6 lowers onto the SAME byte-code int8 kernel family as w8a8 —
+    packs carry bits=6 and the kernel context auto-selects."""
     cfg, p = tiny_dit
     art = quantize(p, cfg, DIF, QuantRecipe(bits="w6a6", method="range",
                                             n_per_group=1, calib_batch=1))
-    assert not art.has_kernel_packs
-    assert art.context().kernel is False                   # fake-quant
-    with pytest.raises(ValueError, match="no int8 kernel packs"):
-        art.context(kernel=True)
+    assert art.has_kernel_packs
+    assert art.context().kernel is True
+    for qp in art.qparams.values():
+        for key in ("int8", "int8_mrq", "int8_qk", "int8_pv"):
+            if key in qp:
+                assert qp[key]["bits"] == 6, key
+
+
+def test_w4a4_artifact_packs_nibble_int4_kernels(tiny_dit):
+    """w4a4 packs the nibble-coded int4 family: payload bytes hold two
+    codes each (wp has K/2 rows), scales/corr carry the per-K-group axis,
+    and the attention packs tag bits=4."""
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, QuantRecipe(bits="w4a4", method="range",
+                                            n_per_group=1, calib_batch=1))
+    assert art.has_kernel_packs
+    assert art.context().kernel is True
+    n_int4 = 0
+    for qp in art.qparams.values():
+        assert "int8" not in qp and "int8_mrq" not in qp
+        for key in ("int4", "int4_mrq"):
+            if key in qp:
+                n_int4 += 1
+                pk = qp[key]
+                assert pk["bits"] == 4
+                assert pk["wp"].dtype == np.int8
+                # two nibbles per byte along K (padded to the group tile)
+                kp = -pk["group_k"] * (-pk["k"] // pk["group_k"])
+                assert pk["wp"].shape[0] == kp // 2
+                sc = pk["scale"] if key == "int4" else pk["scale_neg"]
+                assert sc.ndim == 3                        # (G, nk, N)
+                assert sc.shape[1] == kp // pk["group_k"]
+        for key in ("int8_qk", "int8_pv"):
+            if key in qp:
+                assert qp[key]["bits"] == 4
+    assert n_int4 > 0
+    assert "packed-int4" in art.summary()
+
+
+def test_serve_cli_names_fake_quant_fallback(tiny_dit):
+    """Regression: `--quantize w4a4` used to silently serve fake-quant.
+    Now every kernel-less quantized serve warns by name, and pack-carrying
+    artifacts (all three bit-widths) warn nothing."""
+    from repro.launch.serve import fake_quant_fallback_warning
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, QuantRecipe(bits="w4a4", method="range",
+                                            n_per_group=1, calib_batch=1))
+    assert fake_quant_fallback_warning(art) is None        # kernel path on
+    stripped = QuantArtifact(
+        qparams={n: {k: v for k, v in qp.items()
+                     if k not in ("int4", "int4_mrq", "int8_qk", "int8_pv")}
+                 for n, qp in art.qparams.items()},
+        recipe=art.recipe, meta=art.meta)
+    assert not stripped.has_kernel_packs
+    msg = fake_quant_fallback_warning(stripped)
+    assert msg is not None and "FAKE-QUANT" in msg and "w4a4" in msg
 
 
 def test_range_method_rejects_ho_only_knobs(tiny_dit):
@@ -269,12 +327,17 @@ def _serve_in_memory(p, art):
 
 
 def test_artifact_roundtrip_fresh_process_bit_identical(tmp_path):
-    """The cold-start guarantee, for BOTH calibration methods at w8a8:
-    an artifact saved here and loaded in a subprocess serves samples
-    bit-identical to the in-memory artifact (same requests/seeds)."""
+    """The cold-start guarantee, for both calibration methods at w8a8
+    AND the packed-int4 deployment point: an artifact saved here and
+    loaded in a subprocess serves samples bit-identical to the in-memory
+    artifact (same requests/seeds) — for w4a4 that round-trips the
+    nibble-packed payload bytes and (G, nk, N) group scales exactly."""
     cfg, p = _exec_params()
+    w4_recipe = QuantRecipe(bits="w4a4", method="range", n_per_group=1,
+                            calib_batch=1)
     jobs = []
-    for name, recipe in (("range", RANGE_RECIPE), ("ho", HO_RECIPE)):
+    for name, recipe in (("range", RANGE_RECIPE), ("ho", HO_RECIPE),
+                         ("w4a4", w4_recipe)):
         art = quantize(p, cfg, DIF, recipe)
         assert art.has_kernel_packs, name
         in_mem = _serve_in_memory(p, art)
