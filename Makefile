@@ -1,6 +1,6 @@
 .PHONY: verify verify-all kernel-micro bench-attn bench-flash bench-int4 \
-	serve-throughput serve-poisson chaos serve-async-smoke docs-check \
-	artifact-smoke
+	bench-vector-tgq bench-serve serve-throughput serve-poisson chaos \
+	serve-async-smoke docs-check artifact-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -29,6 +29,18 @@ bench-flash:
 # weight-traffic cut vs int8 (nibble payload + per-K-group metadata)
 bench-int4:
 	PYTHONPATH=src python -m benchmarks.kernel_micro --int4
+
+# vector-tgroup rows only: per-row-gather kernels vs their oracles +
+# the mixed-timestep dispatch traffic model; ASSERTS the one-weight-read
+# contract (weight bytes per dispatch independent of active-slot count)
+bench-vector-tgq:
+	PYTHONPATH=src python -m benchmarks.kernel_micro --vector-tgq
+
+# machine-readable modeled serving trajectory (writes BENCH_serve.json):
+# fp / w8a8 / w4a4 req/s, sync bucketed vs async continuous batching;
+# ASSERTS async modeled cost per slot-step <= sync at 2 slots/device
+bench-serve:
+	PYTHONPATH=src python -m benchmarks.serve_throughput --bench-json
 
 serve-throughput:
 	PYTHONPATH=src python -m benchmarks.serve_throughput

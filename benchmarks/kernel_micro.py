@@ -31,13 +31,23 @@ is meaningless; the TPU win is structural and computed from traffic).
                        shapes after charging the per-group metadata
                        (asserted >= 1.8x under ``--int4``).
 
+  vector-tgroup      : the ``*_vec`` kernel variants take a per-row
+  (``--vector-tgq``)   group VECTOR instead of one prefetched scalar, so
+                       a batch whose slots sit at DIFFERENT diffusion
+                       timesteps shares one launch — the weight stream
+                       is paid once per dispatch, independent of the
+                       active-slot count (asserted), where the scalar-
+                       prefetch alternative re-streams the weights per
+                       slot.
+
 The traffic functions are importable (tests assert the structural-saving
 floors, e.g. >=1.5x for the MRQ linear, >=2x probs traffic for fused
 attention, >=3x whole-attention for flash at S>=256, >=1.8x weight
 bytes for packed int4). ``--attn`` prints only the attention rows
 (``make bench-attn``); ``--flash`` only the flash rows
 (``make bench-flash``); ``--int4`` only the packed-int4 rows
-(``make bench-int4``).
+(``make bench-int4``); ``--vector-tgq`` only the vector-tgroup rows
+(``make bench-vector-tgq``).
 """
 from __future__ import annotations
 
@@ -125,6 +135,37 @@ def traffic_int4_mrq_linear(M: int, K: int, N: int,
     return {"int8_weight": int8_weight, "int4_weight": int4_weight,
             "fused_int8": M * K * 4 + int8_weight + M * N * 4,
             "fused_int4": M * K * 4 + int4_weight + M * N * 4}
+
+
+def traffic_vector_tgq_linear(M_per_slot: int, K: int, N: int,
+                              n_slots: int, bits: int = 8,
+                              group_k: int = 256) -> dict:
+    """Weight traffic for ONE mixed-timestep dispatch over ``n_slots``
+    slots of ``M_per_slot`` activation rows each.
+
+    per_slot — the scalar-prefetch alternative: slots sitting at
+      different timestep groups cannot share a launch (the TGQ group
+      index is a single prefetched scalar baked into the param index
+      maps), so each slot dispatches separately and re-streams the
+      weight matrix — ``n_slots`` weight reads per chunk step.
+    vector — the ``*_vec`` kernel: the (B,) per-row group vector rides
+      as a tiny int32 operand and every row gathers its activation
+      params in VMEM (one-hot dot against the (G, ...) stacks), so ALL
+      slots share ONE launch and the weights stream exactly once per
+      dispatch, independent of the slot count.
+
+    Activation in/out bytes are identical on both paths; per-group
+    metadata vectors are not charged, following this file's convention
+    (they are noise next to the weight stream).
+    """
+    if bits == 4:
+        w = traffic_int4_linear(M_per_slot, K, N, group_k)["int4_weight"]
+    else:
+        w = K * N * 1
+    act = n_slots * M_per_slot * (K * 4 + N * 4)
+    return {"weight_bytes_per_dispatch": w,
+            "per_slot": n_slots * w + act,
+            "vector": w + act}
 
 
 def traffic_attention_flash_packed(BH: int, S: int, D: int,
@@ -358,10 +399,104 @@ def _int4_rows(rows) -> None:
                  round(tf["unpacked"] / tf["packed"], 2)))
 
 
+def _vector_tgq_rows(rows) -> None:
+    """Vector-tgroup rows (``--vector-tgq``): correctness of the per-row
+    gather kernels at a MIXED group vector (vs the per-row oracles,
+    through the real pack builders) plus the dispatch traffic model for
+    a mixed-timestep slot batch. ASSERTS the one-weight-read contract:
+    modeled weight bytes per dispatch do not depend on the number of
+    active slots."""
+    from repro.core.quantizers import (ChannelQ, MRQSoftmaxQ, SymQ, TGQ,
+                                       UniformQ, channel_scale_from_absmax,
+                                       weight_absmax)
+    from repro.kernels import ops
+    from repro.kernels.flash_attn_mrq import flash_attn_mrq_vec
+
+    G = 4
+    M, K, N = 64, 256, 128
+    kx, kw = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(kx, (M, K)) * 2.0
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    gv = jnp.asarray(np.arange(M) % G, jnp.int32)
+    for bits, name in ((8, "int8_matmul_fq_vec"), (4, "int4_matmul_fq_vec")):
+        half = 2 ** (bits - 1)
+        qp = {"x": TGQ(UniformQ(scale=jnp.linspace(0.01, 0.05, G),
+                                zero=jnp.round(jnp.linspace(
+                                    0.7 * half, 1.17 * half, G)),
+                                bits=bits)),
+              "w": ChannelQ(channel_scale_from_absmax(weight_absmax(w),
+                                                      bits), bits)}
+        if bits == 4:
+            pack = ops.pack_int4_linear(qp, np.asarray(w))
+            out = ops.int4_linear(x, pack, tgroup=gv)
+            want = ref.int4_matmul_fq_vec_ref(
+                x, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
+                pack["corr"], gv=gv, group_k=pack["group_k"])
+        else:
+            pack = ops.pack_int8_linear(qp, np.asarray(w))
+            out = ops.int8_linear(x, pack, tgroup=gv)
+            want = ref.int8_matmul_fq_vec_ref(
+                x, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
+                pack["corr"], gv=gv)
+        err = float(jnp.max(jnp.abs(out - want)))
+        t = traffic_vector_tgq_linear(M, K, N, G, bits=bits)
+        rows.append((name, f"{M}x{K}x{N}[mixed,G={G}]", f"{err:.1e}",
+                     t["per_slot"], t["vector"],
+                     round(t["per_slot"] / t["vector"], 2)))
+
+    # flash with a per-batch-row group vector: a constant vector must be
+    # BIT-identical to the scalar-prefetch kernel (asserted)
+    B, S, D = 3, 16, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (B, S, D)) * 2
+    k = jax.random.normal(k2, (B, S, D)) * 2
+    v = jax.random.normal(k3, (B, S, D))
+    qk_pack = ops.pack_int8_qk(
+        {"x": TGQ(SymQ(scale=jnp.linspace(0.01, 0.05, G))),
+         "b": TGQ(SymQ(scale=jnp.linspace(0.02, 0.06, G)))})
+    pv_pack = ops.pack_int8_pv(
+        {"x": TGQ(MRQSoftmaxQ(s1=jnp.geomspace(3e-4, 6e-3, G))),
+         "b": TGQ(SymQ(scale=jnp.linspace(0.01, 0.04, G)))})
+    scale = D ** -0.5
+    args = (q, k, v, qk_pack["s_q"], qk_pack["s_k"],
+            qk_pack["scale"] * scale, pv_pack["s1"], pv_pack["s_v"],
+            pv_pack["scale1"], pv_pack["scale2"])
+    got = flash_attn_mrq_vec(*args, g_qk=jnp.full((B,), 2, jnp.int32),
+                             g_pv=jnp.full((B,), 2, jnp.int32),
+                             interpret=True)
+    want = flash_attn_mrq(*args, g_qk=2, g_pv=2, interpret=True)
+    ferr = float(jnp.max(jnp.abs(got - want)))
+    assert ferr == 0.0, (
+        f"constant group vector diverged from scalar prefetch: {ferr}")
+    rows.append(("flash_attn_mrq_vec", f"{B}x{S}x{D}[const==scalar]",
+                 f"{ferr:.1e}", "-", "-", "-"))
+
+    # one-weight-read contract at the DiT-XL/2 fc1 shape: one chunk-step
+    # dispatch over n active mixed-timestep slots (CFG-paired, 2*256
+    # token rows per slot) streams the weights ONCE
+    T, d, f = 256, 1152, 4608
+    base = None
+    for n_slots in (1, 2, 4, 8):
+        t = traffic_vector_tgq_linear(2 * T, d, f, n_slots)
+        if base is None:
+            base = t["weight_bytes_per_dispatch"]
+        assert t["weight_bytes_per_dispatch"] == base, (
+            "vector-tgq dispatch weight bytes must not scale with the "
+            f"active-slot count ({t['weight_bytes_per_dispatch']} != "
+            f"{base} at {n_slots} slots)")
+        rows.append(("vector_tgq_dispatch", f"xl2_fc1[{n_slots}_slots]",
+                     "-", t["per_slot"], t["vector"],
+                     round(t["per_slot"] / t["vector"], 2)))
+
+
 def main(attn_only: bool = False, flash_only: bool = False,
-         int4_only: bool = False) -> None:
+         int4_only: bool = False, vector_tgq_only: bool = False) -> None:
     rows = [("kernel", "case", "max_err", "hbm_bytes_unfused",
              "hbm_bytes_fused", "traffic_saving")]
+    if vector_tgq_only:
+        _vector_tgq_rows(rows)
+        C.emit("kernel_micro_vector_tgq", rows)
+        return
     if int4_only:
         _int4_rows(rows)
         C.emit("kernel_micro_int4", rows)
@@ -471,4 +606,5 @@ def main(attn_only: bool = False, flash_only: bool = False,
 if __name__ == "__main__":
     main(attn_only="--attn" in sys.argv[1:],
          flash_only="--flash" in sys.argv[1:],
-         int4_only="--int4" in sys.argv[1:])
+         int4_only="--int4" in sys.argv[1:],
+         vector_tgq_only="--vector-tgq" in sys.argv[1:])

@@ -54,8 +54,19 @@ Two sections, same philosophy as ``kernel_micro``:
    bit-identical to the synchronous path while compiling its in-flight
    executable exactly once.
 
+4. **BENCH_serve.json** (``--bench-json``, ``make bench-serve``) — the
+   machine-readable perf trajectory across PRs: modeled DiT-XL/2
+   requests/sec for fp / w8a8 / w4a4 under BOTH serving policies (sync
+   step-bucketed vs async continuous batching) at 2 slots per device.
+   Since the vector-TGQ batched forward, one async dispatch advances ALL
+   of a device's slots — mixed timesteps and all — through ONE weight
+   read, so the async modeled cost per slot-step is no worse than the
+   sync bucketed batch's (asserted here, at >= 2 slots/device), where
+   the retired per-slot dispatch paid the whole weight stream per slot.
+
 Run: PYTHONPATH=src:. python -m benchmarks.serve_throughput
      PYTHONPATH=src:. python -m benchmarks.serve_throughput --arrivals poisson
+     PYTHONPATH=src:. python -m benchmarks.serve_throughput --bench-json
 """
 from __future__ import annotations
 
@@ -187,6 +198,26 @@ def modeled_requests_per_sec(cfg: DiTCfg, batch: int, n_dev: int, steps: int,
             "ms_per_step": step["time_s"] * 1e3}
 
 
+def modeled_async_slot_step(cfg: DiTCfg, b_local: int, path: str,
+                            batched: bool = True) -> float:
+    """Modeled cost (s) of advancing ONE slot by ONE denoising step in
+    the async continuous-batching engine, ``b_local`` slots per device.
+
+    ``batched=True`` — the vector-TGQ batched forward (current engine):
+    one dispatch advances all ``b_local`` slots regardless of their
+    timestep groups, so the dispatch cost (one weight stream) amortizes
+    over the slots — identical per-slot-step cost to the sync bucketed
+    path's ``b_local``-batch, which is exactly the contract
+    ``BENCH_serve.json`` asserts.
+
+    ``batched=False`` — the retired per-slot dispatch: slots at
+    different timesteps could not share a launch, so each slot-step paid
+    a full single-slot dispatch (the whole weight stream)."""
+    if batched:
+        return modeled_dit_step(cfg, b_local, path)["time_s"] / b_local
+    return modeled_dit_step(cfg, 1, path)["time_s"]
+
+
 # ---------------------------------------------------------------------------
 # Poisson-arrival policy simulation (pure python; no jax)
 # ---------------------------------------------------------------------------
@@ -273,6 +304,75 @@ def simulate_continuous(trace: List[Tuple[float, int]], microbatch: int,
     return {"goodput_rps": len(done) / make,
             "latency_mean_s": float(np.mean([c - a for a, c in done])),
             "makespan_s": make}
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json: machine-readable modeled trajectory (pure model)
+# ---------------------------------------------------------------------------
+def bench_serve_data(steps: int = 100, b_local: int = 2) -> dict:
+    """Modeled DiT-XL/2 serving numbers for ``BENCH_serve.json``.
+
+    Per recipe (fp / w8a8 / w4a4): closed-loop requests/sec at
+    ``b_local`` slots per device, plus open-loop Poisson goodput under
+    each policy — sync step-bucketed (full same-bucket batches, whole-
+    chain commitment) vs async continuous batching (chunk-boundary
+    admission), both charged the SAME modeled wall cost per machine
+    step. ASSERTS, at >= 2 slots/device, that the async engine's modeled
+    cost per slot-step is (a) no worse than the sync bucketed batch and
+    (b) strictly better than the retired per-slot dispatch."""
+    buckets = (25, 50, 100)
+    micro, chunk = b_local * N_DEV, 5
+    trace = poisson_trace(400, 16.0, buckets, seed=7)
+    data = {"meta": {"model": "DiT-XL/2", "n_dev": N_DEV,
+                     "slots_per_device": b_local, "steps": steps,
+                     "buckets": list(buckets), "chunk": chunk,
+                     "load_rps": 16.0},
+            "paths": {}}
+    for name, path in (("fp", "fp"), ("w8a8", "int8"), ("w4a4", "int4")):
+        sync_c = modeled_dit_step(XL2, b_local, path)["time_s"] / b_local
+        async_c = modeled_async_slot_step(XL2, b_local, path)
+        unbatched_c = modeled_async_slot_step(XL2, b_local, path,
+                                              batched=False)
+        assert async_c <= sync_c, (
+            f"{name}: async CB modeled cost/slot-step {async_c:.3e}s > "
+            f"sync bucketed {sync_c:.3e}s at {b_local} slots/device — "
+            "the vector-TGQ batched dispatch must amortize the weight "
+            "stream exactly like the sync batch")
+        assert async_c < unbatched_c, (
+            f"{name}: batched async dispatch must beat the per-slot "
+            f"dispatch at {b_local} slots/device")
+        wall = modeled_dit_step(XL2, b_local, path)["time_s"]
+        base = simulate_bucketed(trace, micro, wall)
+        cb = simulate_continuous(trace, micro, chunk, wall)
+        data["paths"][name] = {
+            "req_per_s_closed_loop": round(modeled_requests_per_sec(
+                XL2, b_local * N_DEV, N_DEV, steps, path)["req_per_s"], 3),
+            "sync_bucketed_goodput_rps": round(base["goodput_rps"], 4),
+            "async_cb_goodput_rps": round(cb["goodput_rps"], 4),
+            "sync_latency_mean_s": round(base["latency_mean_s"], 3),
+            "async_latency_mean_s": round(cb["latency_mean_s"], 3),
+            "s_per_slot_step_sync": sync_c,
+            "s_per_slot_step_async": async_c,
+            "s_per_slot_step_async_per_slot_dispatch": unbatched_c,
+        }
+    return data
+
+
+def main_bench_json() -> None:
+    import json
+
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    data = bench_serve_data()
+    with open(out, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    for name, d in data["paths"].items():
+        print(f"{name}: closed-loop {d['req_per_s_closed_loop']} req/s; "
+              f"poisson goodput sync {d['sync_bucketed_goodput_rps']} vs "
+              f"async {d['async_cb_goodput_rps']} rps", flush=True)
+    print(f"wrote {os.path.normpath(out)} (async cost/slot-step <= sync "
+          f"bucketed asserted at {data['meta']['slots_per_device']} "
+          "slots/device)")
 
 
 # ---------------------------------------------------------------------------
@@ -471,5 +571,14 @@ if __name__ == "__main__":
                     help="'batch': closed-loop fp-vs-int8 throughput; "
                          "'poisson': open-loop arrival simulation, "
                          "continuous batching vs the bucketed baseline")
+    ap.add_argument("--bench-json", action="store_true",
+                    help="write BENCH_serve.json (modeled fp/w8a8/w4a4 "
+                         "req/s, sync vs async) and exit — the "
+                         "machine-readable perf trajectory across PRs")
     cli = ap.parse_args()
-    main_poisson() if cli.arrivals == "poisson" else main()
+    if cli.bench_json:
+        main_bench_json()
+    elif cli.arrivals == "poisson":
+        main_poisson()
+    else:
+        main()

@@ -174,13 +174,25 @@ class TGQ:
 
 
 def apply_quantizer(q, x, tgroup=None):
-    """Dispatch helper: applies q to x, resolving TGQ group selection."""
+    """Dispatch helper: applies q to x, resolving TGQ group selection.
+
+    ``tgroup`` may be a per-slot (B,) VECTOR (vector-tgroup batched
+    path): each stacked (G,) param leaf gathers per slot to (B,) and is
+    reshaped to broadcast along x's leading batch axis — slot b's rows
+    fake-quantize with slot b's group params, matching the per-row
+    gather inside the ``*_vec`` serving kernels."""
     if q is None:
         return x
     if isinstance(q, TGQ):
         if tgroup is None:
             # no group info (e.g. non-diffusion eval): use group 0
             tgroup = 0
+        if getattr(tgroup, "ndim", 0) == 1:
+            B = tgroup.shape[0]
+            sel = q.select(tgroup)          # leaves (G,) -> (B,)
+            sel = jax.tree.map(
+                lambda a: jnp.reshape(a, (B,) + (1,) * (x.ndim - 1)), sel)
+            return sel(x)
         return q(x, tgroup)
     return q(x)
 

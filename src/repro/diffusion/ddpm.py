@@ -296,22 +296,26 @@ def ddpm_chunk_slots(eps_fn: Callable, cfg: DiffusionCfg, slot_sched,
     The continuous-batching core: ``x[b]`` is slot ``b``'s latent,
     ``pos[b]`` its scan position in bucket ``bk[b]``'s respaced chain
     (``slot_sched`` from :func:`make_slot_schedule`). A slot with
-    ``pos >= n_of[bk]`` is finished/free and is skipped entirely
-    (``lax.cond`` — free slots cost no model forwards, unlike sync-path
-    padding).
+    ``pos >= n_of[bk]`` is finished/free; its latent and position pass
+    through unchanged (``jnp.where`` gating on the batched update).
 
     Bit-identity contract: a slot's trajectory is bit-identical to
     ``ddpm_sample_paired`` run on its request alone — same
     ``fold_in(PRNGKey(seed), i)`` noise (``i`` = scan position), same
-    CFG-paired 2-row forward, same update arithmetic. Slots run under
-    ``lax.map`` (a scan, not vmap), so each slot's TGQ group stays a
-    SCALAR for the fused kernels' scalar-prefetch contract even when the
-    pool mixes timesteps — which is exactly why ONE executable serves all
-    timestep mixtures. The trade: the kernel-path model weights are
-    re-read per slot, so per-dispatch cost scales with ACTIVE slots; at
-    the latency-optimized serving point (one slot per device) this equals
-    the sync path's cost (``benchmarks/serve_throughput.py`` charges it
-    honestly).
+    CFG-paired forward ordering (conditional half stacked on the
+    unconditional half), same update arithmetic.
+
+    One-weight-read contract (vector-tgroup batched path): each chunk
+    step runs the model ONCE on the 2B CFG-stacked slot batch. Per-slot
+    timesteps ride as a vector ``t`` and the per-slot TGQ groups as a
+    (2B,) vector through ``ctx.with_tgroup`` — the fused serving kernels
+    gather each row's group params in VMEM (``*_vec`` family), so the
+    model weights stream ONCE PER DISPATCH regardless of how many slots
+    are active or how their timesteps mix. Per-dispatch cost is flat in
+    the active-slot count (``benchmarks/serve_throughput.py`` and
+    ``benchmarks/kernel_micro.py --vector-tgq`` charge and assert this),
+    and the whole chunk loop stays one compiled executable across all
+    timestep mixtures.
 
     Returns ``(x, pos, bad)``; ``bad[b]`` flags any non-finite value in
     slot ``b``'s latent — the post-chunk NaN/Inf quarantine guard, checked
@@ -319,48 +323,52 @@ def ddpm_chunk_slots(eps_fn: Callable, cfg: DiffusionCfg, slot_sched,
     """
     S = slot_sched
     n_of, use_ts = S["n_of"], S["use_ts"]
+    B = x.shape[0]
+    bshape = (B,) + (1,) * (x.ndim - 1)
     sshape = tuple(x.shape[1:])
-    null = jnp.asarray(null_label, jnp.int32)
 
-    def one_slot(args):
-        xb, p, b, yb, sd, gs = args
-        n = n_of[b]
+    n = n_of[bk]                                      # (B,) chain lengths
+    yy = jnp.concatenate([jnp.asarray(y, jnp.int32),
+                          jnp.full((B,), null_label, jnp.int32)])
+    gsc = jnp.asarray(guidance, jnp.float32).reshape(bshape)
 
-        def body(carry, _):
-            xc, pc = carry
-            run = pc < n
-            i = jnp.minimum(pc, n - 1)                # safe gather when done
-            idx = n - 1 - i                           # respaced index (asc)
-            t_orig = use_ts[b, i]
-            g = tgroup_of(t_orig, cfg.T, cfg.tgq_groups)
-            tb = jnp.full((2,), t_orig, jnp.int32)
-            yy = jnp.stack([yb.astype(jnp.int32), null])
-            eps2 = eps_fn(jnp.concatenate([xc[None], xc[None]]), tb, yy,
-                          ctx.with_tgroup(g))
-            eps = eps2[1] + gs * (eps2[0] - eps2[1])  # eps_u + s(eps_c-eps_u)
+    def draw(i):
+        """Per-slot noise at per-slot scan positions ``i`` — the exact
+        ``fold_in(PRNGKey(seed), i)`` keys of ``ddpm_sample_paired``."""
+        return jax.vmap(lambda sd, ii: jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(sd), ii), sshape,
+            jnp.float32))(seeds, i)
 
-            abar = S["abar"][b, idx]
-            abar_prev = S["abar_prev"][b, idx]
-            beta = S["betas"][b, idx]
-            alpha = S["alphas"][b, idx]
-            x0 = (xc - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
-            if clip_x0 is not None:
-                x0 = jnp.clip(x0, -clip_x0, clip_x0)
-            mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
-                    + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * xc)
-            noise = jax.random.normal(
-                jax.random.fold_in(jax.random.PRNGKey(sd), i), sshape,
-                jnp.float32)
-            nonzero = (idx > 0).astype(jnp.float32)
-            xn = mean + nonzero * jnp.sqrt(S["post_var"][b, idx]) * noise
-            return (jnp.where(run, xn, xc), jnp.where(run, pc + 1, pc)), None
+    def body(carry, _):
+        xc, pc = carry
+        run = pc < n
+        i = jnp.minimum(pc, n - 1)                    # safe gather when done
+        idx = n - 1 - i                               # respaced index (asc)
+        t_orig = use_ts[bk, i]                        # (B,) original-chain t
+        g = tgroup_of(t_orig, cfg.T, cfg.tgq_groups)  # (B,) per-slot groups
+        eps2 = eps_fn(jnp.concatenate([xc, xc]),
+                      jnp.concatenate([t_orig, t_orig]), yy,
+                      ctx.with_tgroup(jnp.concatenate([g, g])))
+        eps_c, eps_u = jnp.split(eps2, 2)
+        eps = eps_u + gsc * (eps_c - eps_u)
 
-        def advance(carry):
-            return jax.lax.scan(body, carry, None, length=chunk)[0]
+        abar = S["abar"][bk, idx].reshape(bshape)
+        abar_prev = S["abar_prev"][bk, idx].reshape(bshape)
+        beta = S["betas"][bk, idx].reshape(bshape)
+        alpha = S["alphas"][bk, idx].reshape(bshape)
+        x0 = (xc - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        if clip_x0 is not None:
+            x0 = jnp.clip(x0, -clip_x0, clip_x0)
+        mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * xc)
+        noise = draw(i)
+        nonzero = (idx > 0).astype(jnp.float32).reshape(bshape)
+        xn = mean + nonzero * jnp.sqrt(
+            S["post_var"][bk, idx].reshape(bshape)) * noise
+        return (jnp.where(run.reshape(bshape), xn, xc),
+                jnp.where(run, pc + 1, pc)), None
 
-        return jax.lax.cond(p < n, advance, lambda c: c, (xb, p))
-
-    x, pos = jax.lax.map(one_slot, (x, pos, bk, y, seeds, guidance))
+    (x, pos), _ = jax.lax.scan(body, (x, pos), None, length=chunk)
     bad = ~jnp.all(jnp.isfinite(x.reshape(x.shape[0], -1)), axis=1)
     return x, pos, bad
 

@@ -298,3 +298,112 @@ def flash_attn_mrq(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
         interpret=interpret,
     )(g, *operands)
     return out[:, :M, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "packed_kv", "bm", "bn",
+                                             "out_dtype", "interpret"))
+def flash_attn_mrq_vec(q, k, v, s_q, s_k, qk_scale, s1, s_v, scale1, scale2,
+                       g_qk=None, g_pv=None, mask=None, *, bits=8,
+                       packed_kv=False, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                       out_dtype=jnp.float32, interpret=False):
+    """Vector-tgroup ``flash_attn_mrq``: per-BATCH-ROW group vectors.
+
+    g_qk / g_pv: (B,) int32 — batch row ``b`` runs with its own groups'
+    params. The kernel BODY is ``_flash_kernel`` unchanged; only the
+    prefetch layout differs — the two vectors ride concatenated as one
+    (2B,) prefetched array and the param index maps pick ``(g[b], 0)`` /
+    ``(g[B + b], 0)``, so each grid row DMAs exactly its group's (1, 1)
+    param rows (the per-group gather stays in the index maps; weights —
+    here the kv stream — are untouched by the group mix). Constant
+    vectors are bit-identical to scalar ``g_qk``/``g_pv``.
+
+    GQA: q rows sharing a kv row (``b // rep``) must share a group —
+    true by construction when rows are slots (``ops.flash_attention``
+    repeats each slot's group over its heads/query-groups); ``packed_kv``
+    uses kv row ``j``'s group ``g[j * rep]`` for the one-time pack pass.
+    """
+    B, M, D = q.shape
+    B2, N, D2 = k.shape
+    assert D == D2 and k.shape == v.shape and B % B2 == 0, \
+        (q.shape, k.shape, v.shape)
+    rep = B // B2
+    Gq, Gp = s_q.shape[0], s1.shape[0]
+    assert s_k.shape == (Gq, 1) and qk_scale.shape == (Gq, 1), \
+        (s_q.shape, s_k.shape, qk_scale.shape)
+    assert s_v.shape == (Gp, 1) and scale1.shape == (Gp, 1) \
+        and scale2.shape == (Gp, 1), (s1.shape, s_v.shape)
+    half = 2 ** (bits - 1)
+    bm_, bn_ = min(bm, _ceil(M)), min(bn, _ceil(N))
+    bd_ = _ceil(D)
+    Mp, Np = _pad_to(M, bm_), _pad_to(N, bn_)
+
+    gqk = (jnp.zeros((B,), jnp.int32) if g_qk is None
+           else jnp.asarray(g_qk, jnp.int32).reshape(B))
+    gpv = (jnp.zeros((B,), jnp.int32) if g_pv is None
+           else jnp.asarray(g_pv, jnp.int32).reshape(B))
+    g = jnp.concatenate([gqk, gpv])                          # (2B,)
+    q = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, Mp - M), (0, bd_ - D)))
+    k = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, Np - N), (0, bd_ - D)))
+    v = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, Np - N), (0, bd_ - D)))
+
+    kv_bd = bd_
+    if packed_kv:
+        assert bits == 4, "packed_kv streams nibbles: 4-bit codes only"
+        # one-time quantize+pack pass with PER-KV-ROW group steps: kv row
+        # j serves q rows [j*rep, (j+1)*rep) which share a group (slots),
+        # so row j packs with g[j*rep]'s step.
+        gk_kv = gqk.reshape(B2, rep)[:, 0]
+        gp_kv = gpv.reshape(B2, rep)[:, 0]
+        sk_g = jnp.take(s_k.astype(jnp.float32), gk_kv, axis=0)[:, :, None]
+        sv_g = jnp.take(s_v.astype(jnp.float32), gp_kv, axis=0)[:, :, None]
+        k = pack_int4(_sym_codes(k, sk_g, half), axis=-1)
+        v = pack_int4(_sym_codes(v, sv_g, half), axis=-1)
+        kv_bd = bd_ // 2
+
+    has_mask = mask is not None
+    operands = [q, k, v]
+    in_specs = [
+        pl.BlockSpec((1, bm_, bd_), lambda b, m, n, g: (b, m, 0)),
+        pl.BlockSpec((1, bn_, kv_bd),
+                     lambda b, m, n, g: (b // rep, n, 0)),   # shared kv
+        pl.BlockSpec((1, bn_, kv_bd),
+                     lambda b, m, n, g: (b // rep, n, 0)),   # shared kv
+    ]
+    if has_mask:
+        assert mask.shape == (B, M, N), (mask.shape, (B, M, N))
+        mask8 = jnp.pad(mask.astype(jnp.int8),
+                        ((0, 0), (0, Mp - M), (0, Np - N)))
+        operands.append(mask8)
+        in_specs.append(
+            pl.BlockSpec((1, bm_, bn_), lambda b, m, n, g: (b, m, n)))
+    qk_row = lambda b, m, n, g: (g[b], 0)                # row b's qk group
+    pv_row = lambda b, m, n, g: (g[B + b], 0)            # row b's pv group
+    operands += [s_q.astype(jnp.float32), s_k.astype(jnp.float32),
+                 qk_scale.astype(jnp.float32), s1.astype(jnp.float32),
+                 s_v.astype(jnp.float32), scale1.astype(jnp.float32),
+                 scale2.astype(jnp.float32)]
+    in_specs += [pl.BlockSpec((1, 1), qk_row)] * 3 \
+        + [pl.BlockSpec((1, 1), pv_row)] * 4
+
+    from repro.nn.ctx import NEG_INF
+
+    nkv = Np // bn_
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Mp // bm_, nkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm_, bd_), lambda b, m, n, g: (b, m, 0)),
+        scratch_shapes=[pltpu.VMEM((bm_, 128), jnp.float32),   # running max
+                        pltpu.VMEM((bm_, 128), jnp.float32),   # running denom
+                        pltpu.VMEM((bm_, bd_), jnp.float32),   # region-1 acc
+                        pltpu.VMEM((bm_, bd_), jnp.float32)],  # region-2 acc
+    )
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nkv=nkv, half=half, n_real=N,
+                          bn=bn_, neg_inf=NEG_INF, has_mask=has_mask,
+                          packed_kv=packed_kv, bd=bd_),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Mp, bd_), out_dtype),
+        interpret=interpret,
+    )(g, *operands)
+    return out[:, :M, :D]

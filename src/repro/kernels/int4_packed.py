@@ -38,6 +38,13 @@ activation-side params are (G, ·)-stacked, ``g`` is a traced scalar
 gathered by the BlockSpec index maps (scale/corr are (G, nk, N) with
 ``(g[0], k, n)`` maps), so the DDPM scan still compiles ONCE.
 
+``int4_matmul_fq_vec`` / ``int4_matmul_mrq_fq_vec`` are the
+vector-tgroup variants (see ``int8_fused``): a per-ROW (M,) group vector
+replaces the scalar prefetch, the (G, 1, bn) param slices of EVERY group
+stream per K step, and each row gathers its own group's params in VMEM
+via the exact one-hot product — one nibble-packed weight stream covers a
+batch mixing timestep groups.
+
 Padding: K is padded to a multiple of ``group_k`` at pack time; padded
 weight rows pack to code 0 and their column sums are not counted in
 ``corr``, so padded x columns (which quantize to the zero point) meet
@@ -59,6 +66,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.int8_fused import _gather_rows, _onehot_rows
 from repro.kernels.int8_matmul import (
     DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, _ceil, _pad_to,
 )
@@ -313,5 +321,207 @@ def int4_matmul_mrq_fq(x, wp, s_neg, s_pos, scale_neg, scale_pos, bias=None,
         interpret=interpret,
     )(jnp.asarray(g, jnp.int32).reshape(1), x, wp,
       s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
+      scale_neg, scale_pos, bias)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# vector-tgroup variants: per-ROW group indices, one packed weight stream
+# ---------------------------------------------------------------------------
+def _fq4_vec_kernel(gv_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
+                    bias_ref, o_ref, acc_ref, *, nk: int, bk: int, half: int):
+    """Vector-tgroup body for ``int4_matmul_fq``: the (G, 1, bn) stacks of
+    THIS K step's scales/corrections stream for every group; each row
+    gathers its own group's values with the exact one-hot product before
+    the per-step dequantized accumulation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G = sx_ref.shape[0]
+    oh = _onehot_rows(gv_ref, G)
+    ohf = oh.astype(jnp.float32)
+    sx_row = _gather_rows(ohf, sx_ref, jnp.float32)      # (bm, 1)
+    zx_row = _gather_rows(ohf, zx_ref, jnp.float32)      # (bm, 1)
+    xq = jnp.clip(
+        jnp.round(x_ref[...].astype(jnp.float32) / sx_row) + zx_row - half,
+        -half, half - 1).astype(jnp.int8)
+    w = _unpack_w(w_ref, bk)
+    partial = jax.lax.dot_general(
+        xq.astype(jnp.int32), w,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    scale_k = scale_ref[...][:, 0, :]                    # (G, bn)
+    corr_k = corr_ref[...][:, 0, :]                      # (G, bn)
+    scale_row = jax.lax.dot_general(
+        ohf, scale_k.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    corr_row = jax.lax.dot_general(
+        oh.astype(jnp.int32), corr_k.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc_ref[...] += (partial - corr_row).astype(jnp.float32) * scale_row
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
+                                             "out_dtype", "interpret"))
+def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
+                       group_k=DEFAULT_BK, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                       out_dtype=jnp.float32, interpret=False):
+    """``int4_matmul_fq`` with a per-ROW group vector gv (M,) int32.
+
+    The nibble-packed weight streams ONCE for the whole mixed-group
+    batch; per K step the (G, 1, bn) scale/corr slices of every group
+    ride along. A constant gv is bit-identical to the scalar path (same
+    elementwise ops, same f32 accumulation order).
+    """
+    M, K = x.shape
+    Kp = 2 * wp.shape[0]
+    N = wp.shape[1]
+    assert Kp % group_k == 0 and Kp >= K, (Kp, group_k, K)
+    nk = Kp // group_k
+    G = scale.shape[0]
+    assert sx.shape == (G, 1) and zx.shape == (G, 1), (sx.shape, zx.shape)
+    assert scale.shape == (G, nk, N) and corr.shape == (G, nk, N), \
+        (scale.shape, corr.shape, (G, nk, N))
+    bm_, bn_ = min(bm, _ceil(M)), min(bn, _ceil(N))
+    Mp, Np = _pad_to(M, bm_), _pad_to(N, bn_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if gv is None:
+        gv = jnp.zeros((M,), jnp.int32)
+    gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
+    scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, 0), (0, Np - N)))
+    corr = jnp.pad(corr.astype(jnp.int32), ((0, 0), (0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    grid = (Mp // bm_, Np // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_fq4_vec_kernel, nk=nk, bk=group_k, half=8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),          # gv rows
+            pl.BlockSpec((bm_, group_k), lambda m, n, k: (m, k)),    # x
+            pl.BlockSpec((group_k // 2, bn_),
+                         lambda m, n, k: (k, n)),          # packed W
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),            # sx stack
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),            # zx stack
+            pl.BlockSpec((G, 1, bn_),
+                         lambda m, n, k: (0, k, n)),       # scale[:, k]
+            pl.BlockSpec((G, 1, bn_),
+                         lambda m, n, k: (0, k, n)),       # corr[:, k]
+            pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),          # bias
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(gv, x, wp, sx.astype(jnp.float32), zx.astype(jnp.float32),
+      scale, corr, bias)
+    return out[:M, :N]
+
+
+def _mrq4_vec_kernel(gv_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
+                     scale_p_ref, bias_ref, o_ref, acc_ref, *, nk: int,
+                     bk: int, half: int):
+    """Vector-tgroup body for ``int4_matmul_mrq_fq``: per-row twin-region
+    steps, ONE unpacked weight tile, per-row per-K-group region scales."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G = sn_ref.shape[0]
+    ohf = _onehot_rows(gv_ref, G).astype(jnp.float32)
+    sn_row = _gather_rows(ohf, sn_ref, jnp.float32)      # (bm, 1)
+    sp_row = _gather_rows(ohf, sp_ref, jnp.float32)      # (bm, 1)
+    xf = x_ref[...].astype(jnp.float32)
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_row), -half, 0),
+                   0).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp_row), 0, half - 1)
+                   ).astype(jnp.int8)
+    w = _unpack_w(w_ref, bk)                  # ONE weight-tile read, two dots
+    dims = (((1,), (0,)), ((), ()))
+    pn = jax.lax.dot_general(qn.astype(jnp.int32), w, dims,
+                             preferred_element_type=jnp.int32)
+    pp = jax.lax.dot_general(qp.astype(jnp.int32), w, dims,
+                             preferred_element_type=jnp.int32)
+    scale_n_row = jax.lax.dot_general(
+        ohf, scale_n_ref[...][:, 0, :].astype(jnp.float32), dims,
+        preferred_element_type=jnp.float32)
+    scale_p_row = jax.lax.dot_general(
+        ohf, scale_p_ref[...][:, 0, :].astype(jnp.float32), dims,
+        preferred_element_type=jnp.float32)
+    acc_ref[...] += (pn.astype(jnp.float32) * scale_n_row
+                     + pp.astype(jnp.float32) * scale_p_row)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
+                                             "out_dtype", "interpret"))
+def int4_matmul_mrq_fq_vec(x, wp, s_neg, s_pos, scale_neg, scale_pos,
+                           bias=None, gv=None, *, group_k=DEFAULT_BK,
+                           bm=DEFAULT_BM, bn=DEFAULT_BN,
+                           out_dtype=jnp.float32, interpret=False):
+    """``int4_matmul_mrq_fq`` with a per-ROW group vector gv (M,) int32
+    (one-weight-read contract as ``int4_matmul_fq_vec``)."""
+    M, K = x.shape
+    Kp = 2 * wp.shape[0]
+    N = wp.shape[1]
+    assert Kp % group_k == 0 and Kp >= K, (Kp, group_k, K)
+    nk = Kp // group_k
+    G = scale_neg.shape[0]
+    assert s_neg.shape == (G, 1) and s_pos.shape == (G, 1)
+    assert scale_neg.shape == (G, nk, N) and scale_pos.shape == (G, nk, N)
+    bm_, bn_ = min(bm, _ceil(M)), min(bn, _ceil(N))
+    Mp, Np = _pad_to(M, bm_), _pad_to(N, bn_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if gv is None:
+        gv = jnp.zeros((M,), jnp.int32)
+    gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
+    scale_neg = jnp.pad(scale_neg.astype(jnp.float32),
+                        ((0, 0), (0, 0), (0, Np - N)))
+    scale_pos = jnp.pad(scale_pos.astype(jnp.float32),
+                        ((0, 0), (0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    grid = (Mp // bm_, Np // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_mrq4_vec_kernel, nk=nk, bk=group_k, half=8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),          # gv rows
+            pl.BlockSpec((bm_, group_k), lambda m, n, k: (m, k)),    # x
+            pl.BlockSpec((group_k // 2, bn_),
+                         lambda m, n, k: (k, n)),          # packed W
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),         # s_neg stack
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),         # s_pos stack
+            pl.BlockSpec((G, 1, bn_),
+                         lambda m, n, k: (0, k, n)),       # scale_neg[:, k]
+            pl.BlockSpec((G, 1, bn_),
+                         lambda m, n, k: (0, k, n)),       # scale_pos[:, k]
+            pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),          # bias
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(gv, x, wp, s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
       scale_neg, scale_pos, bias)
     return out[:M, :N]

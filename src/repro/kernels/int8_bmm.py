@@ -246,3 +246,111 @@ def int8_bmm_pv(codes, v, s_v, scale1, scale2, g=None, *, bits=8,
       s_v.astype(jnp.float32), scale1.astype(jnp.float32),
       scale2.astype(jnp.float32))
     return out[:, :M, :D]
+
+
+# ---------------------------------------------------------------------------
+# vector-tgroup variants: per-BATCH-ROW groups via a (B,) prefetch vector
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_bmm_qk_vec(q, k, s_q, s_k, scale, gv=None, *, bits=8, bm=DEFAULT_BM,
+                    bn=DEFAULT_BN, bk=DEFAULT_BK, out_dtype=jnp.float32,
+                    interpret=False):
+    """``int8_bmm_qk`` with a per-batch-row group vector gv (B,) int32.
+
+    The kernel BODY (``_qk_kernel``) is unchanged; the batch axis leads
+    the grid, so the whole (B,) vector rides as the prefetched array and
+    each param index map picks ``(g[b], 0)`` — batch row b's params
+    stream per grid row, k/v sharing (GQA ``b // rep``) untouched. A
+    constant gv is bit-identical to the scalar path.
+    """
+    B, M, D = q.shape
+    B2, N, D2 = k.shape
+    assert D == D2 and B % B2 == 0, (q.shape, k.shape)
+    rep = B // B2
+    G = s_q.shape[0]
+    assert s_k.shape == (G, 1) and scale.shape == (G, 1), \
+        (s_q.shape, s_k.shape, scale.shape)
+    half = 2 ** (bits - 1)
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(D))
+    Mp, Np, Dp = _pad_to(M, bm_), _pad_to(N, bn_), _pad_to(D, bk_)
+
+    gv = (jnp.zeros((B,), jnp.int32) if gv is None
+          else jnp.asarray(gv, jnp.int32).reshape(B))
+    q = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, Mp - M), (0, Dp - D)))
+    k = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, Np - N), (0, Dp - D)))
+
+    nk = Dp // bk_
+    grid = (B, Mp // bm_, Np // bn_, nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda b, m, n, d, g: (b, m, d)),
+            pl.BlockSpec((1, bn_, bk_),
+                         lambda b, m, n, d, g: (b // rep, n, d)),  # shared kv
+            pl.BlockSpec((1, 1), lambda b, m, n, d, g: (g[b], 0)),  # s_q[g_b]
+            pl.BlockSpec((1, 1), lambda b, m, n, d, g: (g[b], 0)),  # s_k[g_b]
+            pl.BlockSpec((1, 1), lambda b, m, n, d, g: (g[b], 0)),  # scale
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda b, m, n, d, g: (b, m, n)),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_qk_kernel, nk=nk, half=half),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Mp, Np), out_dtype),
+        interpret=interpret,
+    )(gv, q, k, s_q.astype(jnp.float32), s_k.astype(jnp.float32),
+      scale.astype(jnp.float32))
+    return out[:, :M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_bmm_pv_vec(codes, v, s_v, scale1, scale2, gv=None, *, bits=8,
+                    bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                    out_dtype=jnp.float32, interpret=False):
+    """``int8_bmm_pv`` with a per-batch-row group vector gv (B,) int32
+    (same contract as ``int8_bmm_qk_vec``)."""
+    B, M, N = codes.shape
+    B2, N2, D = v.shape
+    assert N == N2 and B % B2 == 0, (codes.shape, v.shape)
+    rep = B // B2
+    G = s_v.shape[0]
+    assert scale1.shape == (G, 1) and scale2.shape == (G, 1), \
+        (s_v.shape, scale1.shape, scale2.shape)
+    half = 2 ** (bits - 1)
+    bm_, bd_, bn_ = min(bm, _ceil(M)), min(bn, _ceil(D)), min(bk, _ceil(N))
+    Mp, Dp, Np = _pad_to(M, bm_), _pad_to(D, bd_), _pad_to(N, bn_)
+
+    gv = (jnp.zeros((B,), jnp.int32) if gv is None
+          else jnp.asarray(gv, jnp.int32).reshape(B))
+    codes = jnp.pad(codes, ((0, 0), (0, Mp - M), (0, Np - N)))
+    v = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, Np - N), (0, Dp - D)))
+
+    nk = Np // bn_
+    grid = (B, Mp // bm_, Dp // bd_, nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bn_), lambda b, m, d, n, g: (b, m, n)),
+            pl.BlockSpec((1, bn_, bd_),
+                         lambda b, m, d, n, g: (b // rep, n, d)),  # shared kv
+            pl.BlockSpec((1, 1), lambda b, m, d, n, g: (g[b], 0)),  # s_v[g_b]
+            pl.BlockSpec((1, 1), lambda b, m, d, n, g: (g[b], 0)),  # scale1
+            pl.BlockSpec((1, 1), lambda b, m, d, n, g: (g[b], 0)),  # scale2
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bd_), lambda b, m, d, n, g: (b, m, d)),
+        scratch_shapes=[pltpu.VMEM((bm_, bd_), jnp.int32),
+                        pltpu.VMEM((bm_, bd_), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_pv_kernel, nk=nk, half=half),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Mp, Dp), out_dtype),
+        interpret=interpret,
+    )(gv, codes, v, s_v.astype(jnp.float32), scale1.astype(jnp.float32),
+      scale2.astype(jnp.float32))
+    return out[:, :M, :D]

@@ -28,6 +28,18 @@ is gathered by the BlockSpec index maps (``(g[0], n)``). The whole
 sampling loop therefore stays ONE compiled executable with the int8
 kernels inside; no per-group repacking or retracing.
 
+``int8_matmul_fq_vec`` / ``int8_matmul_mrq_fq_vec`` are the
+**vector-tgroup** variants: instead of one scalar-prefetched group, a
+per-ROW ``(M,)`` int32 group vector rides as a (M, 1) VMEM operand and
+the FULL (G, ·) param stacks stream in; each row gathers its own group's
+params inside the kernel via an exact one-hot product (f32 one-hot
+matmul is bit-exact — exactly one 1.0·value term, the rest exact zeros —
+and the s32 ``corr`` gather uses an integer dot so values beyond f32's
+24-bit exact-integer range survive). A batch mixing slots at different
+timesteps therefore runs as ONE call that streams the weights exactly
+once; a constant group vector is bit-identical to the scalar-prefetch
+sibling (asserted in tests/test_kernel_conformance.py).
+
 Tiling matches ``int8_matmul``: grid (M/bm, N/bn, K/bk), k innermost,
 MXU-aligned blocks, s32 accumulator(s) in VMEM scratch. Non-aligned
 shapes are zero-padded; padded K columns of x quantize to the zero
@@ -259,5 +271,212 @@ def int8_matmul_mrq_fq(x, wq, s_neg, s_pos, scale_neg, scale_pos, bias=None,
         interpret=interpret,
     )(jnp.asarray(g, jnp.int32).reshape(1), x, wq,
       s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
+      scale_neg, scale_pos, bias)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# vector-tgroup variants: per-ROW group indices, one weight stream
+# ---------------------------------------------------------------------------
+def _onehot_rows(gv_ref, n_groups: int):
+    """(bm, 1) int32 group-index tile -> (bm, G) bool one-hot."""
+    gv = gv_ref[...]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (gv.shape[0], n_groups), 1)
+    return gv == iota
+
+
+def _gather_rows(oh, param_ref, dtype):
+    """Per-row gather of a (G, ·) param stack via a one-hot product.
+
+    Exactly one term per output element is 1·value and the rest are exact
+    zeros, so the f32 product is bit-exact; the int32 path uses an integer
+    dot because s32 corr values can exceed f32's exact-integer range.
+    """
+    return jax.lax.dot_general(
+        oh.astype(dtype), param_ref[...].astype(dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=dtype)
+
+
+def _fq_vec_kernel(gv_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
+                   bias_ref, o_ref, acc_ref, *, nk: int, half: int):
+    """Vector-tgroup body: same math as ``_fq_kernel`` but each ROW of the
+    x tile quantizes/dequantizes with its own group's params, gathered
+    in VMEM from the full (G, ·) stacks (no scalar prefetch, no per-group
+    weight re-stream)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G = sx_ref.shape[0]
+    ohf = _onehot_rows(gv_ref, G).astype(jnp.float32)
+    sx_row = _gather_rows(ohf, sx_ref, jnp.float32)      # (bm, 1)
+    zx_row = _gather_rows(ohf, zx_ref, jnp.float32)      # (bm, 1)
+    xq = jnp.clip(
+        jnp.round(x_ref[...].astype(jnp.float32) / sx_row) + zx_row - half,
+        -half, half - 1).astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        xq.astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        oh = _onehot_rows(gv_ref, G)
+        scale_row = _gather_rows(oh, scale_ref, jnp.float32)   # (bm, bn)
+        corr_row = _gather_rows(oh, corr_ref, jnp.int32)       # (bm, bn)
+        acc = acc_ref[...] - corr_row
+        y = acc.astype(jnp.float32) * scale_row + bias_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_matmul_fq_vec(x, wq, sx, zx, scale, corr, bias=None, gv=None, *,
+                       bits=8, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                       out_dtype=jnp.float32, interpret=False):
+    """``int8_matmul_fq`` with a per-ROW group vector.
+
+    gv: (M,) int32 — row i quantizes with sx[gv[i]]/zx[gv[i]] and
+    dequantizes with scale[gv[i]]/corr[gv[i]]. The weight matrix streams
+    ONCE for the whole mixed-group batch; the full (G, ·) param stacks
+    ride along instead (G ≤ ~10, negligible next to W). A constant gv is
+    bit-identical to the scalar-prefetch path.
+    """
+    half = 2 ** (bits - 1)
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    G = scale.shape[0]
+    assert sx.shape == (G, 1) and zx.shape == (G, 1), (sx.shape, zx.shape)
+    assert corr.shape == (G, N), (corr.shape, (G, N))
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    Mp, Np, Kp = _pad_to(M, bm_), _pad_to(N, bn_), _pad_to(K, bk_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if gv is None:
+        gv = jnp.zeros((M,), jnp.int32)
+    gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    corr = jnp.pad(corr.astype(jnp.int32), ((0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    nk = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_fq_vec_kernel, nk=nk, half=half),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),     # gv rows
+            pl.BlockSpec((bm_, bk_), lambda m, n, k: (m, k)),   # x tile
+            pl.BlockSpec((bk_, bn_), lambda m, n, k: (k, n)),   # W tile
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),       # sx stack
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),       # zx stack
+            pl.BlockSpec((G, bn_), lambda m, n, k: (0, n)),     # scale stack
+            pl.BlockSpec((G, bn_), lambda m, n, k: (0, n)),     # corr stack
+            pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),     # bias
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(gv, x, wq, sx.astype(jnp.float32), zx.astype(jnp.float32),
+      scale, corr, bias)
+    return out[:M, :N]
+
+
+def _mrq_vec_kernel(gv_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
+                    scale_p_ref, bias_ref, o_ref, acc_n_ref, acc_p_ref, *,
+                    nk: int, half: int):
+    """Vector-tgroup body for the MRQ twin-region matmul: per-row region
+    steps from the one-hot gather, one W read feeding both accumulators."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_n_ref[...] = jnp.zeros_like(acc_n_ref)
+        acc_p_ref[...] = jnp.zeros_like(acc_p_ref)
+
+    G = sn_ref.shape[0]
+    ohf = _onehot_rows(gv_ref, G).astype(jnp.float32)
+    sn_row = _gather_rows(ohf, sn_ref, jnp.float32)      # (bm, 1)
+    sp_row = _gather_rows(ohf, sp_ref, jnp.float32)      # (bm, 1)
+    xf = x_ref[...].astype(jnp.float32)
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_row), -half, 0),
+                   0).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp_row), 0, half - 1)
+                   ).astype(jnp.int8)
+    w = w_ref[...].astype(jnp.int32)          # ONE weight-tile read, two dots
+    dims = (((1,), (0,)), ((), ()))
+    acc_n_ref[...] += jax.lax.dot_general(qn.astype(jnp.int32), w, dims,
+                                          preferred_element_type=jnp.int32)
+    acc_p_ref[...] += jax.lax.dot_general(qp.astype(jnp.int32), w, dims,
+                                          preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        ohe = _onehot_rows(gv_ref, G).astype(jnp.float32)
+        scale_n_row = _gather_rows(ohe, scale_n_ref, jnp.float32)
+        scale_p_row = _gather_rows(ohe, scale_p_ref, jnp.float32)
+        y = (acc_n_ref[...].astype(jnp.float32) * scale_n_row
+             + acc_p_ref[...].astype(jnp.float32) * scale_p_row
+             + bias_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def int8_matmul_mrq_fq_vec(x, wq, s_neg, s_pos, scale_neg, scale_pos,
+                           bias=None, gv=None, *, bits=8, bm=DEFAULT_BM,
+                           bn=DEFAULT_BN, bk=DEFAULT_BK,
+                           out_dtype=jnp.float32, interpret=False):
+    """``int8_matmul_mrq_fq`` with a per-ROW group vector (see
+    ``int8_matmul_fq_vec`` for the one-weight-read contract)."""
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    G = scale_neg.shape[0]
+    assert s_neg.shape == (G, 1) and s_pos.shape == (G, 1)
+    assert scale_pos.shape == (G, N)
+    half = 2 ** (bits - 1)
+    bm_, bn_, bk_ = min(bm, _ceil(M)), min(bn, _ceil(N)), min(bk, _ceil(K))
+    Mp, Np, Kp = _pad_to(M, bm_), _pad_to(N, bn_), _pad_to(K, bk_)
+
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    if gv is None:
+        gv = jnp.zeros((M,), jnp.int32)
+    gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
+    wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    scale_neg = jnp.pad(scale_neg.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    scale_pos = jnp.pad(scale_pos.astype(jnp.float32), ((0, 0), (0, Np - N)))
+    bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
+
+    nk = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_mrq_vec_kernel, nk=nk, half=half),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),     # gv rows
+            pl.BlockSpec((bm_, bk_), lambda m, n, k: (m, k)),   # x tile
+            pl.BlockSpec((bk_, bn_), lambda m, n, k: (k, n)),   # W tile
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),       # s_neg stack
+            pl.BlockSpec((G, 1), lambda m, n, k: (0, 0)),       # s_pos stack
+            pl.BlockSpec((G, bn_), lambda m, n, k: (0, n)),     # scale_neg
+            pl.BlockSpec((G, bn_), lambda m, n, k: (0, n)),     # scale_pos
+            pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),     # bias
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32),
+                        pltpu.VMEM((bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(gv, x, wq, s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
       scale_neg, scale_pos, bias)
     return out[:M, :N]

@@ -51,13 +51,21 @@ from repro.core.quantizers import (
 )
 from repro.quant.groups import resolve_group
 from repro.kernels.int8_matmul import DEFAULT_BK, _ceil, int8_matmul
-from repro.kernels.int8_fused import int8_matmul_fq, int8_matmul_mrq_fq
-from repro.kernels.int4_packed import (
-    int4_matmul_fq, int4_matmul_mrq_fq, pack_int4, unpack_int4,
+from repro.kernels.int8_fused import (
+    int8_matmul_fq, int8_matmul_fq_vec, int8_matmul_mrq_fq,
+    int8_matmul_mrq_fq_vec,
 )
-from repro.kernels.int8_bmm import int8_bmm_pv, int8_bmm_qk
-from repro.kernels.flash_attn_mrq import flash_attn_mrq
-from repro.kernels.softmax_mrq import softmax_mrq, softmax_mrq_codes
+from repro.kernels.int4_packed import (
+    int4_matmul_fq, int4_matmul_fq_vec, int4_matmul_mrq_fq,
+    int4_matmul_mrq_fq_vec, pack_int4, unpack_int4,
+)
+from repro.kernels.int8_bmm import (
+    int8_bmm_pv, int8_bmm_pv_vec, int8_bmm_qk, int8_bmm_qk_vec,
+)
+from repro.kernels.flash_attn_mrq import flash_attn_mrq, flash_attn_mrq_vec
+from repro.kernels.softmax_mrq import (
+    softmax_mrq, softmax_mrq_codes, softmax_mrq_codes_vec,
+)
 from repro.kernels.act_mrq import act_mrq
 from repro.kernels import ref
 
@@ -389,20 +397,65 @@ def quantize_int8(x, scale, zero):
 
 def _group_index(pack: dict, tgroup):
     """Resolve the (possibly traced) TGQ group into a safe kernel index —
-    the exact/clamp half of the shared ``repro.quant.groups`` contract."""
+    the exact/clamp half of the shared ``repro.quant.groups`` contract.
+    ``tgroup`` may also be a per-slot (B,) VECTOR (vector-tgroup batched
+    path): the clamp maps elementwise and the wrappers below dispatch to
+    the ``*_vec`` kernels, which stream the weights ONCE for the whole
+    mixed-timestep batch and gather per-row activation params in VMEM."""
     return resolve_group(tgroup, pack["groups"])
 
 
+def _is_vec(g) -> bool:
+    """True when a resolved group index is a per-slot (B,) vector rather
+    than a scalar (python int or traced 0-d)."""
+    return getattr(g, "ndim", 0) == 1
+
+
+def _rows_vec(g, n_rows: int):
+    """Expand a per-slot (B,) group vector to one entry per matmul ROW.
+
+    ``x.reshape(-1, K)`` keeps token rows batch-major contiguous, so slot
+    b owns rows [b*rows_per_slot, (b+1)*rows_per_slot)."""
+    B = int(g.shape[0])
+    if n_rows % B != 0:
+        raise ValueError(
+            f"vector tgroup: {n_rows} matmul rows not divisible by "
+            f"{B} slots")
+    return jnp.repeat(jnp.asarray(g, jnp.int32), n_rows // B)
+
+
+def _as_vec(g, B: int):
+    """Lift a scalar group (e.g. a per-tensor G=1 pack resolving to 0) to
+    a constant (B,) vector so it can ride the vector kernels alongside a
+    genuinely mixed sibling pack. Constant vectors are bit-identical to
+    the scalar-prefetch path (asserted by the conformance suite)."""
+    if _is_vec(g):
+        return jnp.asarray(g, jnp.int32)
+    return jnp.full((B,), jnp.asarray(g, jnp.int32))
+
+
 def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
-    """Fused quantize->matmul->dequant serving linear (TGQ-aware)."""
+    """Fused quantize->matmul->dequant serving linear (TGQ-aware).
+
+    ``tgroup`` may be a per-slot (B,) vector: the whole mixed-timestep
+    batch then runs as ONE ``int8_matmul_fq_vec`` call — weights stream
+    once, each row gathers its own group's quant params in VMEM."""
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
-    y = int8_matmul_fq(
-        xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"], pack["corr"],
-        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), bits=pack.get("bits", 8),
-        out_dtype=out_dtype, interpret=INTERPRET)
+    g = _group_index(pack, tgroup)
+    bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    if _is_vec(g):
+        y = int8_matmul_fq_vec(
+            xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
+            pack["corr"], bias=bias_f, gv=_rows_vec(g, xm.shape[0]),
+            bits=pack.get("bits", 8), out_dtype=out_dtype,
+            interpret=INTERPRET)
+    else:
+        y = int8_matmul_fq(
+            xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
+            pack["corr"], bias=bias_f, g=g, bits=pack.get("bits", 8),
+            out_dtype=out_dtype, interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
@@ -412,12 +465,20 @@ def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
-    y = int8_matmul_mrq_fq(
-        xm, pack["wq"], pack["s_neg"], pack["s_pos"],
-        pack["scale_neg"], pack["scale_pos"],
-        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), bits=pack.get("bits", 8),
-        out_dtype=out_dtype, interpret=INTERPRET)
+    g = _group_index(pack, tgroup)
+    bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    if _is_vec(g):
+        y = int8_matmul_mrq_fq_vec(
+            xm, pack["wq"], pack["s_neg"], pack["s_pos"],
+            pack["scale_neg"], pack["scale_pos"], bias=bias_f,
+            gv=_rows_vec(g, xm.shape[0]), bits=pack.get("bits", 8),
+            out_dtype=out_dtype, interpret=INTERPRET)
+    else:
+        y = int8_matmul_mrq_fq(
+            xm, pack["wq"], pack["s_neg"], pack["s_pos"],
+            pack["scale_neg"], pack["scale_pos"], bias=bias_f, g=g,
+            bits=pack.get("bits", 8), out_dtype=out_dtype,
+            interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
@@ -427,11 +488,19 @@ def int4_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
-    y = int4_matmul_fq(
-        xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"], pack["corr"],
-        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), group_k=pack["group_k"],
-        out_dtype=out_dtype, interpret=INTERPRET)
+    g = _group_index(pack, tgroup)
+    bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    if _is_vec(g):
+        y = int4_matmul_fq_vec(
+            xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
+            pack["corr"], bias=bias_f, gv=_rows_vec(g, xm.shape[0]),
+            group_k=pack["group_k"], out_dtype=out_dtype,
+            interpret=INTERPRET)
+    else:
+        y = int4_matmul_fq(
+            xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
+            pack["corr"], bias=bias_f, g=g, group_k=pack["group_k"],
+            out_dtype=out_dtype, interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
 
 
@@ -441,12 +510,20 @@ def int4_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
-    y = int4_matmul_mrq_fq(
-        xm, pack["wp"], pack["s_neg"], pack["s_pos"],
-        pack["scale_neg"], pack["scale_pos"],
-        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
-        g=_group_index(pack, tgroup), group_k=pack["group_k"],
-        out_dtype=out_dtype, interpret=INTERPRET)
+    g = _group_index(pack, tgroup)
+    bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    if _is_vec(g):
+        y = int4_matmul_mrq_fq_vec(
+            xm, pack["wp"], pack["s_neg"], pack["s_pos"],
+            pack["scale_neg"], pack["scale_pos"], bias=bias_f,
+            gv=_rows_vec(g, xm.shape[0]), group_k=pack["group_k"],
+            out_dtype=out_dtype, interpret=INTERPRET)
+    else:
+        y = int4_matmul_mrq_fq(
+            xm, pack["wp"], pack["s_neg"], pack["s_pos"],
+            pack["scale_neg"], pack["scale_pos"], bias=bias_f, g=g,
+            group_k=pack["group_k"], out_dtype=out_dtype,
+            interpret=INTERPRET)
     return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
 
 
@@ -481,22 +558,47 @@ def int8_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hk, Skv, hd)
 
-    scores = int8_bmm_qk(
-        qf, kf, qk_pack["s_q"], qk_pack["s_k"],
-        qk_pack["scale"] * jnp.float32(scale), g=g_qk,
-        bits=int(qk_pack.get("bits", 8)), interpret=INTERPRET)
+    vec = _is_vec(g_qk) or _is_vec(g_pv)
+    qk_bits = int(qk_pack.get("bits", 8))
+    pv_bits = int(pv_pack.get("bits", 8))
+    if vec:
+        # Per-slot group vectors: one kernel call for the whole
+        # mixed-timestep batch. q rows are slot-major after the transpose
+        # (slot b owns Hk*G consecutive batch rows), so the per-slot
+        # vector repeats Hk*G times; a scalar sibling pack (G=1) rides
+        # along as a constant vector (bit-identical to scalar prefetch).
+        gq = jnp.repeat(_as_vec(g_qk, B), Hk * G)              # (BHG,)
+        gp = jnp.repeat(_as_vec(g_pv, B), Hk * G)              # (BHG,)
+        scores = int8_bmm_qk_vec(
+            qf, kf, qk_pack["s_q"], qk_pack["s_k"],
+            qk_pack["scale"] * jnp.float32(scale), gv=gq,
+            bits=qk_bits, interpret=INTERPRET)
+    else:
+        scores = int8_bmm_qk(
+            qf, kf, qk_pack["s_q"], qk_pack["s_k"],
+            qk_pack["scale"] * jnp.float32(scale), g=g_qk,
+            bits=qk_bits, interpret=INTERPRET)
     scores = scores.reshape(B, Hk, G, Sq, Skv)
     if mask is not None:
         from repro.nn.ctx import NEG_INF
         scores = jnp.where(mask, scores, NEG_INF)
 
-    pv_bits = int(pv_pack.get("bits", 8))
-    codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g_pv, bits=pv_bits,
-                              interpret=INTERPRET)
-    out = int8_bmm_pv(
-        codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"], pv_pack["scale1"],
-        pv_pack["scale2"], g=g_pv, bits=pv_bits, out_dtype=out_dtype,
-        interpret=INTERPRET)
+    if vec:
+        rows_gv = jnp.broadcast_to(
+            _as_vec(g_pv, B)[:, None, None, None], (B, Hk, G, Sq))
+        codes = softmax_mrq_codes_vec(scores, pv_pack["s1"], gv=rows_gv,
+                                      bits=pv_bits, interpret=INTERPRET)
+        out = int8_bmm_pv_vec(
+            codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"],
+            pv_pack["scale1"], pv_pack["scale2"], gv=gp, bits=pv_bits,
+            out_dtype=out_dtype, interpret=INTERPRET)
+    else:
+        codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g_pv,
+                                  bits=pv_bits, interpret=INTERPRET)
+        out = int8_bmm_pv(
+            codes.reshape(BHG, Sq, Skv), vf, pv_pack["s_v"],
+            pv_pack["scale1"], pv_pack["scale2"], g=g_pv, bits=pv_bits,
+            out_dtype=out_dtype, interpret=INTERPRET)
     return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 
@@ -533,13 +635,27 @@ def flash_attention(q, k, v, qk_pack: dict, pv_pack: dict, *, mask=None,
                               ).reshape(BHG, Sq, Skv)
 
     bits = int(qk_pack.get("bits", 8))
-    out = flash_attn_mrq(
-        qf, kf, vf, qk_pack["s_q"], qk_pack["s_k"],
-        qk_pack["scale"] * jnp.float32(scale), pv_pack["s1"],
-        pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
-        g_qk=g_qk, g_pv=g_pv, mask=mf, bits=bits,
-        packed_kv=(bits == 4), out_dtype=out_dtype,
-        interpret=INTERPRET)
+    if _is_vec(g_qk) or _is_vec(g_pv):
+        # Vector-tgroup batched path: slot-major (BHG,) group vectors,
+        # one flash call for the whole mixed-timestep batch (weights and
+        # kv stream once; each batch row's params gather from the full
+        # (G, ·) stacks via the per-row prefetch index maps).
+        out = flash_attn_mrq_vec(
+            qf, kf, vf, qk_pack["s_q"], qk_pack["s_k"],
+            qk_pack["scale"] * jnp.float32(scale), pv_pack["s1"],
+            pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+            g_qk=jnp.repeat(_as_vec(g_qk, B), Hk * G),
+            g_pv=jnp.repeat(_as_vec(g_pv, B), Hk * G),
+            mask=mf, bits=bits, packed_kv=(bits == 4),
+            out_dtype=out_dtype, interpret=INTERPRET)
+    else:
+        out = flash_attn_mrq(
+            qf, kf, vf, qk_pack["s_q"], qk_pack["s_k"],
+            qk_pack["scale"] * jnp.float32(scale), pv_pack["s1"],
+            pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+            g_qk=g_qk, g_pv=g_pv, mask=mf, bits=bits,
+            packed_kv=(bits == 4), out_dtype=out_dtype,
+            interpret=INTERPRET)
     return out.reshape(B, Hk, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 

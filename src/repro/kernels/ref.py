@@ -369,3 +369,262 @@ def act_mrq_ref(x, s_neg, s_pos, bits: int, kind: str = "gelu",
     xf = x.astype(jnp.float32)
     h = jax.nn.gelu(xf, approximate=True) if kind == "gelu" else jax.nn.silu(xf)
     return mrq_signed_qdq(h, s_neg, s_pos, bits).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# vector-tgroup oracles: per-row / per-batch-row group indices
+# ---------------------------------------------------------------------------
+def int8_matmul_fq_vec_ref(x, wq, sx, zx, scale, corr, bias=None, gv=None,
+                           bits: int = 8, out_dtype=jnp.float32):
+    """Per-row oracle for ``int8_matmul_fq_vec``: row i quantizes with
+    sx[gv[i]]/zx[gv[i]] and dequantizes with scale[gv[i]]/corr[gv[i]]."""
+    M = x.shape[0]
+    gv = jnp.zeros((M,), jnp.int32) if gv is None else jnp.asarray(gv)
+    sx_r = jnp.take(sx, gv, axis=0)                       # (M, 1)
+    zx_r = jnp.take(zx, gv, axis=0)                       # (M, 1)
+    xq = quantize_int8_ref(x.astype(jnp.float32), sx_r, zx_r, bits)
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = ((acc - jnp.take(corr, gv, axis=0)).astype(jnp.float32)
+         * jnp.take(scale, gv, axis=0))
+    if bias is not None:
+        y = y + bias[None, :].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def int8_matmul_mrq_fq_vec_ref(x, wq, s_neg, s_pos, scale_neg, scale_pos,
+                               bias=None, gv=None, bits: int = 8,
+                               out_dtype=jnp.float32):
+    """Per-row oracle for ``int8_matmul_mrq_fq_vec``."""
+    half = 2 ** (bits - 1)
+    M = x.shape[0]
+    gv = jnp.zeros((M,), jnp.int32) if gv is None else jnp.asarray(gv)
+    xf = x.astype(jnp.float32)
+    sn_r = jnp.take(s_neg, gv, axis=0)                    # (M, 1)
+    sp_r = jnp.take(s_pos, gv, axis=0)                    # (M, 1)
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_r), -half, 0), 0
+                   ).astype(jnp.int8)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp_r), 0, half - 1)
+                   ).astype(jnp.int8)
+    dims = (((1,), (0,)), ((), ()))
+    acc_n = jax.lax.dot_general(qn.astype(jnp.int32), wq.astype(jnp.int32),
+                                dims, preferred_element_type=jnp.int32)
+    acc_p = jax.lax.dot_general(qp.astype(jnp.int32), wq.astype(jnp.int32),
+                                dims, preferred_element_type=jnp.int32)
+    y = (acc_n.astype(jnp.float32) * jnp.take(scale_neg, gv, axis=0)
+         + acc_p.astype(jnp.float32) * jnp.take(scale_pos, gv, axis=0))
+    if bias is not None:
+        y = y + bias[None, :].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def int4_matmul_fq_vec_ref(x, wp, sx, zx, scale, corr, bias=None, gv=None,
+                           group_k: int = 256, out_dtype=jnp.float32):
+    """Per-row oracle for ``int4_matmul_fq_vec`` — the kernel's
+    group-ordered f32 accumulation with per-row scale/corr rows."""
+    from repro.kernels.int4_packed import unpack_int4
+    M, K = x.shape
+    Kp, N = 2 * wp.shape[0], wp.shape[1]
+    nk = Kp // group_k
+    gv = jnp.zeros((M,), jnp.int32) if gv is None else jnp.asarray(gv)
+    sx_r = jnp.take(sx, gv, axis=0)                       # (M, 1)
+    zx_r = jnp.take(zx, gv, axis=0)
+    xq = quantize_int8_ref(x.astype(jnp.float32), sx_r, zx_r, bits=4)
+    xq = jnp.pad(xq, ((0, 0), (0, Kp - K))).astype(jnp.int32)
+    w = unpack_int4(wp).astype(jnp.int32)
+    scale_r = jnp.take(scale, gv, axis=0)                 # (M, nk, N)
+    corr_r = jnp.take(corr, gv, axis=0)
+    acc = jnp.zeros((M, N), jnp.float32)
+    for kg in range(nk):
+        sl = slice(kg * group_k, (kg + 1) * group_k)
+        partial = jax.lax.dot_general(
+            xq[:, sl], w[sl], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + ((partial - corr_r[:, kg]).astype(jnp.float32)
+                     * scale_r[:, kg])
+    if bias is not None:
+        acc = acc + bias[None, :].astype(jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def int4_matmul_mrq_fq_vec_ref(x, wp, s_neg, s_pos, scale_neg, scale_pos,
+                               bias=None, gv=None, group_k: int = 256,
+                               out_dtype=jnp.float32):
+    """Per-row oracle for ``int4_matmul_mrq_fq_vec``."""
+    from repro.kernels.int4_packed import unpack_int4
+    half = 8
+    M, K = x.shape
+    Kp, N = 2 * wp.shape[0], wp.shape[1]
+    nk = Kp // group_k
+    gv = jnp.zeros((M,), jnp.int32) if gv is None else jnp.asarray(gv)
+    xf = x.astype(jnp.float32)
+    sn_r = jnp.take(s_neg, gv, axis=0)                    # (M, 1)
+    sp_r = jnp.take(s_pos, gv, axis=0)
+    neg = xf < 0
+    qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_r), -half, 0), 0
+                   ).astype(jnp.int32)
+    qp = jnp.where(neg, 0, jnp.clip(jnp.round(xf / sp_r), 0, half - 1)
+                   ).astype(jnp.int32)
+    qn = jnp.pad(qn, ((0, 0), (0, Kp - K)))
+    qp = jnp.pad(qp, ((0, 0), (0, Kp - K)))
+    w = unpack_int4(wp).astype(jnp.int32)
+    sn_g = jnp.take(scale_neg, gv, axis=0)                # (M, nk, N)
+    sp_g = jnp.take(scale_pos, gv, axis=0)
+    dims = (((1,), (0,)), ((), ()))
+    acc = jnp.zeros((M, N), jnp.float32)
+    for kg in range(nk):
+        sl = slice(kg * group_k, (kg + 1) * group_k)
+        pn = jax.lax.dot_general(qn[:, sl], w[sl], dims,
+                                 preferred_element_type=jnp.int32)
+        pp = jax.lax.dot_general(qp[:, sl], w[sl], dims,
+                                 preferred_element_type=jnp.int32)
+        acc = acc + (pn.astype(jnp.float32) * sn_g[:, kg]
+                     + pp.astype(jnp.float32) * sp_g[:, kg])
+    if bias is not None:
+        acc = acc + bias[None, :].astype(jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def int8_bmm_qk_vec_ref(q, k, s_q, s_k, scale, gv=None, bits: int = 8,
+                        out_dtype=jnp.float32):
+    """Per-batch-row oracle for ``int8_bmm_qk_vec`` (q and k batches
+    equal here — GQA sharing is equivalence-tested at the kernel level)."""
+    B = q.shape[0]
+    gv = jnp.zeros((B,), jnp.int32) if gv is None else jnp.asarray(gv)
+    sq_b = jnp.take(s_q, gv, axis=0)[:, :, None]          # (B, 1, 1)
+    sk_b = jnp.take(s_k, gv, axis=0)[:, :, None]
+    q8 = sym_quantize_int8_ref(q, sq_b, bits)
+    k8 = sym_quantize_int8_ref(k, sk_b, bits)
+    acc = jax.lax.dot_general(
+        q8.astype(jnp.int32), k8.astype(jnp.int32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * jnp.take(scale, gv, axis=0)[:, :, None]).astype(out_dtype)
+
+
+def softmax_mrq_codes_vec_ref(scores, s1, gv=None, bits: int = 8):
+    """Per-row oracle for ``softmax_mrq_codes_vec``: gv has shape
+    ``scores.shape[:-1]`` (one group per softmax row)."""
+    half = 2 ** (bits - 1)
+    if gv is None:
+        gv = jnp.zeros(scores.shape[:-1], jnp.int32)
+    s1_r = jnp.take(jnp.asarray(s1, jnp.float32), jnp.asarray(gv), axis=0)
+    s2 = 1.0 / half
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    q1 = jnp.clip(jnp.round(p / s1_r), 0, half - 1)
+    q2 = jnp.clip(jnp.round(p / s2), 0, half)
+    return jnp.where(p < half * s1_r, q1, -q2).astype(jnp.int8)
+
+
+def int8_bmm_pv_vec_ref(codes, v, s_v, scale1, scale2, gv=None,
+                        bits: int = 8, out_dtype=jnp.float32):
+    """Per-batch-row oracle for ``int8_bmm_pv_vec``."""
+    B = codes.shape[0]
+    gv = jnp.zeros((B,), jnp.int32) if gv is None else jnp.asarray(gv)
+    c = codes.astype(jnp.int32)
+    c1 = jnp.maximum(c, 0)
+    c2 = jnp.maximum(-c, 0)
+    sv_b = jnp.take(s_v, gv, axis=0)[:, :, None]          # (B, 1, 1)
+    v8 = sym_quantize_int8_ref(v, sv_b, bits).astype(jnp.int32)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    acc1 = jax.lax.dot_general(c1, v8, dims,
+                               preferred_element_type=jnp.int32)
+    acc2 = jax.lax.dot_general(c2, v8, dims,
+                               preferred_element_type=jnp.int32)
+    y = (acc1.astype(jnp.float32) * jnp.take(scale1, gv, axis=0)[:, :, None]
+         + acc2.astype(jnp.float32) * jnp.take(scale2, gv, axis=0)[:, :, None])
+    return y.astype(out_dtype)
+
+
+def int8_attention_vec_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
+                           gv=None, bits: int = 8, out_dtype=jnp.float32):
+    """Composed per-batch-row int8 attention oracle over FLATTENED
+    (BHG, S, hd) operands — the vector sibling of ``int8_attention_ref``;
+    exactly the composition ``kernels.ops.int8_attention`` runs when the
+    tgroup is a per-slot vector."""
+    from repro.nn.ctx import NEG_INF
+    B, M, _ = q.shape
+    gv = jnp.zeros((B,), jnp.int32) if gv is None else jnp.asarray(gv)
+    scores = int8_bmm_qk_vec_ref(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                 qk_pack["scale"] * scale, gv=gv, bits=bits)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    rows_gv = jnp.broadcast_to(gv[:, None], (B, M))
+    codes = softmax_mrq_codes_vec_ref(scores, pv_pack["s1"], gv=rows_gv,
+                                      bits=bits)
+    return int8_bmm_pv_vec_ref(codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                               pv_pack["scale2"], gv=gv, bits=bits,
+                               out_dtype=out_dtype)
+
+
+def flash_attn_mrq_vec_ref(q, k, v, qk_pack, pv_pack, mask=None, scale=1.0,
+                           g_qk=None, g_pv=None, bits: int = 8,
+                           bn: int = 128, out_dtype=jnp.float32):
+    """Tile-faithful per-batch-row oracle for ``flash_attn_mrq_vec``:
+    the recurrence of ``flash_attn_mrq_ref`` with every group-gathered
+    scalar widened to a (B, 1, 1) per-batch-row column."""
+    from repro.nn.ctx import NEG_INF
+    from repro.kernels.int8_matmul import _ceil
+    B, M, D = q.shape
+    N = k.shape[1]
+    half = 2 ** (bits - 1)
+    bn_ = min(bn, _ceil(N))
+    Np = -bn_ * (-N // bn_)
+    g_qk = jnp.zeros((B,), jnp.int32) if g_qk is None else jnp.asarray(g_qk)
+    g_pv = jnp.zeros((B,), jnp.int32) if g_pv is None else jnp.asarray(g_pv)
+
+    sq_g = jnp.take(qk_pack["s_q"], g_qk, axis=0)[:, :, None]      # (B,1,1)
+    sk_g = jnp.take(qk_pack["s_k"], g_qk, axis=0)[:, :, None]
+    qs_g = jnp.take(qk_pack["scale"], g_qk, axis=0)[:, :, None] * scale
+    s1_g = jnp.take(pv_pack["s1"], g_pv, axis=0)[:, :, None]
+    sv_g = jnp.take(pv_pack["s_v"], g_pv, axis=0)[:, :, None]
+    sc1_g = jnp.take(pv_pack["scale1"], g_pv, axis=0)[:, :, None]
+    sc2_g = jnp.take(pv_pack["scale2"], g_pv, axis=0)[:, :, None]
+    s2 = 1.0 / half
+
+    q8 = sym_quantize_int8_ref(q, sq_g, bits).astype(jnp.int32)
+    k8 = sym_quantize_int8_ref(
+        jnp.pad(k.astype(jnp.float32), ((0, 0), (0, Np - N), (0, 0))),
+        sk_g, bits).astype(jnp.int32)
+    v8 = sym_quantize_int8_ref(
+        jnp.pad(v.astype(jnp.float32), ((0, 0), (0, Np - N), (0, 0))),
+        sv_g, bits).astype(jnp.int32)
+    if mask is not None:
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, Np - N)))
+
+    m_run = jnp.full((B, M, 1), -1e30, jnp.float32)
+    l_run = jnp.zeros((B, M, 1), jnp.float32)
+    acc1 = jnp.zeros((B, M, D), jnp.float32)
+    acc2 = jnp.zeros((B, M, D), jnp.float32)
+    col = jnp.arange(Np)
+    for n0 in range(0, Np, bn_):
+        kt = k8[:, n0:n0 + bn_]
+        vt = v8[:, n0:n0 + bn_]
+        s = jax.lax.dot_general(
+            q8, kt, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32).astype(jnp.float32) * qs_g
+        s = jnp.where(col[n0:n0 + bn_][None, None, :] < N, s, NEG_INF)
+        if mask is not None:
+            s = jnp.where(mask[:, :, n0:n0 + bn_], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m_new)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(e, axis=-1, keepdims=True)
+        p = e / l_new
+        region1 = p < half * s1_g
+        c1 = jnp.where(region1, jnp.clip(jnp.round(p / s1_g), 0, half - 1),
+                       0.0).astype(jnp.int32)
+        c2 = jnp.where(region1, 0.0, jnp.clip(jnp.round(p / s2), 0, half)
+                       ).astype(jnp.int32)
+        dims = (((2,), (1,)), ((0,), (0,)))
+        d1 = jax.lax.dot_general(c1, vt, dims,
+                                 preferred_element_type=jnp.int32)
+        d2 = jax.lax.dot_general(c2, vt, dims,
+                                 preferred_element_type=jnp.int32)
+        rho = corr * l_run / l_new
+        acc1 = acc1 * rho + d1.astype(jnp.float32)
+        acc2 = acc2 * rho + d2.astype(jnp.float32)
+        m_run, l_run = m_new, l_new
+    return (acc1 * sc1_g + acc2 * sc2_g).astype(out_dtype)

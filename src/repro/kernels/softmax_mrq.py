@@ -147,3 +147,65 @@ def softmax_mrq_codes(scores, s1, g=None, *, bits: int = 8, br: int = 256,
         interpret=interpret,
     )(jnp.asarray(g, jnp.int32).reshape(1), x, s1.astype(jnp.float32))
     return out[:R].reshape(shape)
+
+
+def _codes_vec_kernel(gv_ref, s_ref, s1_ref, o_ref, *, bits: int):
+    """Vector-tgroup ``_codes_kernel``: each ROW quantizes with its own
+    group's s1, gathered from the full (G, 1) stack via the exact one-hot
+    product (deferred import dodges the int8_fused <-> softmax cycle risk
+    at package init — there is none today, but keep the dep one-way)."""
+    from repro.kernels.int8_fused import _gather_rows, _onehot_rows
+    x = s_ref[...].astype(jnp.float32)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    half = 2 ** (bits - 1)
+    G = s1_ref.shape[0]
+    ohf = _onehot_rows(gv_ref, G).astype(jnp.float32)
+    s1_row = _gather_rows(ohf, s1_ref, jnp.float32)       # (br, 1)
+    s2 = 1.0 / half
+    q1 = jnp.clip(jnp.round(p / s1_row), 0, half - 1)
+    q2 = jnp.clip(jnp.round(p / s2), 0, half)
+    o_ref[...] = jnp.where(p < half * s1_row, q1, -q2).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "br", "interpret"))
+def softmax_mrq_codes_vec(scores, s1, gv=None, *, bits: int = 8,
+                          br: int = 256, interpret=False):
+    """``softmax_mrq_codes`` with a per-ROW group vector.
+
+    scores: (..., C); gv: int32 with shape ``scores.shape[:-1]`` (one
+    group per softmax row — batched callers pass the slot's group
+    repeated over heads/queries). The full (G, 1) s1 stack streams and
+    each row gathers its own step in VMEM; a constant gv is bit-identical
+    to the scalar-prefetch path.
+    """
+    shape = scores.shape
+    C = shape[-1]
+    R = 1
+    for d in shape[:-1]:
+        R *= d
+    x = scores.reshape(R, C)
+    br_ = min(br, max(8, R))
+    Rp = -br_ * (-R // br_)
+    x = jnp.pad(x, ((0, Rp - R), (0, 0)))
+    G = s1.shape[0]
+    assert s1.shape == (G, 1), s1.shape
+    gv = (jnp.zeros((R,), jnp.int32) if gv is None
+          else jnp.asarray(gv, jnp.int32).reshape(R))
+    gv = jnp.pad(gv, (0, Rp - R)).reshape(Rp, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_codes_vec_kernel, bits=bits),
+        grid=(Rp // br_,),
+        in_specs=[
+            pl.BlockSpec((br_, 1), lambda r: (r, 0)),         # gv rows
+            pl.BlockSpec((br_, C), lambda r: (r, 0)),
+            pl.BlockSpec((G, 1), lambda r: (0, 0)),           # s1 stack
+        ],
+        out_specs=pl.BlockSpec((br_, C), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, C), jnp.int8),
+        interpret=interpret,
+    )(gv, x, s1.astype(jnp.float32))
+    return out[:R].reshape(shape)

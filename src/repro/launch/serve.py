@@ -116,7 +116,9 @@ def main() -> None:
                          "continuous-batching engine (slot pool, chunked "
                          "dispatches, NaN quarantine, deadlines) instead "
                          "of the synchronous step-bucketed path; samples "
-                         "are bit-identical either way")
+                         "are bit-identical either way. Composes with "
+                         "--dp N: the slot pool shards across the "
+                         "data-parallel mesh (microbatch must divide by N)")
     ap.add_argument("--chunk", type=int, default=4,
                     help="async: denoising steps advanced per compiled "
                          "dispatch (the admission/cancellation granularity)")
@@ -134,11 +136,6 @@ def main() -> None:
         ap.error("--save-artifact requires --quantize (and excludes "
                  "--load-artifact): there is no freshly calibrated "
                  "artifact to save otherwise")
-    if args.async_mode and args.dp > 1:
-        ap.error("--async is single-device (the slot pool trades shard_map "
-                 "DP for continuous-batching freedom); drop --dp or use "
-                 "the synchronous path")
-
     if args.dp > 1:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
@@ -165,11 +162,14 @@ def main() -> None:
         params = dit_init(key, cfg)
         dif = DiffusionCfg(T=1000)
         sched = make_schedule(dif)
-        mesh = None if args.async_mode else make_serving_mesh()
+        mesh = make_serving_mesh()
         artifact = None
         deadline_s = (args.deadline_ms / 1000.0
                       if args.deadline_ms is not None else None)
-        async_kw = dict(microbatch=args.microbatch,
+        # async + dp: the slot pool shards across the same DP mesh as the
+        # sync path (one slot-pool slice per device, shard_map'd chunks)
+        async_kw = dict(mesh=mesh if args.dp > 1 else None,
+                        microbatch=args.microbatch,
                         step_buckets=(args.steps,), chunk=args.chunk,
                         max_retries=args.max_retries, deadline_s=deadline_s)
 

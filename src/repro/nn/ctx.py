@@ -50,9 +50,12 @@ NEG_INF = -1e9          # additive mask value for attention scores
 
 @dataclasses.dataclass
 class OpContext:
-    """Base class. ``tgroup`` is the TGQ timestep-group index (traced scalar
-    or None outside diffusion); ``layer`` is the current layer index when the
-    caller runs blocks under ``lax.scan`` (traced scalar) or a concrete int.
+    """Base class. ``tgroup`` is the TGQ timestep-group index — a traced
+    scalar, a per-slot (B,) int32 VECTOR (vector-tgroup batched path: one
+    forward over a batch whose slots sit at different timesteps; quantized
+    contexts gather each batch row's group params), or None outside
+    diffusion. ``layer`` is the current layer index when the caller runs
+    blocks under ``lax.scan`` (traced scalar) or a concrete int.
     """
 
     tgroup: Optional[Any] = None

@@ -241,34 +241,61 @@ class AsyncServeEngine:
       kernels -> fake-quant, each step logged; ladder exhausted =>
       every live request fails structured and :class:`EngineFault` raises.
 
-    The engine runs un-sharded (one device): continuous batching trades
-    the sync path's DP shard_map for slot-level scheduling freedom. Slot
-    state lives on device; per-chunk host traffic is two (B,) arrays
-    (positions + bad flags) — the full latent is pulled once per request,
-    at completion. ``clock`` is injectable (``faults.FakeClock``) so
-    deadline tests never sleep.
+    Scale-out: with ``mesh`` the slot pool is SHARDED across the
+    data-parallel mesh exactly like the sync path's microbatches — the
+    chunk executable runs under shard_map with params replicated and
+    every per-slot array on ``request_spec``, so slot ``s`` lives on
+    device ``s // (microbatch/dp)`` and admission into a slot is
+    admission onto that device's shard. The batched vector-tgroup
+    forward (``ddpm_chunk_slots``) has no cross-slot communication, so
+    each device runs the same executable a single-device pool would —
+    samples stay bit-identical. ``pipeline >= 2`` adds dispatch-ahead:
+    the next chunk is enqueued on the current chunk's device-resident
+    outputs BEFORE the host blocks on the small (B,) position/bad reads,
+    keeping the device busy while the host resolves the boundary;
+    the speculative chunk is drained whenever the boundary mutates slot
+    state (admission, completion, cancel/deadline, quarantine reset,
+    degradation), so the lifecycle state machine and the NaN-retry
+    bit-identity contract are byte-for-byte those of ``pipeline=1``.
+
+    Slot state lives on device; per-chunk host traffic is two (B,)
+    arrays (positions + bad flags) — the full latent is pulled once per
+    request, at completion. ``clock`` is injectable
+    (``faults.FakeClock``) so deadline tests never sleep.
     """
 
     # a freed slot parks at pos >= every bucket length: bucket 0, pos n_max
     def __init__(self, params, dcfg: DiTCfg, dif: DiffusionCfg,
-                 sched=None, *, ctx=None, microbatch: int = 4,
+                 sched=None, *, ctx=None, mesh: Optional[Mesh] = None,
+                 microbatch: int = 4,
                  step_buckets: Sequence[int] = DEFAULT_STEP_BUCKETS,
-                 chunk: int = 4, max_queue: int = 64, max_retries: int = 2,
+                 chunk: int = 4, pipeline: int = 2, max_queue: int = 64,
+                 max_retries: int = 2,
                  deadline_s: Optional[float] = None, clock=time.monotonic,
                  injector=None, clip_x0: Optional[float] = None):
         self.dcfg = dcfg
         self.dif = dif
         self.sched = sched if sched is not None else make_schedule(dif)
         self.ctx = ctx if ctx is not None else FPContext()
+        self.mesh = mesh
         self.microbatch = int(microbatch)
         self.step_buckets = tuple(sorted(int(b) for b in step_buckets))
         self.chunk = int(chunk)
+        self.pipeline = max(1, int(pipeline))
         self.max_queue = int(max_queue)
         self.max_retries = int(max_retries)
         self.deadline_s = deadline_s
         self.clip_x0 = clip_x0
         self._clock = clock
         self._injector = injector
+        if mesh is not None:
+            nd = dp_size(mesh)
+            if self.microbatch % nd != 0:
+                raise ValueError(
+                    f"microbatch {self.microbatch} not divisible by the "
+                    f"mesh's {nd} data-parallel shards — each device needs "
+                    "an equal, fixed-shape slice of the slot pool")
+            params = jax.device_put(params, replicated(mesh))
         self.params = params
 
         self._slot_sched = make_slot_schedule(dif, self.sched,
@@ -300,6 +327,7 @@ class AsyncServeEngine:
             "admitted": 0, "completed": 0, "failed": 0, "rejected": 0,
             "cancelled": 0, "retries": 0, "queue_peak": 0,
         }
+        self._pending = None            # dispatch-ahead in-flight chunk
         self._chunk_fn = self._build_chunk()
         self._init_fn = jax.jit(
             lambda seed, n: ddpm_init_latent(seed, n, sshape))
@@ -330,6 +358,14 @@ class AsyncServeEngine:
                                     null_label=null_label, chunk=chunk,
                                     ctx=ctx, clip_x0=clip)
 
+        if self.mesh is not None:
+            rspec = request_spec(self.mesh)
+            run = shard_map(run, mesh=self.mesh,
+                            in_specs=(P(), batch_spec(self.mesh, 4), rspec,
+                                      rspec, rspec, rspec, rspec),
+                            out_specs=(batch_spec(self.mesh, 4), rspec,
+                                       rspec),
+                            check_rep=False)
         return jax.jit(run)
 
     # -- admission ----------------------------------------------------------
@@ -408,6 +444,7 @@ class AsyncServeEngine:
         return [s for s, rid in enumerate(self._slot_rid) if rid is None]
 
     def _place(self, slot: int, rec: lc.RequestRecord) -> None:
+        self._drain_pipeline()          # pool mutates: in-flight chunk stale
         req = rec.request
         bi = self._bucket_idx[bucket_steps(req.steps, self.step_buckets)]
         n = int(self._n_of[bi])
@@ -428,6 +465,7 @@ class AsyncServeEngine:
         rec.log(self._clock(), f"slot {slot}")
 
     def _release(self, slot: int) -> None:
+        self._drain_pipeline()          # pool mutates: in-flight chunk stale
         self._x = self._x.at[slot].set(0.0)   # clear poison from the pool
         self._pos = self._pos.at[slot].set(self._n_max)
         self._bk = self._bk.at[slot].set(0)
@@ -483,24 +521,49 @@ class AsyncServeEngine:
             if rid is not None:
                 self._finish(self.records[rid], lc.FAILED, None, error)
 
+    def _drain_pipeline(self) -> None:
+        """Discard any dispatch-ahead chunk: its inputs no longer match
+        the slot pool (admission, release, quarantine reset, or a
+        degradation rebuilt the executable)."""
+        self._pending = None
+
     def _dispatch(self):
-        """One chunk dispatch with the degradation ladder. Slot state is
-        only replaced AFTER the blocking reads succeed, so a failed
-        dispatch (trace error, kernel fault, injected) is side-effect free
-        and the same chunk can be retried on a degraded context."""
+        """One chunk dispatch with the degradation ladder and dispatch-ahead
+        pipelining. Slot state is only replaced AFTER the blocking reads
+        succeed, so a failed dispatch (trace error, kernel fault, injected)
+        is side-effect free and the same chunk can be retried on a degraded
+        context. With ``pipeline >= 2`` the NEXT chunk is enqueued on this
+        chunk's device-resident outputs BEFORE the host blocks on the small
+        (B,) reads — two dispatches in flight, host boundary work overlapped
+        with device compute. The speculative chunk is only consumed if this
+        boundary mutates no slot state; every mutating path drains it
+        (``_drain_pipeline``), so fault/deadline/quarantine semantics are
+        exactly those of ``pipeline=1``."""
         while True:
             self.stats["dispatches"] += 1
             try:
                 if self._injector is not None:
                     self._injector.before_dispatch(self.stats["dispatches"])
-                x, pos, bad = self._chunk_fn(
-                    self.params, self._x, self._pos, self._bk, self._y,
-                    self._seeds, self._gs)
+                if self._pending is not None:
+                    x, pos, bad = self._pending
+                    self._pending = None
+                else:
+                    x, pos, bad = self._chunk_fn(
+                        self.params, self._x, self._pos, self._bk, self._y,
+                        self._seeds, self._gs)
+                if self.pipeline >= 2:
+                    # dispatch-ahead: enqueue the next chunk on the async
+                    # dispatch queue now; pump() drains it if this chunk's
+                    # boundary mutates any slot
+                    self._pending = self._chunk_fn(
+                        self.params, x, pos, self._bk, self._y,
+                        self._seeds, self._gs)
                 # block on the SMALL outputs only; x stays device-resident
                 pos_h = np.array(pos)      # writable copy: retries reset it
                 bad_h = np.array(bad)
                 return x, pos_h, bad_h
             except Exception as e:            # noqa: BLE001 — ladder seam
+                self._drain_pipeline()
                 down = degrade_context(self.ctx)
                 if down is None:
                     err = lc.FaultInfo(
@@ -558,6 +621,7 @@ class AsyncServeEngine:
                 rec.retries += 1
                 self.stats["retries"] += 1
                 rec.log(now, f"quarantined@{step} retry {rec.retries}")
+                self._drain_pipeline()  # slot resets: in-flight chunk stale
                 x = x.at[slot].set(self._init_fn(
                     jnp.uint32(rec.request.seed), jnp.int32(n)))
                 pos_h[slot] = 0

@@ -12,6 +12,20 @@ import jax.numpy as jnp
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled executables between test modules.
+
+    The full suite compiles thousands of tiny programs (every kernel
+    conformance cell is its own jit); letting the live-executable count
+    grow across all modules eventually segfaults XLA:CPU's compiler
+    deep in ``backend_compile`` (reproducible at suite scale only —
+    every module passes in isolation). Nothing relies on cross-module
+    cache hits: the compile-once tests count traces within one test."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

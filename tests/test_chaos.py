@@ -10,8 +10,18 @@ sticky poison -> bounded retries -> structured FAILED, the graceful-
 degradation ladder (flash attn -> composed -> fake-quant) on dispatch
 faults, ladder exhaustion -> EngineFault with every live request failed,
 deadline overruns driven by a FakeClock (no sleeping), and artifact
-corruption surfacing as a fail-fast shard-naming error at load."""
+corruption surfacing as a fail-fast shard-naming error at load.
+
+The dispatch-ahead pipeline section re-runs the NaN / deadline / ladder
+faults with pipeline depth 1 vs 2 (the engine speculates the next chunk
+before reading back the current one, and must drain the in-flight
+dispatch at every fault/lifecycle boundary): outcomes, retry counts,
+degradation logs, and samples are asserted byte-for-byte equal across
+depths, and a subprocess test repeats the quarantine contract on a
+2-device sharded slot pool."""
 import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -183,6 +193,130 @@ def test_deadline_expired_in_queue_never_admitted(tiny_dit):
     assert out[rid].status == "CANCELLED"
     assert out[rid].error.code == "deadline"
     assert eng.stats["admitted"] == 0        # never wasted a slot
+
+
+# ---------------------------------------------------------------------------
+# dispatch-ahead pipelining: faults at chunk boundaries with a two-deep
+# in-flight dispatch, and the 2-device sharded slot pool (subprocess)
+# ---------------------------------------------------------------------------
+def test_pipeline_nan_quarantine_matches_unpipelined(tiny_dit, sync_ref):
+    """pipeline=2 speculates the next chunk before the current one is read
+    back; a NaN quarantine resets the slot, so the stale in-flight
+    dispatch must be drained. Outcomes, retry counts, and samples are
+    byte-for-byte those of the unpipelined engine (and of the uninjected
+    sync run)."""
+    cfg, p = tiny_dit
+    outs = {}
+    for depth in (1, 2):
+        inj = FaultInjector([Fault(kind="nan", request_id=1, at_step=2)])
+        eng = AsyncServeEngine(p, cfg, DIF, microbatch=2,
+                               step_buckets=BUCKETS, chunk=2, max_retries=2,
+                               pipeline=depth, injector=inj)
+        outs[depth] = eng.serve(REQS)
+    for rid in outs[1]:
+        a, b = outs[1][rid], outs[2][rid]
+        assert a.status == b.status == "OK"
+        assert a.retries == b.retries
+        assert np.array_equal(a.sample, b.sample)
+        assert np.array_equal(b.sample, sync_ref[rid].sample), rid
+
+
+def test_pipeline_deadline_cancel_matches_unpipelined(tiny_dit, sync_ref):
+    """Deadline cancellation happens at a chunk boundary while a
+    speculative chunk is in flight — the cancel must drain it, and the
+    set of OK/CANCELLED outcomes must match pipeline=1 exactly."""
+    cfg, p = tiny_dit
+    outs = {}
+    for depth in (1, 2):
+        clk = FakeClock()
+        inj = FaultInjector([Fault(kind="stall", at_dispatch=2,
+                                   seconds=100.0)], clock=clk)
+        eng = AsyncServeEngine(p, cfg, DIF, microbatch=2,
+                               step_buckets=BUCKETS, chunk=2,
+                               deadline_s=10.0, clock=clk, pipeline=depth,
+                               injector=inj)
+        outs[depth] = eng.serve(REQS)
+    for rid in outs[1]:
+        a, b = outs[1][rid], outs[2][rid]
+        assert a.status == b.status
+        if a.status == "OK":
+            assert np.array_equal(a.sample, b.sample), rid
+        else:
+            assert b.error.code == "deadline"
+    assert outs[2][0].status == "OK"
+    assert np.array_equal(outs[2][0].sample, sync_ref[0].sample)
+
+
+def test_pipeline_degradation_ladder_matches_unpipelined(tiny_dit, w8a8):
+    """Dispatch faults fire while a speculative chunk is in flight: the
+    ladder drains the pipeline, degrades, rebuilds the executable, and
+    re-dispatches from committed slot state — same rungs, same reasons,
+    same samples as pipeline=1 (a failed dispatch stays side-effect
+    free at any depth)."""
+    cfg, p = tiny_dit
+    outs, reasons = {}, {}
+    for depth in (1, 2):
+        inj = FaultInjector([Fault(kind="dispatch_error", at_dispatch=1),
+                             Fault(kind="dispatch_error", at_dispatch=2)])
+        eng = AsyncServeEngine.from_artifact(p, w8a8, microbatch=2,
+                                             step_buckets=BUCKETS, chunk=2,
+                                             pipeline=depth, injector=inj)
+        outs[depth] = eng.serve(REQS)
+        reasons[depth] = [d["reason"] for d in eng.stats["degradations"]]
+        assert eng.ctx.kernel is False
+    assert reasons[1] == reasons[2] and len(reasons[2]) == 2
+    for rid in outs[1]:
+        assert outs[1][rid].status == outs[2][rid].status == "OK"
+        assert np.array_equal(outs[1][rid].sample, outs[2][rid].sample), rid
+
+
+_PIPELINE_DP_SCRIPT = r"""
+import jax, numpy as np
+assert jax.device_count() == 2, jax.device_count()
+from repro.diffusion import DiffusionCfg
+from repro.launch.mesh import make_serving_mesh
+from repro.models import DiTCfg, dit_init
+from repro.serving import (AsyncServeEngine, Fault, FaultInjector,
+                           GenRequest, ServeEngine)
+
+cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=32, n_layers=2,
+             n_heads=4, n_classes=8)
+p = dit_init(jax.random.PRNGKey(0), cfg)
+dif = DiffusionCfg(T=40, tgq_groups=4)
+reqs = [GenRequest(request_id=i, label=i % 8, steps=s, cfg_scale=1.5,
+                   seed=700 + i) for i, s in enumerate([4, 6, 4, 6])]
+sync = ServeEngine(p, cfg, dif, microbatch=2,
+                   step_buckets=(4, 6)).serve(reqs)
+inj = FaultInjector([Fault(kind="nan", request_id=1, at_step=2)])
+eng = AsyncServeEngine(p, cfg, dif, mesh=make_serving_mesh(), microbatch=4,
+                       step_buckets=(4, 6), chunk=2, pipeline=2,
+                       max_retries=2, injector=inj)
+out = eng.serve(reqs)
+ok = (all(o.status == "OK" for o in out.values())
+      and out[1].retries == 1
+      and all(np.array_equal(out[i].sample, sync[i].sample)
+              for i in range(4)))
+print("IDENTICAL" if ok else "MISMATCH")
+"""
+
+
+def test_pipeline_nan_quarantine_on_2dev_sharded_pool():
+    """The headline chaos invariant on the scaled-out engine: a 2-device
+    sharded slot pool with a two-deep dispatch pipeline quarantines one
+    poisoned slot and still delivers every sample bit-identical to the
+    single-device synchronous path (subprocess: this test process is
+    pinned to 1 CPU device by conftest)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _PIPELINE_DP_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "IDENTICAL" in r.stdout, (r.stdout, r.stderr[-2000:])
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,12 @@ Tolerance registry — the documented per-path numeric contract:
   - Flash vs composed: the online-rescale rounding contract, bounded by
     ``ref.flash_vs_composed_atol`` (dynamic in the pv pack and kv
     length).
+  - Vector-tgroup variants (per-row group vectors, the mixed-timestep
+    batched path): a CONSTANT group vector ``full((B,), g)`` is asserted
+    BIT-IDENTICAL to the scalar-prefetch sibling, mixed vectors conform
+    to the per-row ``*_vec_ref`` jitted oracles at the parent family's
+    tolerance, and the ops wrappers' batched dispatch is asserted
+    bit-identical to stacking per-slot scalar-tgroup calls.
 """
 import functools
 
@@ -48,6 +54,9 @@ from repro.kernels import (
     unpack_int4,
 )
 from repro.kernels import ops, ref
+from repro.kernels.flash_attn_mrq import flash_attn_mrq_vec
+from repro.kernels.int8_bmm import int8_bmm_pv_vec, int8_bmm_qk_vec
+from repro.kernels.softmax_mrq import softmax_mrq_codes_vec
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -76,6 +85,15 @@ TOLERANCES = {
     "attn_pv": 0.0,
     "flash": 1e-5,              # vs the tile-faithful jitted oracle
     "flash_packed_kv": 0.0,     # packed vs unpacked 4-bit flash
+    "vec_const": 0.0,           # constant group vector == scalar prefetch
+    "linear_vec": 0.0,          # mixed vector vs the per-row jitted oracle
+    "linear_mrq_vec": 0.0,
+    "int4_linear_vec": 1e-4,
+    "int4_linear_mrq_vec": 1e-4,
+    "attn_qk_vec": 0.0,
+    "attn_codes_vec": 0.0,
+    "attn_pv_vec": 0.0,
+    "flash_vec": 1e-5,
 }
 
 
@@ -342,6 +360,235 @@ def test_flash_mask_and_gqa_conformance(bname):
                     jnp.repeat(v, rep, axis=0), qk_pack, pv_pack, 1, scale,
                     bn, bits, packed_kv=packed)
     np.testing.assert_array_equal(np.asarray(shared), np.asarray(copied))
+
+
+# ---------------------------------------------------------------------------
+# vector-tgroup variants: per-row group vectors (mixed-timestep batches)
+# ---------------------------------------------------------------------------
+def _mix_rows(n, G, salt=0):
+    """Deterministic per-row group vector hitting every group in [0, G)."""
+    return jnp.asarray((np.arange(n) * 7 + salt) % G, jnp.int32)
+
+
+def _flash_vec(q, k, v, qk_pack, pv_pack, gv, scale, bn, bits,
+               packed_kv=False):
+    return flash_attn_mrq_vec(
+        q, k, v, qk_pack["s_q"], qk_pack["s_k"], qk_pack["scale"] * scale,
+        pv_pack["s1"], pv_pack["s_v"], pv_pack["scale1"], pv_pack["scale2"],
+        g_qk=gv, g_pv=gv, bits=bits, packed_kv=packed_kv, bn=bn,
+        interpret=True)
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_vector_tgroup_conformance(bname, shape):
+    """Vector-tgroup linears through the ops dispatch: a CONSTANT per-row
+    group vector ``full((M,), g)`` is bit-identical to the scalar-prefetch
+    sibling, and a MIXED vector matches the per-row jitted oracle."""
+    bits = BITS[bname]
+    M, K, N = shape
+    for G in GROUPS:
+        x, w, bias, qp = _uniform_linear_case(M, K, N, G, bits,
+                                              seed=M * K + N + G)
+        if bits == 4:
+            pack = ops.pack_int4_linear(qp, w)
+            fwd = functools.partial(ops.int4_linear, x, pack, bias=bias)
+            vec_ref = _jit_ref(ref.int4_matmul_fq_vec_ref,
+                               group_k=pack["group_k"])
+            args = (x, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
+                    pack["corr"], bias)
+            path = "int4_linear_vec"
+        else:
+            pack = ops.pack_int8_linear(qp, w)
+            fwd = functools.partial(ops.int8_linear, x, pack, bias=bias)
+            vec_ref = _jit_ref(ref.int8_matmul_fq_vec_ref, bits=bits)
+            args = (x, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
+                    pack["corr"], bias)
+            path = "linear_vec"
+        for g in _g_probes(G):
+            _assert_conforms("vec_const",
+                             fwd(tgroup=jnp.full((M,), g, jnp.int32)),
+                             fwd(tgroup=g))
+        if G > 1:
+            gv = _mix_rows(M, G)
+            _assert_conforms(path, fwd(tgroup=gv), vec_ref(*args, gv=gv))
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_mrq_vector_tgroup_conformance(bname, shape):
+    bits = BITS[bname]
+    M, K, N = shape
+    for G in GROUPS:
+        x, w, bias, qp = _mrq_linear_case(M, K, N, G, bits,
+                                          seed=M + K * N + G)
+        if bits == 4:
+            pack = ops.pack_int4_mrq_linear(qp, w)
+            fwd = functools.partial(ops.int4_linear_mrq, x, pack, bias=bias)
+            vec_ref = _jit_ref(ref.int4_matmul_mrq_fq_vec_ref,
+                               group_k=pack["group_k"])
+            args = (x, pack["wp"], pack["s_neg"], pack["s_pos"],
+                    pack["scale_neg"], pack["scale_pos"], bias)
+            path = "int4_linear_mrq_vec"
+        else:
+            pack = ops.pack_int8_mrq_linear(qp, w)
+            fwd = functools.partial(ops.int8_linear_mrq, x, pack, bias=bias)
+            vec_ref = _jit_ref(ref.int8_matmul_mrq_fq_vec_ref, bits=bits)
+            args = (x, pack["wq"], pack["s_neg"], pack["s_pos"],
+                    pack["scale_neg"], pack["scale_pos"], bias)
+            path = "linear_mrq_vec"
+        for g in _g_probes(G):
+            _assert_conforms("vec_const",
+                             fwd(tgroup=jnp.full((M,), g, jnp.int32)),
+                             fwd(tgroup=g))
+        if G > 1:
+            gv = _mix_rows(M, G)
+            _assert_conforms(path, fwd(tgroup=gv), vec_ref(*args, gv=gv))
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES, ids=lambda s: "x".join(map(
+    str, s[:4])))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_attention_composed_vector_tgroup_conformance(bname, shape):
+    """Composed trio with per-batch-row group vectors: constant vector ==
+    scalar prefetch bit-for-bit at every stage; mixed vectors match the
+    per-row jitted oracles."""
+    bits = BITS[bname]
+    B, Sq, Skv, D, _ = shape
+    for G in GROUPS:
+        qk_qp, pv_qp = _attn_qparams(G, bits, seed=sum(shape) + G)
+        qk_pack = ops.pack_int8_qk(qk_qp)
+        pv_pack = ops.pack_int8_pv(pv_qp)
+        q, k, v = _attn_case(B, Sq, Skv, D, seed=sum(shape) + G)
+        for g in _g_probes(G):
+            gv = jnp.full((B,), g, jnp.int32)
+            scores = int8_bmm_qk(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                 qk_pack["scale"], g=g, bits=bits,
+                                 interpret=True)
+            _assert_conforms(
+                "vec_const",
+                int8_bmm_qk_vec(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                qk_pack["scale"], gv=gv, bits=bits,
+                                interpret=True),
+                scores)
+            rows = jnp.broadcast_to(gv[:, None], scores.shape[:-1])
+            codes = softmax_mrq_codes(scores, pv_pack["s1"], g=g, bits=bits,
+                                      interpret=True)
+            _assert_conforms(
+                "vec_const",
+                softmax_mrq_codes_vec(scores, pv_pack["s1"], gv=rows,
+                                      bits=bits, interpret=True),
+                codes)
+            _assert_conforms(
+                "vec_const",
+                int8_bmm_pv_vec(codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                                pv_pack["scale2"], gv=gv, bits=bits,
+                                interpret=True),
+                int8_bmm_pv(codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                            pv_pack["scale2"], g=g, bits=bits,
+                            interpret=True))
+        if G > 1:
+            gv = _mix_rows(B, G)
+            scores = int8_bmm_qk_vec(q, k, qk_pack["s_q"], qk_pack["s_k"],
+                                     qk_pack["scale"], gv=gv, bits=bits,
+                                     interpret=True)
+            _assert_conforms(
+                "attn_qk_vec", scores,
+                _jit_ref(ref.int8_bmm_qk_vec_ref, bits=bits)(
+                    q, k, qk_pack["s_q"], qk_pack["s_k"], qk_pack["scale"],
+                    gv=gv))
+            rows = jnp.broadcast_to(gv[:, None], scores.shape[:-1])
+            codes = softmax_mrq_codes_vec(scores, pv_pack["s1"], gv=rows,
+                                          bits=bits, interpret=True)
+            assert codes.dtype == jnp.int8
+            _assert_conforms(
+                "attn_codes_vec", codes,
+                _jit_ref(ref.softmax_mrq_codes_vec_ref, bits=bits)(
+                    scores, pv_pack["s1"], gv=rows))
+            out = int8_bmm_pv_vec(codes, v, pv_pack["s_v"],
+                                  pv_pack["scale1"], pv_pack["scale2"],
+                                  gv=gv, bits=bits, interpret=True)
+            _assert_conforms(
+                "attn_pv_vec", out,
+                _jit_ref(ref.int8_bmm_pv_vec_ref, bits=bits)(
+                    codes, v, pv_pack["s_v"], pv_pack["scale1"],
+                    pv_pack["scale2"], gv=gv))
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES, ids=lambda s: "x".join(map(
+    str, s[:4])))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_flash_vector_tgroup_conformance(bname, shape):
+    bits = BITS[bname]
+    B, Sq, Skv, D, bn = shape
+    scale = D ** -0.5
+    for G in GROUPS:
+        qk_qp, pv_qp = _attn_qparams(G, bits, seed=sum(shape) + G)
+        qk_pack = ops.pack_int8_qk(qk_qp)
+        pv_pack = ops.pack_int8_pv(pv_qp)
+        q, k, v = _attn_case(B, Sq, Skv, D, seed=sum(shape) + 7 * G)
+        for g in _g_probes(G):
+            gv = jnp.full((B,), g, jnp.int32)
+            _assert_conforms(
+                "vec_const",
+                _flash_vec(q, k, v, qk_pack, pv_pack, gv, scale, bn, bits,
+                           packed_kv=(bits == 4)),
+                _flash(q, k, v, qk_pack, pv_pack, g, scale, bn, bits,
+                       packed_kv=(bits == 4)))
+        if G > 1:
+            gv = _mix_rows(B, G)
+            got = _flash_vec(q, k, v, qk_pack, pv_pack, gv, scale, bn, bits,
+                             packed_kv=(bits == 4))
+            want = _jit_ref(ref.flash_attn_mrq_vec_ref, bits=bits, bn=bn,
+                            scale=scale)(q, k, v, qk_pack, pv_pack,
+                                         g_qk=gv, g_pv=gv)
+            _assert_conforms("flash_vec", got, want)
+            if bits == 4:
+                unpacked = _flash_vec(q, k, v, qk_pack, pv_pack, gv, scale,
+                                      bn, bits, packed_kv=False)
+                _assert_conforms("flash_packed_kv", got, unpacked)
+
+
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_ops_vector_tgroup_matches_per_slot(bname):
+    """The ops-layer contract of the vector-tgroup batched path: ONE call
+    over a batch whose slots sit at different timestep groups is bit-
+    identical to stacking per-slot scalar-tgroup calls — for the linear
+    wrappers (3-D activations, group rows expanded per slot) and both
+    attention wrappers (slot-major B·Hk·G row expansion)."""
+    bits = BITS[bname]
+    G = 3
+    tg = jnp.asarray([2, 0, 1], jnp.int32)               # B = 3 slots
+    B, T, K, N = 3, 6, 32, 24
+    x2, w, bias, qp = _uniform_linear_case(B * T, K, N, G, bits, seed=13)
+    x3 = x2.reshape(B, T, K)
+    if bits == 4:
+        pack = ops.pack_int4_linear(qp, w)
+        lin = functools.partial(ops.int4_linear, pack=pack, bias=bias)
+    else:
+        pack = ops.pack_int8_linear(qp, w)
+        lin = functools.partial(ops.int8_linear, pack=pack, bias=bias)
+    got = lin(x3, tgroup=tg)
+    want = jnp.concatenate([lin(x3[b:b + 1], tgroup=int(tg[b]))
+                            for b in range(B)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    Sq, Skv, Hk, Gq, hd = 9, 13, 2, 2, 8
+    qk_qp, pv_qp = _attn_qparams(G, bits, seed=3)
+    qk_pack = ops.pack_int8_qk(qk_qp)
+    pv_pack = ops.pack_int8_pv(pv_qp)
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(kq, (B, Sq, Hk, Gq, hd)) * 1.5
+    k = jax.random.normal(kk, (B, Skv, Hk, hd)) * 1.5
+    v = jax.random.normal(kv, (B, Skv, Hk, hd))
+    for attn in (ops.int8_attention, ops.flash_attention):
+        got = attn(q, k, v, qk_pack, pv_pack, scale=hd ** -0.5, tgroup=tg)
+        want = jnp.concatenate([
+            attn(q[b:b + 1], k[b:b + 1], v[b:b + 1], qk_pack, pv_pack,
+                 scale=hd ** -0.5, tgroup=int(tg[b])) for b in range(B)])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------
