@@ -1,6 +1,6 @@
 .PHONY: verify verify-all kernel-micro bench-attn bench-flash bench-int4 \
 	bench-vector-tgq bench-serve serve-throughput serve-poisson chaos \
-	serve-async-smoke docs-check artifact-smoke
+	serve-async-smoke docs-check artifact-smoke autotune-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -64,6 +64,26 @@ serve-async-smoke:
 # docs link/anchor check + execution of the `# ci-smoke` quickstart lines
 docs-check:
 	python tools/check_docs.py --run README.md docs/*.md
+
+# recipe auto-search smoke: a 6-trial grid (w8a8/w4a4 x 2 group counts
+# + 2 mixed-precision bit budgets) on a short-trained tiny DiT, run as
+# the full kill/resume protocol — (1) killed after 3 newly-calibrated
+# trials, (2) resumed to completion with the frontier-endpoint asserts
+# (fastest point w4a4, a w8a8 point present, strict quality/throughput
+# trade-off), (3) re-run asserting EVERY trial cache-hits and the
+# frontier on disk is reproduced. Hard per-phase timeout: a hung sweep
+# must fail, not stall.
+AUTOTUNE_DIR ?= /tmp/tqdit-autotune-smoke
+AUTOTUNE_ARGS = --arch tiny --out $(AUTOTUNE_DIR) --bits w8a8,w4a4 \
+	--groups default,5 --budgets 5,6
+autotune-smoke:
+	rm -rf $(AUTOTUNE_DIR)
+	timeout 600 env PYTHONPATH=src python -m repro.launch.autotune \
+		$(AUTOTUNE_ARGS) --max-new-stage1 3
+	timeout 900 env PYTHONPATH=src python -m repro.launch.autotune \
+		$(AUTOTUNE_ARGS) --assert-endpoints
+	timeout 300 env PYTHONPATH=src python -m repro.launch.autotune \
+		$(AUTOTUNE_ARGS) --assert-endpoints --assert-resumed
 
 # the quantization-artifact lifecycle on CPU: quantize w8a8 -> save ->
 # load in a FRESH process (no calibration) -> serve 2 requests

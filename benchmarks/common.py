@@ -6,6 +6,12 @@
 - samples with each scheme and scores FD / sFD / IS-proxy + noise-MSE,
   the CPU-scale stand-ins for FID / sFID / IS (see repro.core.metrics).
 
+The eval stack itself (generate / score / noise_mse / eval_assets) lives
+in ``repro.quant.eval`` — a library module keyed by explicit
+(model config, seeds, sizes) so other consumers (``repro.autotune``)
+share its caches safely; the wrappers here just bind the bench model
+(``BENCH_DIT`` / ``DIF``) and the table protocol constants.
+
 All artifacts land under experiments/ so table benchmarks are re-runnable
 and individually cheap.
 """
@@ -22,12 +28,11 @@ import numpy as np
 
 from repro.core import build_dit_calibration, dit_loss_fn, run_ptq
 from repro.core.baselines import SCHEMES
-from repro.core.metrics import ClassProxy, FeatureNet, fd_score, sfd_score, \
-    inception_score_proxy
 from repro.data import LatentPipeline
-from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule, q_sample
+from repro.diffusion import DiffusionCfg, make_schedule, q_sample
 from repro.models import DiTCfg, dit_apply, dit_init
 from repro.optim import adamw, apply_updates, cosine_schedule
+from repro.quant import eval as qeval
 
 EXP = os.environ.get("REPRO_EXP_DIR",
                      os.path.join(os.path.dirname(__file__), "..",
@@ -46,8 +51,7 @@ GEN_BATCH = 64
 
 
 def pipeline() -> LatentPipeline:
-    return LatentPipeline(BENCH_DIT.img_size, BENCH_DIT.in_ch,
-                          BENCH_DIT.n_classes, seed=11, noise=0.3)
+    return qeval.make_pipeline(BENCH_DIT, pipe_seed=11, pipe_noise=0.3)
 
 
 def trained_dit(force: bool = False):
@@ -145,67 +149,23 @@ def capture_weights(params, cfg):
 
 def generate(params, cfg, ctx=None, steps=50, n=N_GEN, seed=123):
     """Sample n latents with the (possibly quantized) model."""
-    from repro.nn.ctx import FPContext
-    ctx = ctx or FPContext()
-    sched = make_schedule(DIF)
-    eps = lambda x, t, y, c: dit_apply(params, cfg, x, t, y, ctx=c)
-    outs, labels = [], []
-    key = jax.random.PRNGKey(seed)
-    for s in range(0, n, GEN_BATCH):
-        b = min(GEN_BATCH, n - s)
-        key, k1, k2 = jax.random.split(key, 3)
-        y = jax.random.randint(k1, (b,), 0, cfg.n_classes)
-        x = ddpm_sample(eps, DIF, sched, (b, cfg.img_size, cfg.img_size,
-                                          cfg.in_ch), y, k2, steps=steps,
-                        ctx=ctx)
-        outs.append(np.asarray(x))
-        labels.append(np.asarray(y))
-    return np.concatenate(outs), np.concatenate(labels)
-
-
-_EVAL_CACHE = {}
+    return qeval.generate(params, cfg, DIF, ctx=ctx, steps=steps, n=n,
+                          seed=seed, batch=GEN_BATCH)
 
 
 def eval_assets():
-    """(real latents, labels, feature net, class proxy) — cached."""
-    if "assets" not in _EVAL_CACHE:
-        pipe = pipeline()
-        real, labels = pipe.labeled_set(N_EVAL_REAL, jax.random.PRNGKey(999))
-        net = FeatureNet.make(int(np.prod(real.shape[1:])), seed=1234)
-        proxy = ClassProxy.fit(real, labels, BENCH_DIT.n_classes)
-        _EVAL_CACHE["assets"] = (real, labels, net, proxy)
-    return _EVAL_CACHE["assets"]
+    """(real latents, labels, feature net, class proxy) — cached by
+    ``repro.quant.eval`` under the full (config, seeds, size) key."""
+    return qeval.eval_assets(BENCH_DIT, n_real=N_EVAL_REAL)
 
 
 def score(gen: np.ndarray) -> dict:
-    real, _, net, proxy = eval_assets()
-    return {
-        "FD": round(fd_score(real, gen, net), 3),
-        "sFD": round(sfd_score(real, gen), 3),
-        "IS*": round(inception_score_proxy(gen, proxy), 3),
-    }
+    return qeval.score(gen, BENCH_DIT, n_real=N_EVAL_REAL)
 
 
 def noise_mse(params, cfg, ctx, n=128, seed=55) -> float:
     """Quantized-vs-FP noise prediction MSE across timestep groups."""
-    sched = make_schedule(DIF)
-    pipe = pipeline()
-    key = jax.random.PRNGKey(seed)
-    tot = 0.0
-    cnt = 0
-    for g in range(DIF.tgq_groups):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        x0, y = pipe.sample(n // DIF.tgq_groups, k1)
-        t = jax.random.randint(k2, (x0.shape[0],),
-                               g * DIF.T // DIF.tgq_groups,
-                               (g + 1) * DIF.T // DIF.tgq_groups)
-        noise = jax.random.normal(k3, x0.shape)
-        xt = q_sample(sched, x0, t, noise)
-        fp = dit_apply(params, cfg, xt, t, y)
-        qt = dit_apply(params, cfg, xt, t, y, ctx=ctx.with_tgroup(g))
-        tot += float(jnp.mean((fp - qt) ** 2))
-        cnt += 1
-    return tot / cnt
+    return qeval.noise_mse(params, cfg, DIF, ctx, n=n, seed=seed)
 
 
 def emit(table: str, rows: list) -> None:

@@ -219,6 +219,45 @@ def modeled_async_slot_step(cfg: DiTCfg, b_local: int, path: str,
 
 
 # ---------------------------------------------------------------------------
+# recipe-level entrypoint (importable; the autotune throughput objective)
+# ---------------------------------------------------------------------------
+def recipe_model_path(recipe) -> str:
+    """The roofline path a ``QuantRecipe`` serves on.
+
+    w8a8 and w6a6 both ride the fused int8 kernel family (byte codes —
+    only the clip range differs, so the modeled traffic is identical);
+    w4a4 rides the packed-int4 family. The recipe's ``attn_impl`` picks
+    flash vs the composed three-kernel attention model at 8/6 bits
+    (w4a4 always streams packed-kv flash)."""
+    if recipe.bits == "w4a4":
+        return "int4"
+    if recipe.attn_impl == "composed":
+        return "int8_composed"
+    return "int8"
+
+
+def modeled_goodput(recipe, *, cfg: DiTCfg = XL2, n_dev: int = N_DEV,
+                    b_local: int = 1, steps: int = 100) -> Dict[str, float]:
+    """Modeled serving throughput of one ``QuantRecipe`` — a pure
+    function of the recipe and the serving point, importable without
+    executing anything (``repro.autotune.evaluate`` charges every trial
+    through it, so the Pareto frontier's throughput axis and this
+    benchmark's tables come from ONE roofline).
+
+    Returns closed-loop ``req_per_s`` / ``ms_per_step`` (exactly
+    :func:`modeled_requests_per_sec` at ``batch = b_local * n_dev``) plus
+    the async continuous-batching cost per slot-step and the path name
+    charged."""
+    path = recipe_model_path(recipe)
+    out = dict(modeled_requests_per_sec(cfg, b_local * n_dev, n_dev,
+                                        steps, path))
+    out["path"] = path
+    out["s_per_slot_step_async"] = modeled_async_slot_step(cfg, b_local,
+                                                           path)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Poisson-arrival policy simulation (pure python; no jax)
 # ---------------------------------------------------------------------------
 def poisson_trace(n_req: int, rate_rps: float, buckets: Tuple[int, ...],

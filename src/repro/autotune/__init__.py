@@ -1,0 +1,37 @@
+"""repro.autotune — resumable recipe auto-search over the quantization
+artifact API, emitting the quality-vs-throughput Pareto frontier.
+
+    from repro.autotune import SearchSpace, EvalConfig, run_autotune
+
+    space = SearchSpace(bits=("w8a8", "w6a6", "w4a4"),
+                        tgq_groups=(None, 5), bit_budgets=(6.0,))
+    result = run_autotune(params, model_cfg, dif_cfg, space,
+                          EvalConfig(), "experiments/autotune")
+    for p in result.frontier:
+        print(p["label"], p["req_per_s"], p["FD"], p["artifact"])
+
+Pieces (see ``docs/autotune.md``): ``space`` expands the declarative
+axes into content-hash-keyed trials; ``evaluate`` is the two-stage
+scorer (cheap noise-MSE gate, then FD/sFD/IS-proxy for survivors) plus
+the AdaTSQ-style per-timestep-group bit allocator and the roofline
+throughput model; ``driver`` runs the sweep against an append-only
+JSONL ledger so a killed sweep resumes with completed trials as cache
+hits; ``pareto`` computes the frontier; ``report`` renders it.
+CLI: ``python -m repro.launch.autotune``.
+"""
+from repro.autotune.driver import AutotuneResult, load_trial_artifact, \
+    read_ledger, run as run_autotune
+from repro.autotune.evaluate import EvalConfig, allocate_bits, \
+    mean_bits, mixed_throughput, select_survivors, sensitivity_by_bits, \
+    uniform_throughput
+from repro.autotune.pareto import dominates, is_strict_tradeoff, \
+    pareto_frontier
+from repro.autotune.space import SearchSpace, Trial, expand
+
+__all__ = [
+    "AutotuneResult", "EvalConfig", "SearchSpace", "Trial",
+    "allocate_bits", "dominates", "expand", "is_strict_tradeoff",
+    "load_trial_artifact", "mean_bits", "mixed_throughput",
+    "pareto_frontier", "read_ledger", "run_autotune", "select_survivors",
+    "sensitivity_by_bits", "uniform_throughput",
+]

@@ -1,0 +1,236 @@
+"""Recipe auto-search launcher — a thin CLI over ``repro.autotune``.
+
+Expands a declarative search space (bits x method x TGQ group counts,
+plus AdaTSQ-style mixed-precision mean-bit budgets), runs every trial
+through ``quantize()`` and the two-stage evaluator, and emits the
+quality-vs-throughput Pareto frontier: ``BENCH_autotune.json`` +
+``report.md`` + one saved ``QuantArtifact`` per trial under ``--out``.
+
+The sweep is RESUMABLE: trials are keyed by recipe content hash in
+``<out>/ledger.jsonl``, so re-running the same command after a kill
+cache-hits every completed trial (``--assert-resumed`` verifies that:
+zero recomputed trials and a frontier identical to the one already on
+disk). ``--max-new-stage1 N`` stops the run after N newly-calibrated
+trials — the deterministic stand-in for ``kill -9`` in CI.
+
+Usage (the ``make autotune-smoke`` protocol):
+  PYTHONPATH=src python -m repro.launch.autotune --arch tiny --out /tmp/at \
+      --bits w8a8,w4a4 --groups default,5 --budgets 5,6 --max-new-stage1 3
+  PYTHONPATH=src python -m repro.launch.autotune --arch tiny --out /tmp/at \
+      --bits w8a8,w4a4 --groups default,5 --budgets 5,6 --assert-endpoints
+  PYTHONPATH=src python -m repro.launch.autotune --arch tiny --out /tmp/at \
+      --bits w8a8,w4a4 --groups default,5 --budgets 5,6 \
+      --assert-endpoints --assert-resumed
+
+``--arch bench`` sweeps the table-benchmark DiT from
+``benchmarks/common.py`` (cached training checkpoint, honors
+REPRO_DIT_STEPS); ``--arch tiny`` trains (once, cached under
+experiments/) a 2-layer DiT small enough for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import sys
+import time
+
+
+def tiny_dit(train_steps: int, exp_dir: str):
+    """A 2-layer DiT trained briefly on the synthetic latents — small
+    enough for the CI smoke but REAL enough that quantization error
+    orders FD the right way (an untrained net scores every context the
+    same). Cached like the bench checkpoint."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.diffusion import make_schedule, q_sample
+    from repro.models import DiTCfg, dit_apply, dit_init
+    from repro.optim import adamw, apply_updates, cosine_schedule
+    from repro.quant import eval as qeval
+
+    cfg = DiTCfg(img_size=8, in_ch=4, patch=2, d_model=64, n_layers=2,
+                 n_heads=4, n_classes=8)
+    from repro.diffusion import DiffusionCfg
+    dif = DiffusionCfg(T=1000, tgq_groups=10)
+    os.makedirs(exp_dir, exist_ok=True)
+    path = os.path.join(exp_dir, f"dit_tiny_{train_steps}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return cfg, dif, pickle.load(f)
+
+    key = jax.random.PRNGKey(0)
+    params = dit_init(key, cfg)
+    sched = make_schedule(dif)
+    pipe = qeval.make_pipeline(cfg)
+    opt = adamw(cosine_schedule(2e-3, 20, train_steps), weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, o, x0, t, y, noise):
+        def loss_fn(p):
+            xt = q_sample(sched, x0, t, noise)
+            eps = dit_apply(p, cfg, xt, t, y)
+            return jnp.mean(jnp.square(eps - noise))
+        l, g = jax.value_and_grad(loss_fn)(p)
+        u, o = opt.update(g, o, p)
+        return l, apply_updates(p, u), o
+
+    t0 = time.time()
+    for i in range(train_steps):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x0, y = pipe.sample(32, k1)
+        t = jax.random.randint(k2, (32,), 0, dif.T)
+        noise = jax.random.normal(k3, x0.shape)
+        l, params, opt_state = step(params, opt_state, x0, t, y, noise)
+        if i % 100 == 0 or i == train_steps - 1:
+            print(f"  [tiny-train] step {i} loss {float(l):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    host = jax.tree.map(np.asarray, params)
+    with open(path, "wb") as f:
+        pickle.dump(host, f)
+    return cfg, dif, host
+
+
+def _parse_groups(s: str):
+    out = []
+    for tok in s.split(","):
+        tok = tok.strip()
+        out.append(None if tok in ("default", "none", "") else int(tok))
+    return tuple(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Recipe auto-search emitting the quality-vs-"
+                    "throughput Pareto frontier (resumable).")
+    ap.add_argument("--out", required=True,
+                    help="sweep directory (ledger + artifacts + report)")
+    ap.add_argument("--arch", choices=("bench", "tiny"), default="bench")
+    ap.add_argument("--train-steps", type=int, default=200,
+                    help="tiny arch: training steps for the cached model")
+    ap.add_argument("--bits", default="w8a8,w6a6,w4a4")
+    ap.add_argument("--methods", default="range")
+    ap.add_argument("--groups", default="default",
+                    help="comma list of TGQ group counts; 'default' "
+                         "inherits the DiffusionCfg's")
+    ap.add_argument("--budgets", default="",
+                    help="comma list of mean-bit budgets for AdaTSQ-style "
+                         "mixed trials (empty: uniform only)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=12,
+                    help="stage-2 sampling steps")
+    ap.add_argument("--n-gen", type=int, default=64)
+    ap.add_argument("--gen-batch", type=int, default=32)
+    ap.add_argument("--n-real", type=int, default=512)
+    ap.add_argument("--n-mse", type=int, default=64)
+    ap.add_argument("--prune-factor", type=float, default=50.0)
+    ap.add_argument("--keep-at-least", type=int, default=2)
+    ap.add_argument("--max-new-stage1", type=int, default=None,
+                    help="stop after N newly-calibrated trials (the "
+                         "deterministic kill for resume testing)")
+    ap.add_argument("--assert-endpoints", action="store_true",
+                    help="fail unless the frontier is non-empty, shows a "
+                         "strict quality/throughput trade-off, its "
+                         "fastest point is w4a4 and it contains a w8a8 "
+                         "point")
+    ap.add_argument("--assert-resumed", action="store_true",
+                    help="fail unless this run recomputed nothing and "
+                         "reproduced the frontier already on disk")
+    args = ap.parse_args()
+
+    from repro.autotune import EvalConfig, SearchSpace, expand, \
+        load_trial_artifact, run_autotune
+
+    exp = os.environ.get(
+        "REPRO_EXP_DIR",
+        os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "experiments"))
+    if args.arch == "bench":
+        from benchmarks.common import DIF, trained_dit
+        model_cfg, params = trained_dit()
+        dif_cfg = DIF
+    else:
+        model_cfg, dif_cfg, params = tiny_dit(args.train_steps, exp)
+
+    space = SearchSpace(
+        bits=tuple(b.strip() for b in args.bits.split(",") if b.strip()),
+        methods=tuple(m.strip() for m in args.methods.split(",")
+                      if m.strip()),
+        tgq_groups=_parse_groups(args.groups),
+        bit_budgets=tuple(float(b) for b in args.budgets.split(",")
+                          if b.strip()),
+        seed=args.seed)
+    ecfg = EvalConfig(
+        steps=args.steps, n_gen=args.n_gen, gen_batch=args.gen_batch,
+        n_real=args.n_real, n_mse=args.n_mse,
+        prune_factor=args.prune_factor, keep_at_least=args.keep_at_least)
+
+    trials = expand(space)
+    print(f"[autotune] {len(trials)} trials -> {args.out}", flush=True)
+
+    bench_path = os.path.join(args.out, "BENCH_autotune.json")
+    prior_frontier = None
+    if args.assert_resumed and os.path.exists(bench_path):
+        with open(bench_path) as f:
+            prior_frontier = json.load(f)["frontier"]
+
+    result = run_autotune(params, model_cfg, dif_cfg, space, ecfg,
+                          args.out, max_new_stage1=args.max_new_stage1)
+    if result.stopped_early:
+        print(f"[autotune] stopped early: {result.recomputed} new trials "
+              f"calibrated, ledger at {args.out}/ledger.jsonl resumes "
+              "them", flush=True)
+        return
+
+    print(f"[autotune] done: {len(result.records)} trials "
+          f"({result.pruned} pruned, {result.cache_hits} cache hits, "
+          f"{result.recomputed} newly calibrated)", flush=True)
+    for p in result.frontier:
+        print(f"  frontier: {p['label']:<14} req/s={p['req_per_s']:9.2f} "
+              f"FD={p['FD']:8.3f} -> {p['artifact']}", flush=True)
+
+    def fail(msg: str) -> None:
+        print(f"[autotune] ASSERTION FAILED: {msg}", file=sys.stderr,
+              flush=True)
+        raise SystemExit(1)
+
+    # every frontier artifact must actually load (acceptance: the frontier
+    # is a set of DEPLOYABLE artifacts, not just scores)
+    by_key = {r["key"]: r for r in result.records}
+    for p in result.frontier:
+        art = load_trial_artifact(args.out, by_key[p["key"]])
+        if art is None:
+            fail(f"frontier artifact {p['artifact']} failed to load")
+
+    if args.assert_endpoints:
+        if not result.frontier:
+            fail("empty frontier")
+        if not result.strict_tradeoff:
+            fail("frontier is not a strict quality-vs-throughput "
+                 "trade-off")
+        fastest = result.frontier[0]
+        if fastest.get("bits") != "w4a4":
+            fail(f"fastest frontier point is {fastest['label']}, "
+                 "expected a w4a4 recipe")
+        if not any(p.get("bits") == "w8a8" for p in result.frontier):
+            fail("no w8a8 (max-quality) point on the frontier")
+        print("[autotune] endpoint asserts passed", flush=True)
+
+    if args.assert_resumed:
+        if result.recomputed != 0:
+            fail(f"resume recomputed {result.recomputed} trials")
+        if result.cache_hits != len(trials):
+            fail(f"resume cache-hit {result.cache_hits}/{len(trials)} "
+                 "trials")
+        if prior_frontier is not None and prior_frontier != result.frontier:
+            fail("resumed frontier differs from the one on disk")
+        print("[autotune] resume asserts passed "
+              f"({result.cache_hits} cache hits, 0 recomputed)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -148,6 +148,10 @@ def quantize(params, model_cfg, dif_cfg, recipe: QuantRecipe,
         "tgq_group_boundaries": [list(b) for b in group_boundaries(
             dif_cfg.T, dif_cfg.tgq_groups)],
         "calib": calib_stats,
+        # content identity of the recipe itself — the autotune ledger key,
+        # recorded so a loaded artifact names the exact configuration
+        # that produced it without re-deriving the hash
+        "recipe_hash": recipe.content_hash(),
         "provenance": dict(provenance or {}),
     }
     return QuantArtifact(qparams=qparams, recipe=recipe, meta=meta)

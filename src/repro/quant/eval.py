@@ -1,0 +1,247 @@
+"""Quality-evaluation stack for quantized DiT artifacts — the library
+behind the table benchmarks and the autotune driver.
+
+Promoted out of ``benchmarks/common.py`` so that non-script consumers
+(``repro.autotune``) can score a ``QuantArtifact``'s context without
+importing a benchmark module that hard-codes one model. Everything here
+is parameterized by the (frozen, hashable) model / diffusion configs and
+the seeds that define the evaluation protocol:
+
+- :func:`eval_assets` — real latents + feature net + class proxy for the
+  FD / sFD / IS-proxy metrics (`repro.core.metrics`), cached under an
+  EXPLICIT key of every input that shapes the assets. The predecessor
+  cached under the bare string ``"assets"``, so two callers with
+  different model configs or seeds silently shared stale latents and
+  feature nets — the regression ``tests/test_eval_lib.py`` pins the fix.
+- :func:`generate` — sample n latents through the (possibly quantized)
+  model with the repo's respaced DDPM sampler.
+- :func:`generate_grouped` — the same chain with a PER-TIMESTEP-GROUP
+  context (mixed-precision evaluation: AdaTSQ-style bit allocations run
+  group g's denoising steps under group g's quantization). With a
+  constant context map it matches :func:`generate` to float tolerance
+  (same arithmetic, python loop instead of ``lax.scan`` — the same
+  1e-4 bound the repo's sampler-equivalence test uses), the property
+  that makes mixed-allocation FD scores comparable to the uniform
+  trials' (asserted in ``tests/test_eval_lib.py``).
+- :func:`score` — FD / sFD / IS* against the cached assets.
+- :func:`noise_mse` / :func:`noise_mse_by_group` — quantized-vs-FP noise
+  prediction MSE, overall or per TGQ group. The per-group vector is the
+  sensitivity signal the autotune bit allocator consumes, and the cheap
+  stage-1 gate of its two-stage evaluator.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import ClassProxy, FeatureNet, fd_score, sfd_score, \
+    inception_score_proxy
+from repro.data import LatentPipeline
+from repro.diffusion import DiffusionCfg, ddpm_sample, make_schedule, \
+    q_sample
+from repro.diffusion.ddpm import respaced_schedule, respaced_timesteps, \
+    tgroup_of
+from repro.models import dit_apply
+from repro.nn.ctx import FPContext
+
+# a per-group context spec: one context for every group, or an explicit
+# group -> context mapping (dict keyed by int, or a G-long sequence)
+CtxOfGroup = Union[Dict[int, object], List[object], Tuple[object, ...]]
+
+
+def make_pipeline(model_cfg, *, pipe_seed: int = 11,
+                  pipe_noise: float = 0.3) -> LatentPipeline:
+    """The synthetic latent data source matching ``model_cfg``'s shape."""
+    return LatentPipeline(model_cfg.img_size, model_cfg.in_ch,
+                          model_cfg.n_classes, seed=pipe_seed,
+                          noise=pipe_noise)
+
+
+# ---------------------------------------------------------------------------
+# eval assets (real set + feature nets), cached under an explicit key
+# ---------------------------------------------------------------------------
+_ASSET_CACHE: Dict[tuple, tuple] = {}
+
+
+def asset_cache_key(model_cfg, n_real: int, data_seed: int, net_seed: int,
+                    pipe_seed: int, pipe_noise: float) -> tuple:
+    """The full identity of one assets build. ``model_cfg`` is a frozen
+    dataclass (hashable); every other field is a scalar. Two calls share
+    a cache entry iff they would have built identical assets."""
+    return (model_cfg, int(n_real), int(data_seed), int(net_seed),
+            int(pipe_seed), float(pipe_noise))
+
+
+def eval_assets(model_cfg, *, n_real: int = 1024, data_seed: int = 999,
+                net_seed: int = 1234, pipe_seed: int = 11,
+                pipe_noise: float = 0.3):
+    """(real latents, labels, feature net, class proxy) — cached per
+    :func:`asset_cache_key`."""
+    key = asset_cache_key(model_cfg, n_real, data_seed, net_seed,
+                          pipe_seed, pipe_noise)
+    if key not in _ASSET_CACHE:
+        pipe = make_pipeline(model_cfg, pipe_seed=pipe_seed,
+                             pipe_noise=pipe_noise)
+        real, labels = pipe.labeled_set(n_real, jax.random.PRNGKey(data_seed))
+        net = FeatureNet.make(int(np.prod(real.shape[1:])), seed=net_seed)
+        proxy = ClassProxy.fit(real, labels, model_cfg.n_classes)
+        _ASSET_CACHE[key] = (real, labels, net, proxy)
+    return _ASSET_CACHE[key]
+
+
+def clear_eval_caches() -> None:
+    _ASSET_CACHE.clear()
+
+
+def score(gen: np.ndarray, model_cfg, *, n_real: int = 1024,
+          data_seed: int = 999, net_seed: int = 1234, pipe_seed: int = 11,
+          pipe_noise: float = 0.3) -> dict:
+    """FD / sFD / IS* of ``gen`` against the cached real assets."""
+    real, _, net, proxy = eval_assets(
+        model_cfg, n_real=n_real, data_seed=data_seed, net_seed=net_seed,
+        pipe_seed=pipe_seed, pipe_noise=pipe_noise)
+    return {
+        "FD": round(fd_score(real, gen, net), 3),
+        "sFD": round(sfd_score(real, gen), 3),
+        "IS*": round(inception_score_proxy(gen, proxy), 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sampling through a (possibly quantized) model
+# ---------------------------------------------------------------------------
+def _eps_fn(params, model_cfg) -> Callable:
+    return lambda x, t, y, c: dit_apply(params, model_cfg, x, t, y, ctx=c)
+
+
+def generate(params, model_cfg, dif_cfg: DiffusionCfg, *, ctx=None,
+             steps: int = 50, n: int = 128, seed: int = 123,
+             batch: int = 64, sched=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample ``n`` latents (+ labels) with the respaced DDPM sampler."""
+    ctx = ctx or FPContext()
+    sched = sched if sched is not None else make_schedule(dif_cfg)
+    eps = _eps_fn(params, model_cfg)
+    outs, labels = [], []
+    key = jax.random.PRNGKey(seed)
+    for s in range(0, n, batch):
+        b = min(batch, n - s)
+        key, k1, k2 = jax.random.split(key, 3)
+        y = jax.random.randint(k1, (b,), 0, model_cfg.n_classes)
+        x = ddpm_sample(eps, dif_cfg, sched,
+                        (b, model_cfg.img_size, model_cfg.img_size,
+                         model_cfg.in_ch), y, k2, steps=steps, ctx=ctx)
+        outs.append(np.asarray(x))
+        labels.append(np.asarray(y))
+    return np.concatenate(outs), np.concatenate(labels)
+
+
+def _ctx_at(ctx_of_group: CtxOfGroup, g: int):
+    if isinstance(ctx_of_group, dict):
+        return ctx_of_group[g]
+    return ctx_of_group[g]
+
+
+def _sample_grouped(eps_fn, dif_cfg: DiffusionCfg, sched, shape, y, key,
+                    steps: int, ctx_of_group: CtxOfGroup):
+    """``ddpm_sample`` unrolled in python with a PER-GROUP context.
+
+    The timestep group of every respaced step is static (the chain is
+    fixed up front), so each step can run under the context its group's
+    bit-width dictates — the inference side of a per-timestep-group bit
+    allocation. Key splitting and update arithmetic mirror
+    ``ddpm_sample`` exactly, so a constant ``ctx_of_group`` reproduces
+    it to the scan-vs-python-loop float tolerance (1e-4, the same bound
+    ``tests/test_diffusion.py`` holds ``ddpm_sample_python`` to;
+    asserted in ``tests/test_eval_lib.py``)."""
+    use_ts = respaced_timesteps(dif_cfg.T, steps)         # descending
+    rsched = respaced_schedule(sched, use_ts)
+    n = len(use_ts)
+
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape, jnp.float32)
+    for i in range(n):
+        key, kn = jax.random.split(key)
+        t_orig = int(use_ts[i])
+        idx = n - 1 - i                                   # respaced index
+        tb = jnp.full((shape[0],), t_orig, jnp.int32)
+        g = int(tgroup_of(jnp.int32(t_orig), dif_cfg.T, dif_cfg.tgq_groups))
+        ctx = _ctx_at(ctx_of_group, g)
+        eps = eps_fn(x, tb, y, ctx.with_tgroup(g))
+
+        abar = rsched["abar"][idx]
+        abar_prev = rsched["abar_prev"][idx]
+        beta = rsched["betas"][idx]
+        alpha = rsched["alphas"][idx]
+        x0 = (x - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        mean = (jnp.sqrt(abar_prev) * beta / (1 - abar) * x0
+                + jnp.sqrt(alpha) * (1 - abar_prev) / (1 - abar) * x)
+        noise = jax.random.normal(kn, shape, jnp.float32)
+        nonzero = jnp.float32(1.0 if idx > 0 else 0.0)
+        x = mean + nonzero * jnp.sqrt(rsched["post_var"][idx]) * noise
+    return x
+
+
+def generate_grouped(params, model_cfg, dif_cfg: DiffusionCfg,
+                     ctx_of_group: CtxOfGroup, *, steps: int = 50,
+                     n: int = 128, seed: int = 123, batch: int = 64,
+                     sched=None) -> Tuple[np.ndarray, np.ndarray]:
+    """:func:`generate` with a per-TGQ-group context (mixed precision)."""
+    sched = sched if sched is not None else make_schedule(dif_cfg)
+    eps = _eps_fn(params, model_cfg)
+    outs, labels = [], []
+    key = jax.random.PRNGKey(seed)
+    for s in range(0, n, batch):
+        b = min(batch, n - s)
+        key, k1, k2 = jax.random.split(key, 3)
+        y = jax.random.randint(k1, (b,), 0, model_cfg.n_classes)
+        x = _sample_grouped(eps, dif_cfg, sched,
+                            (b, model_cfg.img_size, model_cfg.img_size,
+                             model_cfg.in_ch), y, k2, steps, ctx_of_group)
+        outs.append(np.asarray(x))
+        labels.append(np.asarray(y))
+    return np.concatenate(outs), np.concatenate(labels)
+
+
+# ---------------------------------------------------------------------------
+# noise-prediction MSE (the cheap stage-1 signal + sensitivity vector)
+# ---------------------------------------------------------------------------
+def noise_mse_by_group(params, model_cfg, dif_cfg: DiffusionCfg, ctx, *,
+                       n: int = 128, seed: int = 55, pipe_seed: int = 11,
+                       pipe_noise: float = 0.3) -> List[float]:
+    """Quantized-vs-FP noise prediction MSE, one value per TGQ group.
+
+    ``ctx`` may also be a per-group context spec (see
+    :data:`CtxOfGroup`) — group g's MSE is then measured under group g's
+    context, which is how a mixed bit allocation is scored."""
+    sched = make_schedule(dif_cfg)
+    pipe = make_pipeline(model_cfg, pipe_seed=pipe_seed,
+                         pipe_noise=pipe_noise)
+    key = jax.random.PRNGKey(seed)
+    G = dif_cfg.tgq_groups
+    out = []
+    for g in range(G):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x0, y = pipe.sample(max(n // G, 1), k1)
+        t = jax.random.randint(k2, (x0.shape[0],), g * dif_cfg.T // G,
+                               (g + 1) * dif_cfg.T // G)
+        noise = jax.random.normal(k3, x0.shape)
+        xt = q_sample(sched, x0, t, noise)
+        gctx = _ctx_at(ctx, g) if isinstance(ctx, (dict, list, tuple)) \
+            else ctx
+        fp = dit_apply(params, model_cfg, xt, t, y)
+        qt = dit_apply(params, model_cfg, xt, t, y, ctx=gctx.with_tgroup(g))
+        out.append(float(jnp.mean((fp - qt) ** 2)))
+    return out
+
+
+def noise_mse(params, model_cfg, dif_cfg: DiffusionCfg, ctx, *,
+              n: int = 128, seed: int = 55, pipe_seed: int = 11,
+              pipe_noise: float = 0.3) -> float:
+    """Mean of :func:`noise_mse_by_group` — the scalar the quality tables
+    report and the autotune stage-1 gate thresholds."""
+    return float(np.mean(noise_mse_by_group(
+        params, model_cfg, dif_cfg, ctx, n=n, seed=seed,
+        pipe_seed=pipe_seed, pipe_noise=pipe_noise)))

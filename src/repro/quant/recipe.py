@@ -21,6 +21,8 @@ family with per-K-group weight scales.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Optional, Tuple
 
 BITS = {"w8a8": (8, 8), "w6a6": (6, 6), "w4a4": (4, 4)}
@@ -148,3 +150,27 @@ class QuantRecipe:
         """{field: (self_value, other_value)} for every differing field."""
         a, b = self.to_dict(), other.to_dict()
         return {k: (a[k], b[k]) for k in a if a[k] != b[k]}
+
+    # -- content identity ---------------------------------------------------
+    def canonical_json(self) -> str:
+        """The recipe as canonical JSON: keys sorted, no whitespace.
+        Field *declaration* order never leaks in, so the serialization —
+        and therefore :meth:`content_hash` — is stable across dataclass
+        reorderings and across dicts built in any key order."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def content_hash(self) -> str:
+        """Stable content digest of the frozen recipe (sha256 of
+        :meth:`canonical_json`, first 16 hex chars).
+
+        Two recipes hash equal iff they are field-for-field equal; any
+        single field change changes the hash (tested exhaustively in
+        ``tests/test_quant_api.py``). This is the identity
+        ``repro.autotune`` keys its trial ledger by — a resumed sweep
+        recognizes a completed trial by recipe content, not by position
+        in the grid — and ``quantize()`` records it under
+        ``meta["recipe_hash"]`` so a saved artifact names the exact
+        configuration that produced it."""
+        return hashlib.sha256(
+            self.canonical_json().encode()).hexdigest()[:16]

@@ -1,0 +1,363 @@
+"""The recipe auto-search subsystem (`repro.autotune`).
+
+Three layers, in dependency order:
+
+1. Pure logic: Pareto dominance properties (no frontier point dominated,
+   every excluded point dominated, permutation-invariant output — also
+   hypothesis-fuzzed), the greedy bit allocator's invariants (budget
+   respected, endpoints exact, sensitivity-targeted, deterministic) and
+   the stage-1 gate (fast endpoint always advances).
+2. Space expansion: content-hash dedupe, the range-method knob rule (no
+   trial a ``quantize()`` guard would reject), mixed-trial component
+   ordering, stable keys across field ordering.
+3. The driver's resume contract on a REAL (tiny) sweep: killed after N
+   trials -> rerun ledgers exactly N stage-1 cache hits and recomputes
+   only the rest -> a third run is a 100% cache hit reproducing the
+   identical frontier, with every frontier artifact loadable; a
+   truncated trailing ledger line is tolerated; resuming under a
+   different space or eval protocol fails fast.
+"""
+import itertools
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    EvalConfig, SearchSpace, allocate_bits, dominates, expand,
+    is_strict_tradeoff, load_trial_artifact, mean_bits, pareto_frontier,
+    read_ledger, run_autotune, select_survivors,
+)
+from repro.autotune.driver import run as run_driver
+from repro.diffusion import DiffusionCfg
+from repro.quant import QuantArtifact, QuantRecipe
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # optional dep
+    HAVE_HYPOTHESIS = False
+
+MAXMIN = dict(maximize=("req_per_s",), minimize=("FD",))
+DIF = DiffusionCfg(T=40, tgq_groups=4)
+
+
+def _pts(pairs):
+    return [{"key": f"p{i}", "req_per_s": r, "FD": f}
+            for i, (r, f) in enumerate(pairs)]
+
+
+# ---------------------------------------------------------------------------
+# pareto: dominance + frontier properties
+# ---------------------------------------------------------------------------
+def test_dominates_basics():
+    a, b = _pts([(10, 1.0), (5, 2.0)])
+    assert dominates(a, b, **MAXMIN)
+    assert not dominates(b, a, **MAXMIN)
+    assert not dominates(a, dict(a, key="x"), **MAXMIN)   # equal: no
+    # incomparable: each wins one axis
+    c, d = _pts([(10, 2.0), (5, 1.0)])
+    assert not dominates(c, d, **MAXMIN)
+    assert not dominates(d, c, **MAXMIN)
+
+
+def _check_frontier_properties(points):
+    front = pareto_frontier(points)
+    keys = {p["key"] for p in front}
+    for p in front:                     # no frontier point dominated
+        assert not any(dominates(q, p, **MAXMIN) for q in points)
+    for p in points:                    # every excluded point dominated
+        if p["key"] not in keys:
+            dominated = any(dominates(q, p, **MAXMIN) for q in points)
+            duplicate = any(q["key"] != p["key"]
+                            and q["req_per_s"] == p["req_per_s"]
+                            and q["FD"] == p["FD"] for q in front)
+            assert dominated or duplicate
+    # sorted fastest-first, strictly improving quality
+    assert is_strict_tradeoff(front)
+    # the max-throughput point is always represented
+    best = max(p["req_per_s"] for p in points)
+    assert front[0]["req_per_s"] == best
+    return front
+
+
+def test_frontier_properties_fixed_cases():
+    cases = [
+        [(10, 5.0), (5, 2.0), (7, 6.0), (10, 5.0)],
+        [(1, 1.0)],
+        [(3, 3.0), (3, 3.0), (3, 3.0)],
+        [(1, 5.0), (2, 4.0), (3, 3.0), (4, 2.0), (5, 1.0)],  # all optimal
+        [(5, 1.0), (4, 2.0), (3, 3.0)],                      # one optimal
+    ]
+    for case in cases:
+        _check_frontier_properties(_pts(case))
+
+
+def test_frontier_permutation_stable():
+    pts = _pts([(10, 5.0), (5, 2.0), (7, 6.0), (10, 5.0), (8, 2.5),
+                (8, 2.5), (6, 9.0)])
+    base = pareto_frontier(pts)
+    rng = random.Random(0)
+    for _ in range(20):
+        shuffled = pts[:]
+        rng.shuffle(shuffled)
+        assert pareto_frontier(shuffled) == base
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=80, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 12), st.integers(1, 12)),
+                    min_size=1, max_size=24),
+           seed=st.integers(0, 2 ** 16))
+    def test_frontier_properties_fuzz(pairs, seed):
+        """Dominance properties + permutation stability over random
+        point sets (integer grids force plenty of exact ties)."""
+        pts = _pts([(float(r), float(f)) for r, f in pairs])
+        front = _check_frontier_properties(pts)
+        shuffled = pts[:]
+        random.Random(seed).shuffle(shuffled)
+        assert pareto_frontier(shuffled) == front
+
+
+# ---------------------------------------------------------------------------
+# the greedy bit allocator
+# ---------------------------------------------------------------------------
+SENS = {"w4a4": [10.0, 1.0, 1.0, 1.0], "w8a8": [0.1, 0.9, 0.9, 0.9]}
+
+
+def test_allocate_endpoints():
+    assert allocate_bits(SENS, 4.0) == ["w4a4"] * 4
+    assert allocate_bits(SENS, 8.0) == ["w8a8"] * 4
+    assert allocate_bits(SENS, 3.9) == ["w4a4"] * 4   # below min: floor
+
+
+def test_allocate_respects_budget_and_targets_sensitivity():
+    for budget in (4.5, 5.0, 6.0, 7.0, 7.9):
+        alloc = allocate_bits(SENS, budget)
+        assert mean_bits(alloc) <= budget + 1e-9
+    # exactly one upgrade affordable: it must go to the most sensitive
+    # group (g0 drops 9.9 MSE; the others 0.1)
+    assert allocate_bits(SENS, 5.0) == ["w8a8", "w4a4", "w4a4", "w4a4"]
+
+
+def test_allocate_deterministic_and_fills_budget():
+    a = allocate_bits(SENS, 6.0)
+    assert a == allocate_bits(dict(SENS), 6.0)
+    # flat sensitivity still spends the budget (ties break low-g first)
+    flat = {"w4a4": [1.0] * 4, "w8a8": [1.0] * 4}
+    assert allocate_bits(flat, 6.0) == ["w8a8", "w8a8", "w4a4", "w4a4"]
+
+
+def test_allocate_three_levels_one_step_at_a_time():
+    sens = {"w4a4": [8.0, 8.0], "w6a6": [2.0, 6.0], "w8a8": [1.0, 1.0]}
+    # budget 6: both up to 6 bits (mean 6), or one to 8 one at 4 —
+    # greedy takes the per-bit best drops: g1's 4->6 (1.0/bit) then
+    # g0's 4->6 (3.0/bit first, actually chosen first), etc.
+    alloc = allocate_bits(sens, 6.0)
+    assert mean_bits(alloc) <= 6.0
+    assert set(alloc) <= {"w4a4", "w6a6", "w8a8"}
+
+
+def test_allocate_validates():
+    with pytest.raises(ValueError, match=">= 2 bits levels"):
+        allocate_bits({"w8a8": [1.0, 1.0]}, 8.0)
+    with pytest.raises(ValueError, match="group count"):
+        allocate_bits({"w4a4": [1.0, 1.0], "w8a8": [1.0]}, 6.0)
+
+
+# ---------------------------------------------------------------------------
+# the stage-1 gate
+# ---------------------------------------------------------------------------
+def test_survivors_keep_threshold_floor_and_fast_endpoint():
+    ecfg = EvalConfig(prune_factor=10.0, keep_at_least=1)
+    mse = {"good": 1.0, "ok": 5.0, "bad": 1000.0, "fast": 500.0}
+    req = {"good": 10.0, "ok": 10.0, "bad": 10.0, "fast": 99.0}
+    kept = select_survivors(mse, req, ecfg)
+    assert "good" in kept and "ok" in kept          # within threshold
+    assert "fast" in kept                           # max-req/s always
+    assert "bad" not in kept
+    assert kept == sorted(kept)                     # deterministic order
+
+
+def test_survivors_deterministic_under_dict_order():
+    ecfg = EvalConfig(prune_factor=2.0, keep_at_least=2)
+    mse = {"a": 1.0, "b": 3.0, "c": 9.0, "d": 2.0}
+    req = {"a": 1.0, "b": 2.0, "c": 3.0, "d": 4.0}
+    base = select_survivors(mse, req, ecfg)
+    for perm in itertools.permutations(mse):
+        assert select_survivors({k: mse[k] for k in perm},
+                                {k: req[k] for k in perm}, ecfg) == base
+
+
+# ---------------------------------------------------------------------------
+# space expansion
+# ---------------------------------------------------------------------------
+def test_expand_dedupes_and_labels():
+    sp = SearchSpace(bits=("w8a8", "w8a8", "w4a4"), tgq_groups=(None,))
+    ts = expand(sp)
+    assert [t.label for t in ts] == ["w8a8/range", "w4a4/range"]
+    assert len({t.key() for t in ts}) == len(ts)
+
+
+def test_expand_range_rows_carry_default_ho_knobs():
+    """No expanded 'range' trial may carry a knob quantize() rejects
+    under that method — the guard the API enforces, honored at
+    expansion time so the ledger has no dead entries."""
+    defaults = QuantRecipe()
+    sp = SearchSpace(bits=("w8a8", "w4a4"), methods=("range", "ho"),
+                     use_mrq=(True, False), tgq_groups=(None, 2))
+    ts = expand(sp)
+    range_ts = [t for t in ts if t.recipe.method == "range"]
+    ho_ts = [t for t in ts if t.recipe.method == "ho"]
+    assert len(range_ts) == 4                       # mrq axis inert
+    assert len(ho_ts) == 8                          # mrq axis live
+    for t in range_ts:
+        for f in ("use_mrq", "use_tgq", "rounds", "n_alpha"):
+            assert getattr(t.recipe, f) == getattr(defaults, f)
+    assert {t.recipe.use_mrq for t in ho_ts} == {True, False}
+    assert all(t.recipe.rounds == sp.ho_rounds for t in ho_ts)
+
+
+def test_expand_mixed_components_precede_and_key_stably():
+    sp = SearchSpace(bits=("w4a4", "w8a8"), tgq_groups=(2, 4),
+                     bit_budgets=(6.0,))
+    ts = expand(sp)
+    mixed = [t for t in ts if t.kind == "mixed"]
+    assert len(mixed) == 1
+    uniform_keys = [t.key() for t in ts if t.kind == "uniform"]
+    m = mixed[0]
+    assert ts.index(m) > max(ts.index(t) for t in ts
+                             if t.kind == "uniform")
+    # components are uniform trials of the FIRST group setting,
+    # sorted by ascending wbits
+    assert [c.bits for c in m.components] == ["w4a4", "w8a8"]
+    assert all(c.tgq_groups == 2 for c in m.components)
+    assert all(c.content_hash() in uniform_keys for c in m.components)
+    # key is content-derived: same space -> same key, budget changes it
+    assert m.key() == expand(sp)[-1].key()
+    sp2 = SearchSpace(bits=("w4a4", "w8a8"), tgq_groups=(2, 4),
+                      bit_budgets=(7.0,))
+    assert expand(sp2)[-1].key() != m.key()
+
+
+def test_space_validation():
+    with pytest.raises(ValueError, match="unknown bits"):
+        SearchSpace(bits=("w3a3",))
+    with pytest.raises(ValueError, match="unknown methods"):
+        SearchSpace(methods=("minmax",))
+    with pytest.raises(ValueError, match=">= 2 distinct bits"):
+        SearchSpace(bits=("w8a8",), bit_budgets=(6.0,))
+    with pytest.raises(ValueError, match="achievable mean-bit range"):
+        SearchSpace(bits=("w8a8", "w4a4"), bit_budgets=(9.0,))
+    with pytest.raises(ValueError, match="full-structure component"):
+        expand(SearchSpace(bits=("w8a8", "w4a4"), methods=("ho",),
+                           use_mrq=(False,), bit_budgets=(6.0,)))
+
+
+# ---------------------------------------------------------------------------
+# the driver's resume contract (real tiny sweep)
+# ---------------------------------------------------------------------------
+SPACE = SearchSpace(bits=("w8a8", "w4a4"), tgq_groups=(None,),
+                    bit_budgets=(6.0,), n_per_group=1, calib_batch=1)
+ECFG = EvalConfig(steps=3, n_gen=8, gen_batch=8, n_real=32, n_mse=8,
+                  keep_at_least=3)
+N_TRIALS = 3                                        # 2 uniform + 1 mixed
+
+
+@pytest.fixture(scope="module")
+def sweep(tiny_dit, tmp_path_factory):
+    """One killed-then-resumed-then-replayed sweep, shared by the
+    asserting tests below (the expensive part runs once)."""
+    cfg, params = tiny_dit
+    out = str(tmp_path_factory.mktemp("autotune"))
+    killed = run_autotune(params, cfg, DIF, SPACE, ECFG, out,
+                          log=lambda *_: None, max_new_stage1=1)
+    full = run_autotune(params, cfg, DIF, SPACE, ECFG, out,
+                        log=lambda *_: None)
+    resumed = run_autotune(params, cfg, DIF, SPACE, ECFG, out,
+                           log=lambda *_: None)
+    return cfg, params, out, killed, full, resumed
+
+
+def test_driver_kill_then_resume_counts(sweep):
+    *_, killed, full, resumed = sweep
+    assert killed.stopped_early and killed.recomputed == 1
+    # resume after the kill: exactly the 1 completed trial cache-hits
+    # its stage-1, the other N-1 recompute
+    assert full.stage1_hits == 1
+    assert full.recomputed == N_TRIALS - 1
+    assert not full.stopped_early
+    assert len(full.records) == N_TRIALS
+
+
+def test_driver_full_resume_is_pure_cache_hit(sweep):
+    *_, full, resumed = sweep
+    assert resumed.recomputed == 0
+    assert resumed.cache_hits == N_TRIALS
+    assert resumed.frontier == full.frontier
+    assert resumed.records == full.records
+
+
+def test_driver_frontier_shape_and_artifacts(sweep):
+    cfg, params, out, _, full, _ = sweep
+    assert full.frontier, "frontier must be non-empty"
+    assert is_strict_tradeoff(full.frontier)
+    by_key = {r["key"]: r for r in full.records}
+    for p in full.frontier:
+        art = load_trial_artifact(out, by_key[p["key"]])
+        if p["kind"] == "uniform":
+            assert isinstance(art, QuantArtifact)
+            # provenance: the artifact names the recipe that made it
+            assert art.meta["recipe_hash"] == p["key"]
+        else:
+            assert set(art["loaded_components"])
+            assert len(art["allocation"]) == DIF.tgq_groups
+
+
+def test_driver_outputs_deterministic_across_resume(sweep):
+    """A fully-cache-hit resume rewrites BENCH_autotune.json and
+    report.md byte-identically (wall-clock stays in the ledger)."""
+    _, _, out, _, _, resumed = sweep
+    with open(os.path.join(out, "BENCH_autotune.json")) as f:
+        doc = json.load(f)
+    assert doc["frontier"] == resumed.frontier
+    assert doc["strict_tradeoff"]
+    report = open(os.path.join(out, "report.md")).read()
+    assert "Pareto frontier" in report
+    for p in resumed.frontier:
+        assert p["label"] in report
+
+
+def test_driver_tolerates_truncated_ledger_tail(sweep):
+    _, _, out, *_ = sweep
+    ledger = os.path.join(out, "ledger.jsonl")
+    n_rows = len(read_ledger(out))
+    with open(ledger, "a") as f:
+        f.write('{"kind": "final", "key": "dead-beef", "trunca')
+    assert len(read_ledger(out)) == n_rows          # tail ignored
+
+
+def test_driver_resume_under_changed_inputs_fails_fast(sweep):
+    cfg, params, out, *_ = sweep
+    other_space = SearchSpace(bits=("w8a8",), n_per_group=1,
+                              calib_batch=1)
+    with pytest.raises(ValueError, match="different space"):
+        run_driver(params, cfg, DIF, other_space, ECFG, out,
+                   log=lambda *_: None)
+    with pytest.raises(ValueError, match="different eval"):
+        run_driver(params, cfg, DIF, SPACE,
+                   EvalConfig(steps=5, n_gen=8, gen_batch=8, n_real=32,
+                              n_mse=8, keep_at_least=3), out,
+                   log=lambda *_: None)
+
+
+def test_mixed_trial_allocation_recorded(sweep):
+    *_, full, resumed = sweep
+    mixed = [r for r in full.records if r["trial"]["kind"] == "mixed"]
+    assert len(mixed) == 1
+    alloc = mixed[0]["allocation"]
+    assert len(alloc) == DIF.tgq_groups
+    assert mean_bits(alloc) <= 6.0 + 1e-9
+    assert set(alloc) <= {"w8a8", "w4a4"}

@@ -1,0 +1,123 @@
+"""The promoted eval library (`repro.quant.eval`): explicit asset-cache
+keying (the regression that forced the promotion — the predecessor
+cached under a bare string, so different configs/seeds shared stale
+latents and feature nets), and the grouped sampler's equivalence to the
+fused one under a constant per-group context map (the property that
+makes mixed-allocation FD scores comparable to uniform trials')."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.diffusion import DiffusionCfg
+from repro.models import DiTCfg
+from repro.nn.ctx import FPContext
+from repro.quant import QuantRecipe, quantize
+from repro.quant import eval as qeval
+
+DIF = DiffusionCfg(T=40, tgq_groups=4)
+
+
+# ---------------------------------------------------------------------------
+# asset cache keying
+# ---------------------------------------------------------------------------
+def test_asset_cache_hit_same_key(tiny_dit):
+    cfg, _ = tiny_dit
+    a = qeval.eval_assets(cfg, n_real=32)
+    b = qeval.eval_assets(cfg, n_real=32)
+    assert a[0] is b[0] and a[2] is b[2]           # one build, shared
+
+
+def test_asset_cache_distinguishes_seeds(tiny_dit):
+    """The regression: the predecessor keyed its cache by the bare
+    string "assets", so a second caller with a different data seed (or
+    size, or model) was served the FIRST caller's latents and feature
+    nets. The promoted cache keys by the full build identity."""
+    cfg, _ = tiny_dit
+    a_real, _, a_net, _ = qeval.eval_assets(cfg, n_real=32, data_seed=1)
+    b_real, _, b_net, _ = qeval.eval_assets(cfg, n_real=32, data_seed=2)
+    assert a_real is not b_real
+    assert not np.allclose(a_real, b_real)         # different draws
+    c_real, _, c_net, _ = qeval.eval_assets(cfg, n_real=32, data_seed=1,
+                                            net_seed=7)
+    assert c_real is not a_net and c_net is not a_net  # new net, new entry
+
+
+def test_asset_cache_distinguishes_model_cfg(tiny_dit):
+    cfg, _ = tiny_dit
+    other = dataclasses.replace(cfg, img_size=16)
+    a_real, *_ = qeval.eval_assets(cfg, n_real=16)
+    b_real, *_ = qeval.eval_assets(other, n_real=16)
+    assert a_real.shape != b_real.shape            # sized by ITS config
+
+
+def test_asset_cache_clear(tiny_dit):
+    cfg, _ = tiny_dit
+    a = qeval.eval_assets(cfg, n_real=16)
+    qeval.clear_eval_caches()
+    b = qeval.eval_assets(cfg, n_real=16)
+    assert a[0] is not b[0]
+    np.testing.assert_allclose(a[0], b[0])         # same key -> same build
+
+
+def test_score_shape(tiny_dit):
+    cfg, params = tiny_dit
+    gen, _ = qeval.generate(params, cfg, DIF, steps=2, n=8, batch=8)
+    s = qeval.score(gen, cfg, n_real=32)
+    assert set(s) == {"FD", "sFD", "IS*"}
+    assert all(np.isfinite(v) for v in s.values())
+
+
+# ---------------------------------------------------------------------------
+# grouped sampler == fused sampler under a constant context map
+# ---------------------------------------------------------------------------
+def test_generate_grouped_matches_generate_constant_ctx(tiny_dit):
+    cfg, params = tiny_dit
+    gen, labels = qeval.generate(params, cfg, DIF, ctx=FPContext(),
+                                 steps=4, n=8, seed=3, batch=8)
+    gen_g, labels_g = qeval.generate_grouped(
+        params, cfg, DIF, [FPContext()] * DIF.tgq_groups,
+        steps=4, n=8, seed=3, batch=8)
+    np.testing.assert_array_equal(labels, labels_g)
+    # same arithmetic, python loop vs lax.scan: the repo's sampler-
+    # equivalence bound (test_diffusion.py) is 1e-4
+    np.testing.assert_allclose(gen, gen_g, atol=1e-4)
+
+
+def test_generate_grouped_quantized_map(tiny_dit):
+    """A genuinely mixed map runs: w8a8 on even groups, w4a4 on odd —
+    and produces output that differs from either uniform context (the
+    allocation is doing something)."""
+    cfg, params = tiny_dit
+    ctx8 = quantize(params, cfg, DIF,
+                    QuantRecipe(bits="w8a8", n_per_group=1, calib_batch=1)
+                    ).context(kernel=False)
+    ctx4 = quantize(params, cfg, DIF,
+                    QuantRecipe(bits="w4a4", n_per_group=1, calib_batch=1)
+                    ).context(kernel=False)
+    cmap = [ctx8 if g % 2 == 0 else ctx4 for g in range(DIF.tgq_groups)]
+    mixed, _ = qeval.generate_grouped(params, cfg, DIF, cmap, steps=4,
+                                      n=4, seed=3, batch=4)
+    uni8, _ = qeval.generate_grouped(params, cfg, DIF,
+                                     [ctx8] * DIF.tgq_groups, steps=4,
+                                     n=4, seed=3, batch=4)
+    assert mixed.shape == uni8.shape
+    assert not np.allclose(mixed, uni8, atol=1e-6)
+
+
+def test_noise_mse_per_group_ctx(tiny_dit):
+    """Per-group context specs score each group under ITS context: an
+    FP context in group g zeroes group g's MSE while quantized groups
+    stay nonzero."""
+    cfg, params = tiny_dit
+    ctx4 = quantize(params, cfg, DIF,
+                    QuantRecipe(bits="w4a4", n_per_group=1, calib_batch=1)
+                    ).context(kernel=False)
+    cmap = [FPContext()] + [ctx4] * (DIF.tgq_groups - 1)
+    by_group = qeval.noise_mse_by_group(params, cfg, DIF, cmap, n=8)
+    assert len(by_group) == DIF.tgq_groups
+    assert by_group[0] == pytest.approx(0.0, abs=1e-12)
+    assert all(v > 0 for v in by_group[1:])
+    uniform = qeval.noise_mse_by_group(params, cfg, DIF, ctx4, n=8)
+    np.testing.assert_allclose(uniform[1:], by_group[1:], rtol=1e-6)

@@ -64,6 +64,59 @@ def test_recipe_attn_impl():
         == "composed"
 
 
+def test_recipe_content_hash_stable_and_order_invariant():
+    r = QuantRecipe(bits="w6a6", method="ho", skip_patterns=["a", "b"])
+    assert r.content_hash() == r.content_hash()
+    assert len(r.content_hash()) == 16
+    # canonical JSON sorts keys: a recipe rebuilt from its dict in ANY
+    # key order (and through list->tuple normalization) hashes the same
+    d = r.to_dict()
+    reordered = {k: d[k] for k in sorted(d, reverse=True)}
+    assert QuantRecipe.from_dict(reordered).content_hash() \
+        == r.content_hash()
+    # equal recipes hash equal regardless of construction path
+    assert QuantRecipe(method="ho", bits="w6a6",
+                       skip_patterns=("a", "b")).content_hash() \
+        == r.content_hash()
+
+
+def test_recipe_content_hash_changes_on_any_field():
+    """Exhaustive: perturbing EVERY field changes the hash — the
+    property that makes it safe as the autotune ledger key (two trials
+    collide iff they are the same trial)."""
+    import dataclasses as dc
+    base = QuantRecipe()
+    perturbed = {
+        "bits": "w4a4", "method": "ho", "use_mrq": False,
+        "use_tgq": False, "tgq_groups": 7, "use_fisher": False,
+        "rounds": 5, "n_alpha": 11, "max_rows_per_batch": 128,
+        "fisher_norm": "global", "bias_correct": True,
+        "channel_balance": True, "balance_alpha": 0.7,
+        "n_per_group": 9, "calib_batch": 9,
+        "skip_patterns": ("router", "x"), "weight_only_patterns": ("y",),
+        "attn_impl": "composed", "seed": 123,
+    }
+    fields = {f.name for f in dc.fields(QuantRecipe)}
+    assert set(perturbed) == fields, "perturbation map must cover every field"
+    for name, value in perturbed.items():
+        assert value != getattr(base, name), name
+        changed = dc.replace(base, **{name: value})
+        assert changed.content_hash() != base.content_hash(), \
+            f"hash blind to field {name}"
+
+
+def test_artifact_records_recipe_hash(tiny_dit, tmp_path):
+    """quantize() stamps meta['recipe_hash'] (the autotune ledger key)
+    and it survives save -> load."""
+    cfg, p = tiny_dit
+    art = quantize(p, cfg, DIF, RANGE_RECIPE)
+    assert art.meta["recipe_hash"] == RANGE_RECIPE.content_hash()
+    art.save(str(tmp_path / "a"))
+    loaded = QuantArtifact.load(str(tmp_path / "a"))
+    assert loaded.meta["recipe_hash"] == RANGE_RECIPE.content_hash()
+    assert loaded.recipe.content_hash() == loaded.meta["recipe_hash"]
+
+
 def test_recipe_matches_ptq_config():
     """The 'ho' dispatch must reproduce PTQConfig semantics exactly —
     the recipe is a rename, not a re-tune."""
