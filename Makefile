@@ -1,6 +1,7 @@
 .PHONY: verify verify-all kernel-micro bench-attn bench-flash bench-int4 \
-	bench-vector-tgq bench-serve serve-throughput serve-poisson chaos \
-	serve-async-smoke docs-check artifact-smoke autotune-smoke
+	bench-vector-tgq bench-residue bench-serve serve-throughput \
+	serve-poisson chaos serve-async-smoke docs-check artifact-smoke \
+	autotune-smoke
 
 # tier-1 verify: fast suite, `slow` deselected (pyproject addopts)
 verify:
@@ -35,6 +36,13 @@ bench-int4:
 # contract (weight bytes per dispatch independent of active-slot count)
 bench-vector-tgq:
 	PYTHONPATH=src python -m benchmarks.kernel_micro --vector-tgq
+
+# prologue/epilogue fusion-residue audit: the fully fused kernel vs its
+# oracle + the XL/2 block traffic table; ASSERTS zero uncharged
+# adaLN/residual fp bytes and the >=1.15x modeled block traffic win vs
+# the pre-fusion baseline
+bench-residue:
+	PYTHONPATH=src python -m benchmarks.kernel_micro --residue
 
 # machine-readable modeled serving trajectory (writes BENCH_serve.json):
 # fp / w8a8 / w4a4 req/s, sync bucketed vs async continuous batching;

@@ -40,14 +40,29 @@ is meaningless; the TPU win is structural and computed from traffic).
                        prefetch alternative re-streams the weights per
                        slot.
 
+  prologue/epilogue   : the adaLN fp islands around the linears fold
+  fusions               into the kernels — norm-modulate (layernorm +
+  (``--residue``)       shift/scale) runs in the quantize PROLOGUE, the
+                        gate+residual add in the dequant EPILOGUE, the
+                        channel-balance prescale divide in the quantize
+                        step — so the normalized fp activation and the
+                        pre-gate matmul output never round-trip HBM.
+                        ``--residue`` audits the whole DiT block: every
+                        adaLN/residual fp byte is either fused (operand
+                        streams charged) or named as a remaining
+                        island; asserts ZERO uncharged adaLN/residual
+                        bytes and >= 1.15x modeled block traffic vs the
+                        pre-fusion baseline.
+
 The traffic functions are importable (tests assert the structural-saving
 floors, e.g. >=1.5x for the MRQ linear, >=2x probs traffic for fused
 attention, >=3x whole-attention for flash at S>=256, >=1.8x weight
-bytes for packed int4). ``--attn`` prints only the attention rows
-(``make bench-attn``); ``--flash`` only the flash rows
-(``make bench-flash``); ``--int4`` only the packed-int4 rows
-(``make bench-int4``); ``--vector-tgq`` only the vector-tgroup rows
-(``make bench-vector-tgq``).
+bytes for packed int4, >=1.15x block traffic for the adaLN fusions).
+``--attn`` prints only the attention rows (``make bench-attn``);
+``--flash`` only the flash rows (``make bench-flash``); ``--int4`` only
+the packed-int4 rows (``make bench-int4``); ``--vector-tgq`` only the
+vector-tgroup rows (``make bench-vector-tgq``); ``--residue`` only the
+fusion-residue audit (``make bench-residue``).
 """
 from __future__ import annotations
 
@@ -135,6 +150,85 @@ def traffic_int4_mrq_linear(M: int, K: int, N: int,
     return {"int8_weight": int8_weight, "int4_weight": int4_weight,
             "fused_int8": M * K * 4 + int8_weight + M * N * 4,
             "fused_int4": M * K * 4 + int4_weight + M * N * 4}
+
+
+def traffic_norm_mod_fusion(M: int, B: int, K: int, N: int) -> dict:
+    """A linear site with the adaLN norm-modulate chain fused into its
+    quantize prologue (qkv / fc1 / the final projection).
+
+    unfused — the PR-8 baseline: the fused linear
+      (``traffic_int8_linear['fused']``) PLUS the elementwise chain as
+      an XLA pass: read fp32 x (4B/elt) + write the normalized+modulated
+      fp32 x (4B) that the linear then reads — 8 bytes/elt of x.
+    fused — the chain's write/read disappears; what remains is charged
+      HONESTLY: one extra fp32 read of x for the row stats (the mean/var
+      reduction runs outside the kernel), the (M, 1) mu/rsig stream
+      (write + read, 16 bytes/row) and the per-batch (B, K) shift/scale
+      rows (8 bytes/elt) the prologue gathers in VMEM.
+    """
+    base = M * K * 4 + K * N * 1 + M * N * 4
+    chain = 8 * M * K
+    charged = 4 * M * K + 16 * M + 8 * B * K
+    return {"unfused": base + chain, "fused": base + charged,
+            "chain_bytes": chain, "charged_bytes": charged}
+
+
+def traffic_gate_residual_fusion(M: int, B: int, K: int, N: int) -> dict:
+    """A linear site with the adaLN gate + residual add fused into its
+    dequant epilogue (proj / fc2).
+
+    unfused — PR-8 baseline: the fused linear plus the
+      ``x + g * y`` chain as an XLA pass over the (M, N) output: read y
+      (4B/elt) + read the residual (4B) + write the new x (4B) — 12
+      bytes/elt.
+    fused — the epilogue consumes y in VMEM and writes the gated sum as
+      the kernel's single output; charged: the streamed residual tile
+      (4B/elt) and the per-batch (B, N) gate rows (4B/elt).
+    """
+    base = M * K * 4 + K * N * 1 + M * N * 4
+    chain = 12 * M * N
+    charged = 4 * M * N + 4 * B * N
+    return {"unfused": base + chain, "fused": base + charged,
+            "chain_bytes": chain, "charged_bytes": charged}
+
+
+def fused_block_traffic(M: int = 1024, B: int = 4, d: int = 1152,
+                        f: int = 4608) -> dict:
+    """Whole-DiT-block linear traffic, PR-8 baseline vs fused prologues/
+    epilogues, at the XL/2 serving shape (B CFG-paired slots x M/B
+    tokens). Returns per-site entries plus aggregates and the residue:
+    adaLN/residual chain bytes served by NO fusion (must be zero — every
+    chain in the block rides a seam). The post-GELU island is reported
+    separately (``gelu_island_bytes``): it is charged on neither path
+    and excluded from the residue contract (it feeds the MRQ quantizer,
+    not an adaLN chain)."""
+    sites = [
+        ("xl2_ada", B, d, 6 * d, None),
+        ("xl2_qkv", M, d, 3 * d, "nm"),
+        ("xl2_proj", M, d, d, "gr"),
+        ("xl2_fc1", M, d, f, "nm"),
+        ("xl2_fc2", M, f, d, "gr"),
+    ]
+    per_site, unfused, fused, residue = [], 0, 0, 0
+    for name, m, k, n, fusion in sites:
+        if fusion == "nm":
+            t = traffic_norm_mod_fusion(m, B, k, n)
+        elif fusion == "gr":
+            t = traffic_gate_residual_fusion(m, B, k, n)
+        else:
+            base = m * k * 4 + k * n * 1 + m * n * 4
+            t = {"unfused": base, "fused": base, "chain_bytes": 0,
+                 "charged_bytes": 0}
+        # a chain byte is residue iff the site has a chain but no fusion
+        # serving it — today every chain is fused, so this stays 0
+        t["residue_bytes"] = 0 if fusion is not None else t["chain_bytes"]
+        per_site.append((name, fusion, t))
+        unfused += t["unfused"]
+        fused += t["fused"]
+        residue += t["residue_bytes"]
+    return {"sites": per_site, "unfused": unfused, "fused": fused,
+            "residue_adaln_residual": residue,
+            "gelu_island_bytes": 8 * M * f}
 
 
 def traffic_vector_tgq_linear(M_per_slot: int, K: int, N: int,
@@ -489,10 +583,75 @@ def _vector_tgq_rows(rows) -> None:
                      round(t["per_slot"] / t["vector"], 2)))
 
 
+def _residue_rows(rows) -> None:
+    """Fusion-residue audit (``--residue``): correctness of the fully
+    fused kernel (norm-modulate prologue + gate+residual epilogue in one
+    launch, vs the jitted ``*_fused_ref`` oracle), then the XL/2 block
+    traffic table. ASSERTS zero uncharged adaLN/residual fp bytes and a
+    >= 1.15x modeled block-aggregate traffic win over the PR-8 baseline
+    (fused linears, chains still in XLA) — the CI gate for
+    ``make bench-residue``."""
+    # correctness probe: all three fusions live in one int8 launch
+    M, K, N, B, G = 64, 96, 80, 4, 3
+    kx, kw, kf = jax.random.split(jax.random.PRNGKey(41), 3)
+    x = jax.random.normal(kx, (M, K)) * 2
+    wq = jax.random.randint(kw, (K, N), -128, 128, jnp.int32).astype(
+        jnp.int8)
+    sx = (jax.random.uniform(kf, (G, 1)) * 0.04 + 0.01).astype(jnp.float32)
+    zx = jnp.round(jax.random.uniform(kx, (G, 1)) * 200.0)
+    scale = (jax.random.uniform(kw, (G, N)) * 1e-3 + 1e-5).astype(
+        jnp.float32)
+    corr = (jnp.round(zx).astype(jnp.int32) - 128) * jnp.sum(
+        wq.astype(jnp.int32), axis=0)[None, :]
+    bias = jax.random.normal(kf, (N,))
+    ks = jax.random.split(kf, 5)
+    ps = jnp.exp(jax.random.uniform(ks[0], (K,), minval=-1.0, maxval=1.0))
+    nm = (jax.random.normal(ks[1], (B, K)) * 0.5,
+          jax.random.normal(ks[2], (B, K)) * 0.2)
+    gr = (jax.random.normal(ks[3], (B, N)) * 0.8,
+          jax.random.normal(ks[4], (M, N)))
+    bv = jnp.repeat(jnp.arange(B, dtype=jnp.int32), M // B)
+    out = int8_matmul_fq(x, wq, sx, zx, scale, corr, bias, g=1, ps=ps,
+                         nm=nm, gr=gr, bv=bv, interpret=True)
+    want = jax.jit(lambda *a: ref.int8_matmul_fq_fused_ref(
+        *a, bias, g=1, ps=ps, nm=nm, gr=gr, bv=bv))(x, wq, sx, zx, scale,
+                                                    corr)
+    err = float(jnp.max(jnp.abs(out - want)))
+    rows.append(("int8_matmul_fq[nm+ps+gr]", f"{M}x{K}x{N}", f"{err:.1e}",
+                 "-", "-", "-"))
+
+    # XL/2 block traffic: PR-8 baseline vs fused prologues/epilogues
+    t = fused_block_traffic()
+    for name, fusion, ts in t["sites"]:
+        rows.append((f"linear[{fusion or 'plain'}]", name,
+                     f"residue={ts['residue_bytes']}", ts["unfused"],
+                     ts["fused"],
+                     round(ts["unfused"] / ts["fused"], 3)))
+    assert t["residue_adaln_residual"] == 0, (
+        "uncharged adaLN/residual fp bytes remain: "
+        f"{t['residue_adaln_residual']}")
+    win = t["unfused"] / t["fused"]
+    assert win >= 1.15, (
+        f"fused block traffic win {win:.3f}x < 1.15x vs the PR-8 baseline")
+    rows.append(("dit_block_aggregate", "xl2[4x256tok]", "residue=0",
+                 t["unfused"], t["fused"], round(win, 3)))
+    # the one elementwise fp island left between the linears — charged on
+    # neither path, excluded from the residue contract
+    rows.append(("post_gelu_island", "xl2_fc1->fc2",
+                 f"bytes={t['gelu_island_bytes']}", "-", "-", "-"))
+
+
 def main(attn_only: bool = False, flash_only: bool = False,
-         int4_only: bool = False, vector_tgq_only: bool = False) -> None:
+         int4_only: bool = False, vector_tgq_only: bool = False,
+         residue_only: bool = False) -> None:
     rows = [("kernel", "case", "max_err", "hbm_bytes_unfused",
              "hbm_bytes_fused", "traffic_saving")]
+    if residue_only:
+        _residue_rows(rows)
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        C.emit("kernel_micro_residue", rows)
+        return
     if vector_tgq_only:
         _vector_tgq_rows(rows)
         C.emit("kernel_micro_vector_tgq", rows)
@@ -607,4 +766,5 @@ if __name__ == "__main__":
     main(attn_only="--attn" in sys.argv[1:],
          flash_only="--flash" in sys.argv[1:],
          int4_only="--int4" in sys.argv[1:],
-         vector_tgq_only="--vector-tgq" in sys.argv[1:])
+         vector_tgq_only="--vector-tgq" in sys.argv[1:],
+         residue_only="--residue" in sys.argv[1:])

@@ -11,10 +11,10 @@ Each scheme's qparams are converted with ``convert_for_kernels`` and
 sampled with ``QuantContext(kernel=True)`` — scores are produced by the
 nibble-packed ``int4_matmul_fq`` / ``int4_matmul_mrq_fq`` deployment
 kernels (per-K-group weight scales and all), not the fake-quant seams.
-``n_packed`` counts the ops that actually lowered onto kernels; schemes
-whose quantizers the pack builders refuse (e.g. balanced baselines with
-an ``x_prescale``) fall back per-op to fake-quant, which the column
-makes visible rather than silently absorbing.
+``n_packed`` counts the ops that actually lowered onto kernels;
+channel-balanced quantizers pack too (the ``x_prescale`` divide runs in
+the kernel quantize prologue), so any op the column shows unpacked is a
+genuine structural refusal, not silently-absorbed fallback.
 """
 from __future__ import annotations
 

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.ctx import OpContext
+from repro.nn.ctx import OpContext, apply_gate_residual, apply_norm_mod
 from repro.core.quantizers import TGQ, apply_quantizer
 
 
@@ -73,14 +73,22 @@ class RecordingContext(OpContext):
         self.registry[name] = info
         return info
 
-    def linear(self, name, x, w, b=None):
-        self._reg(name, kind="linear", a_kind=self._marks.get(id(x), "plain"),
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
+        # norm_mod is applied BEFORE registering: the op's quantizable
+        # input is the modulated tensor (what the matmul consumes), same
+        # as when the model computed the chain itself. The a_kind mark is
+        # looked up on the ORIGINAL tensor — fusion sites with norm_mod
+        # have plain inputs (the post-GELU fc2 site carries only
+        # gate_residual, which leaves x untouched).
+        a_kind = self._marks.get(id(x), "plain")
+        x = apply_norm_mod(x, norm_mod)
+        self._reg(name, kind="linear", a_kind=a_kind,
                   x_shape=tuple(x.shape), w_shape=tuple(w.shape))
         y = x @ w
         if b is not None:
             y = y + b
         self.registry[name].out_shape = tuple(y.shape)
-        return y
+        return apply_gate_residual(y, gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         self._reg(name, kind="einsum", spec=spec, b_is_weight=b_is_weight,
@@ -145,7 +153,10 @@ class CalibrationContext(OpContext):
     def _tg(self):
         return int(self.tgroup) if self.tgroup is not None else 0
 
-    def linear(self, name, x, w, b=None):
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
+        # Calibration captures the MODULATED tensor — the one the matmul
+        # (and the fused kernel's quantize prologue) actually consumes.
+        x = apply_norm_mod(x, norm_mod)
         if name not in self._seen:
             self._seen.add(name)
             if name not in self.weights:
@@ -156,7 +167,7 @@ class CalibrationContext(OpContext):
         y = x @ w
         if b is not None:
             y = y + b
-        return y
+        return apply_gate_residual(y, gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         if name not in self._seen:
@@ -196,11 +207,14 @@ class TapContext(OpContext):
             y = y + t
         return y
 
-    def linear(self, name, x, w, b=None):
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
+        x = apply_norm_mod(x, norm_mod)
         y = x @ w
         if b is not None:
             y = y + b
-        return self._tap(name, y)
+        # tap the PRE-gate matmul output: dL/dz is defined on the op's
+        # own output, exactly as when the model gated outside the seam.
+        return apply_gate_residual(self._tap(name, y), gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         return self._tap(name, jnp.einsum(spec, a, b))
@@ -214,12 +228,13 @@ class ShapeContext(OpContext):
     """Records op OUTPUT shapes only (to build zero taps)."""
     shapes: Dict[str, tuple] = dataclasses.field(default_factory=dict)
 
-    def linear(self, name, x, w, b=None):
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
+        x = apply_norm_mod(x, norm_mod)
         y = x @ w
         if b is not None:
             y = y + b
         self.shapes.setdefault(name, (tuple(y.shape), y.dtype))
-        return y
+        return apply_gate_residual(y, gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         y = jnp.einsum(spec, a, b)
@@ -282,40 +297,48 @@ class QuantContext(OpContext):
             w = w * pre.reshape((-1,) + (1,) * (w.ndim - 1)) if w.ndim >= 1 else w
         return apply_quantizer(qp.get("w"), w, tgroup=self.tgroup)
 
-    def linear(self, name, x, w, b=None):
+    @staticmethod
+    def _fold_out_bias(b, ob, gate_residual):
+        """When the gate+residual epilogue is fused, the PTQD bias
+        correction must land INSIDE the gate — fold it into the matmul
+        bias (``residual + gate * (y + ob)``). Unfused, it stays a
+        post-add. Returns (bias, post_add)."""
+        if ob is None or gate_residual is None:
+            return b, ob
+        return (ob if b is None else b + ob), None
+
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
         qp = self.qparams.get(name)
         if qp is None:
+            x = apply_norm_mod(x, norm_mod)
             y = x @ w
-            return y + b if b is not None else y
-        if self.kernel and qp.get("int8") is not None:
-            from repro.kernels import ops as kops
-            y = kops.int8_linear(x, qp["int8"], bias=b, tgroup=self.tgroup)
-            ob = qp.get("out_bias")
-            return y + ob if ob is not None else y
-        if self.kernel and qp.get("int8_mrq") is not None:
-            from repro.kernels import ops as kops
-            y = kops.int8_linear_mrq(x, qp["int8_mrq"], bias=b,
-                                     tgroup=self.tgroup)
-            ob = qp.get("out_bias")
-            return y + ob if ob is not None else y
-        if self.kernel and qp.get("int4") is not None:
-            from repro.kernels import ops as kops
-            y = kops.int4_linear(x, qp["int4"], bias=b, tgroup=self.tgroup)
-            ob = qp.get("out_bias")
-            return y + ob if ob is not None else y
-        if self.kernel and qp.get("int4_mrq") is not None:
-            from repro.kernels import ops as kops
-            y = kops.int4_linear_mrq(x, qp["int4_mrq"], bias=b,
-                                     tgroup=self.tgroup)
-            ob = qp.get("out_bias")
-            return y + ob if ob is not None else y
+            y = y + b if b is not None else y
+            return apply_gate_residual(y, gate_residual)
+        if self.kernel:
+            # All four pack families fuse the adaLN chains: norm_mod
+            # runs in the kernels' quantize prologue, gate_residual in
+            # the dequant epilogue (single HBM write).
+            for key, fn in (("int8", "int8_linear"),
+                            ("int8_mrq", "int8_linear_mrq"),
+                            ("int4", "int4_linear"),
+                            ("int4_mrq", "int4_linear_mrq")):
+                if qp.get(key) is not None:
+                    from repro.kernels import ops as kops
+                    bias, ob = self._fold_out_bias(b, qp.get("out_bias"),
+                                                   gate_residual)
+                    y = getattr(kops, fn)(
+                        x, qp[key], bias=bias, tgroup=self.tgroup,
+                        norm_mod=norm_mod, gate_residual=gate_residual)
+                    return y + ob if ob is not None else y
+        x = apply_norm_mod(x, norm_mod)
         x = self._q_in(qp, x)
         w = self._q_w(qp, w)
         y = x @ w
         if b is not None:
             y = y + b
         ob = qp.get("out_bias")
-        return y + ob if ob is not None else y
+        y = y + ob if ob is not None else y
+        return apply_gate_residual(y, gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         qp = self.qparams.get(name)

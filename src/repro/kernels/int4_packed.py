@@ -45,6 +45,13 @@ stream per K step, and each row gathers its own group's params in VMEM
 via the exact one-hot product — one nibble-packed weight stream covers a
 batch mixing timestep groups.
 
+Prologue/epilogue fusions: the whole family shares ``int8_fused``'s
+optional norm-modulate prologue (``nm``), channel-balance prescale
+(``ps``) and gate+residual epilogue (``gr``) — see that module's
+docstring. The prologue runs before the quantize (and, for MRQ, before
+the sign split); the epilogue gates + adds the residual tile onto the
+f32 accumulator after the bias, ahead of the single HBM write.
+
 Padding: K is padded to a multiple of ``group_k`` at pack time; padded
 weight rows pack to code 0 and their column sums are not counted in
 ``corr``, so padded x columns (which quantize to the zero point) meet
@@ -66,7 +73,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.int8_fused import _gather_rows, _onehot_rows
+from repro.kernels.int8_fused import (
+    _fusion_epilogue, _fusion_prologue, _fusion_specs_args, _gather_rows,
+    _onehot_rows, _prep_fusions, _unpack_fusion_refs,
+)
 from repro.kernels.int8_matmul import (
     DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, _ceil, _pad_to,
 )
@@ -120,17 +130,24 @@ def _unpack_w(w_ref, bk):
     return jnp.stack([lo, hi], axis=1).reshape(bk, w_ref.shape[-1])
 
 
-def _fq4_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
-                bias_ref, o_ref, acc_ref, *, nk: int, bk: int, half: int):
+def _fq4_kernel(g_ref, *refs, nk: int, bk: int, half: int,
+                has_ps: bool = False, has_nm: bool = False,
+                has_gr: bool = False):
     """Grid body for ``int4_matmul_fq`` at grid point (m, n, k).
 
     One K step == one weight-scale group: the (bk/2, bn) packed tile is
     widened to (bk, bn) s8-range codes, dotted against the in-VMEM
     quantized x tile, and the s32 partial is corrected + dequantized into
     the persistent f32 ``acc_ref`` with THIS group's (1, 1, bn) scale row
-    before the next step overwrites the tiles.
+    before the next step overwrites the tiles. Optional fusion refs
+    follow ``bias`` (``_unpack_fusion_refs`` order).
     """
     del g_ref  # consumed by the index maps (per-group row gather)
+    x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref, bias_ref = refs[:7]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    ps_ref, bv_ref, mu_ref, rsig_ref, sh_ref, sc_ref, gate_ref, res_ref = \
+        _unpack_fusion_refs(refs[7:-2], has_ps=has_ps, has_nm=has_nm,
+                            has_gr=has_gr)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -139,7 +156,9 @@ def _fq4_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
 
     sx = sx_ref[0, 0]
     zx = zx_ref[0, 0]
-    xq = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / sx) + zx - half,
+    xf = _fusion_prologue(x_ref[...].astype(jnp.float32), ps_ref, bv_ref,
+                          mu_ref, rsig_ref, sh_ref, sc_ref)
+    xq = jnp.clip(jnp.round(xf / sx) + zx - half,
                   -half, half - 1).astype(jnp.int8)
     w = _unpack_w(w_ref, bk)
     partial = jax.lax.dot_general(
@@ -150,12 +169,15 @@ def _fq4_kernel(g_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
 
     @pl.when(k == nk - 1)
     def _epilogue():
-        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+        y = acc_ref[...] + bias_ref[...]
+        y = _fusion_epilogue(y, bv_ref, gate_ref, res_ref)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
                                              "out_dtype", "interpret"))
 def int4_matmul_fq(x, wp, sx, zx, scale, corr, bias=None, g=None, *,
+                   ps=None, nm=None, gr=None, bv=None,
                    group_k=DEFAULT_BK, bm=DEFAULT_BM, bn=DEFAULT_BN,
                    out_dtype=jnp.float32, interpret=False):
     """y[M,N] = sum_k (q4(x_k; sx[g], zx[g]) @ s4(wp_k) - corr[g,k]) * scale[g,k].
@@ -167,6 +189,7 @@ def int4_matmul_fq(x, wp, sx, zx, scale, corr, bias=None, g=None, *,
     per-K-group zero-point corrections. ``group_k`` is the pack-time
     K-group size and MUST equal the kernel's K tile (it is the K tile).
     g as in ``int8_matmul_fq``: python int or traced scalar.
+    Optional ``ps``/``nm``/``gr``/``bv`` fusions as ``int8_matmul_fq``.
     """
     M, K = x.shape
     Kp = 2 * wp.shape[0]
@@ -184,6 +207,8 @@ def int4_matmul_fq(x, wp, sx, zx, scale, corr, bias=None, g=None, *,
         bias = jnp.zeros((N,), jnp.float32)
     if g is None:
         g = 0
+    ps2, bv2, nm_rows, gr_rows = _prep_fusions(
+        x, ps, nm, gr, bv, M=M, K=K, N=N, Mp=Mp, Kp=Kp, Np=Np)
     x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
     wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
     scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, 0), (0, Np - N)))
@@ -195,6 +220,9 @@ def int4_matmul_fq(x, wp, sx, zx, scale, corr, bias=None, g=None, *,
     # gathered axis: scale/corr are (G, nk, N) and each K step pulls its
     # own (g, k) row — the per-group weight scales ride the grid, not the
     # executable, so one compile still covers all timestep groups.
+    fspecs, fargs = _fusion_specs_args(
+        has_g=True, ps=ps2, bv=bv2, nm_rows=nm_rows, gr_rows=gr_rows,
+        bm_=bm_, bk_=group_k, bn_=bn_)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -209,38 +237,49 @@ def int4_matmul_fq(x, wp, sx, zx, scale, corr, bias=None, g=None, *,
             pl.BlockSpec((1, 1, bn_),
                          lambda m, n, k, g: (g[0], k, n)),   # corr[g, k]
             pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),         # bias
-        ],
+        ] + fspecs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_fq4_kernel, nk=nk, bk=group_k, half=8),
+        functools.partial(_fq4_kernel, nk=nk, bk=group_k, half=8,
+                          has_ps=ps2 is not None, has_nm=nm_rows is not None,
+                          has_gr=gr_rows is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         interpret=interpret,
     )(jnp.asarray(g, jnp.int32).reshape(1), x, wp,
-      sx.astype(jnp.float32), zx.astype(jnp.float32), scale, corr, bias)
+      sx.astype(jnp.float32), zx.astype(jnp.float32), scale, corr, bias,
+      *fargs)
     return out[:M, :N]
 
 
-def _mrq4_kernel(g_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
-                 scale_p_ref, bias_ref, o_ref, acc_ref, *, nk: int, bk: int,
-                 half: int):
+def _mrq4_kernel(g_ref, *refs, nk: int, bk: int, half: int,
+                 has_ps: bool = False, has_nm: bool = False,
+                 has_gr: bool = False):
     """Grid body for ``int4_matmul_mrq_fq`` at grid point (m, n, k).
 
     MRQ twin-region split as in ``int8_fused._mrq_kernel`` — ONE unpacked
     weight tile, two s32 dots — but both partials are dequantized into a
     single f32 accumulator with this K-group's per-region scale rows
-    (there is no zero point, so no correction term).
+    (there is no zero point, so no correction term). The fusion prologue
+    runs before the sign split.
     """
     del g_ref
+    x_ref, w_ref, sn_ref, sp_ref, scale_n_ref, scale_p_ref, bias_ref = \
+        refs[:7]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    ps_ref, bv_ref, mu_ref, rsig_ref, sh_ref, sc_ref, gate_ref, res_ref = \
+        _unpack_fusion_refs(refs[7:-2], has_ps=has_ps, has_nm=has_nm,
+                            has_gr=has_gr)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xf = x_ref[...].astype(jnp.float32)
+    xf = _fusion_prologue(x_ref[...].astype(jnp.float32), ps_ref, bv_ref,
+                          mu_ref, rsig_ref, sh_ref, sc_ref)
     neg = xf < 0
     qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_ref[0, 0]), -half, 0),
                    0).astype(jnp.int8)
@@ -257,20 +296,24 @@ def _mrq4_kernel(g_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
 
     @pl.when(k == nk - 1)
     def _epilogue():
-        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+        y = acc_ref[...] + bias_ref[...]
+        y = _fusion_epilogue(y, bv_ref, gate_ref, res_ref)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
                                              "out_dtype", "interpret"))
 def int4_matmul_mrq_fq(x, wp, s_neg, s_pos, scale_neg, scale_pos, bias=None,
-                       g=None, *, group_k=DEFAULT_BK, bm=DEFAULT_BM,
+                       g=None, *, ps=None, nm=None, gr=None, bv=None,
+                       group_k=DEFAULT_BK, bm=DEFAULT_BM,
                        bn=DEFAULT_BN, out_dtype=jnp.float32, interpret=False):
     """Single-pass MRQ matmul on nibble-packed weights, per-K-group scales.
 
     y = sum_k s_neg[g]*sw[k]*(qn_k @ w_k) + s_pos[g]*sw[k]*(qp_k @ w_k)
     (+ bias). Operand layout as ``int4_matmul_fq`` but with the twin
     region steps s_neg/s_pos (G, 1) and scales scale_neg/scale_pos
-    (G, nk, N).
+    (G, nk, N). Optional ``ps``/``nm``/``gr``/``bv`` fusions as
+    ``int8_matmul_fq``.
     """
     M, K = x.shape
     Kp = 2 * wp.shape[0]
@@ -287,6 +330,8 @@ def int4_matmul_mrq_fq(x, wp, s_neg, s_pos, scale_neg, scale_pos, bias=None,
         bias = jnp.zeros((N,), jnp.float32)
     if g is None:
         g = 0
+    ps2, bv2, nm_rows, gr_rows = _prep_fusions(
+        x, ps, nm, gr, bv, M=M, K=K, N=N, Mp=Mp, Kp=Kp, Np=Np)
     x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
     wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
     scale_neg = jnp.pad(scale_neg.astype(jnp.float32),
@@ -296,6 +341,9 @@ def int4_matmul_mrq_fq(x, wp, s_neg, s_pos, scale_neg, scale_pos, bias=None,
     bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
 
     grid = (Mp // bm_, Np // bn_, nk)
+    fspecs, fargs = _fusion_specs_args(
+        has_g=True, ps=ps2, bv=bv2, nm_rows=nm_rows, gr_rows=gr_rows,
+        bm_=bm_, bk_=group_k, bn_=bn_)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -310,30 +358,38 @@ def int4_matmul_mrq_fq(x, wp, s_neg, s_pos, scale_neg, scale_pos, bias=None,
             pl.BlockSpec((1, 1, bn_),
                          lambda m, n, k, g: (g[0], k, n)),   # scale_pos[g, k]
             pl.BlockSpec((1, bn_), lambda m, n, k, g: (0, n)),         # bias
-        ],
+        ] + fspecs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k, g: (m, n)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_mrq4_kernel, nk=nk, bk=group_k, half=8),
+        functools.partial(_mrq4_kernel, nk=nk, bk=group_k, half=8,
+                          has_ps=ps2 is not None, has_nm=nm_rows is not None,
+                          has_gr=gr_rows is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         interpret=interpret,
     )(jnp.asarray(g, jnp.int32).reshape(1), x, wp,
       s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
-      scale_neg, scale_pos, bias)
+      scale_neg, scale_pos, bias, *fargs)
     return out[:M, :N]
 
 
 # ---------------------------------------------------------------------------
 # vector-tgroup variants: per-ROW group indices, one packed weight stream
 # ---------------------------------------------------------------------------
-def _fq4_vec_kernel(gv_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
-                    bias_ref, o_ref, acc_ref, *, nk: int, bk: int, half: int):
+def _fq4_vec_kernel(gv_ref, *refs, nk: int, bk: int, half: int,
+                    has_ps: bool = False, has_nm: bool = False,
+                    has_gr: bool = False):
     """Vector-tgroup body for ``int4_matmul_fq``: the (G, 1, bn) stacks of
     THIS K step's scales/corrections stream for every group; each row
     gathers its own group's values with the exact one-hot product before
     the per-step dequantized accumulation."""
+    x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref, bias_ref = refs[:7]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    ps_ref, bv_ref, mu_ref, rsig_ref, sh_ref, sc_ref, gate_ref, res_ref = \
+        _unpack_fusion_refs(refs[7:-2], has_ps=has_ps, has_nm=has_nm,
+                            has_gr=has_gr)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -345,8 +401,10 @@ def _fq4_vec_kernel(gv_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
     ohf = oh.astype(jnp.float32)
     sx_row = _gather_rows(ohf, sx_ref, jnp.float32)      # (bm, 1)
     zx_row = _gather_rows(ohf, zx_ref, jnp.float32)      # (bm, 1)
+    xf = _fusion_prologue(x_ref[...].astype(jnp.float32), ps_ref, bv_ref,
+                          mu_ref, rsig_ref, sh_ref, sc_ref)
     xq = jnp.clip(
-        jnp.round(x_ref[...].astype(jnp.float32) / sx_row) + zx_row - half,
+        jnp.round(xf / sx_row) + zx_row - half,
         -half, half - 1).astype(jnp.int8)
     w = _unpack_w(w_ref, bk)
     partial = jax.lax.dot_general(
@@ -364,12 +422,15 @@ def _fq4_vec_kernel(gv_ref, x_ref, w_ref, sx_ref, zx_ref, scale_ref, corr_ref,
 
     @pl.when(k == nk - 1)
     def _epilogue():
-        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+        y = acc_ref[...] + bias_ref[...]
+        y = _fusion_epilogue(y, bv_ref, gate_ref, res_ref)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
                                              "out_dtype", "interpret"))
 def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
+                       ps=None, nm=None, gr=None, bv=None,
                        group_k=DEFAULT_BK, bm=DEFAULT_BM, bn=DEFAULT_BN,
                        out_dtype=jnp.float32, interpret=False):
     """``int4_matmul_fq`` with a per-ROW group vector gv (M,) int32.
@@ -377,7 +438,8 @@ def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
     The nibble-packed weight streams ONCE for the whole mixed-group
     batch; per K step the (G, 1, bn) scale/corr slices of every group
     ride along. A constant gv is bit-identical to the scalar path (same
-    elementwise ops, same f32 accumulation order).
+    elementwise ops, same f32 accumulation order). Optional ``ps``/
+    ``nm``/``gr``/``bv`` fusions as ``int8_matmul_fq``.
     """
     M, K = x.shape
     Kp = 2 * wp.shape[0]
@@ -396,6 +458,8 @@ def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
     if gv is None:
         gv = jnp.zeros((M,), jnp.int32)
     gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    ps2, bv2, nm_rows, gr_rows = _prep_fusions(
+        x, ps, nm, gr, bv, M=M, K=K, N=N, Mp=Mp, Kp=Kp, Np=Np)
     x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
     wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
     scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, 0), (0, Np - N)))
@@ -403,8 +467,13 @@ def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
     bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
 
     grid = (Mp // bm_, Np // bn_, nk)
+    fspecs, fargs = _fusion_specs_args(
+        has_g=False, ps=ps2, bv=bv2, nm_rows=nm_rows, gr_rows=gr_rows,
+        bm_=bm_, bk_=group_k, bn_=bn_)
     out = pl.pallas_call(
-        functools.partial(_fq4_vec_kernel, nk=nk, bk=group_k, half=8),
+        functools.partial(_fq4_vec_kernel, nk=nk, bk=group_k, half=8,
+                          has_ps=ps2 is not None, has_nm=nm_rows is not None,
+                          has_gr=gr_rows is not None),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),          # gv rows
@@ -418,21 +487,27 @@ def int4_matmul_fq_vec(x, wp, sx, zx, scale, corr, bias=None, gv=None, *,
             pl.BlockSpec((G, 1, bn_),
                          lambda m, n, k: (0, k, n)),       # corr[:, k]
             pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),          # bias
-        ],
+        ] + fspecs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(gv, x, wp, sx.astype(jnp.float32), zx.astype(jnp.float32),
-      scale, corr, bias)
+      scale, corr, bias, *fargs)
     return out[:M, :N]
 
 
-def _mrq4_vec_kernel(gv_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
-                     scale_p_ref, bias_ref, o_ref, acc_ref, *, nk: int,
-                     bk: int, half: int):
+def _mrq4_vec_kernel(gv_ref, *refs, nk: int, bk: int, half: int,
+                     has_ps: bool = False, has_nm: bool = False,
+                     has_gr: bool = False):
     """Vector-tgroup body for ``int4_matmul_mrq_fq``: per-row twin-region
     steps, ONE unpacked weight tile, per-row per-K-group region scales."""
+    x_ref, w_ref, sn_ref, sp_ref, scale_n_ref, scale_p_ref, bias_ref = \
+        refs[:7]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    ps_ref, bv_ref, mu_ref, rsig_ref, sh_ref, sc_ref, gate_ref, res_ref = \
+        _unpack_fusion_refs(refs[7:-2], has_ps=has_ps, has_nm=has_nm,
+                            has_gr=has_gr)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -443,7 +518,8 @@ def _mrq4_vec_kernel(gv_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
     ohf = _onehot_rows(gv_ref, G).astype(jnp.float32)
     sn_row = _gather_rows(ohf, sn_ref, jnp.float32)      # (bm, 1)
     sp_row = _gather_rows(ohf, sp_ref, jnp.float32)      # (bm, 1)
-    xf = x_ref[...].astype(jnp.float32)
+    xf = _fusion_prologue(x_ref[...].astype(jnp.float32), ps_ref, bv_ref,
+                          mu_ref, rsig_ref, sh_ref, sc_ref)
     neg = xf < 0
     qn = jnp.where(neg, jnp.clip(jnp.round(xf / sn_row), -half, 0),
                    0).astype(jnp.int8)
@@ -466,13 +542,16 @@ def _mrq4_vec_kernel(gv_ref, x_ref, w_ref, sn_ref, sp_ref, scale_n_ref,
 
     @pl.when(k == nk - 1)
     def _epilogue():
-        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+        y = acc_ref[...] + bias_ref[...]
+        y = _fusion_epilogue(y, bv_ref, gate_ref, res_ref)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("group_k", "bm", "bn",
                                              "out_dtype", "interpret"))
 def int4_matmul_mrq_fq_vec(x, wp, s_neg, s_pos, scale_neg, scale_pos,
-                           bias=None, gv=None, *, group_k=DEFAULT_BK,
+                           bias=None, gv=None, *, ps=None, nm=None, gr=None,
+                           bv=None, group_k=DEFAULT_BK,
                            bm=DEFAULT_BM, bn=DEFAULT_BN,
                            out_dtype=jnp.float32, interpret=False):
     """``int4_matmul_mrq_fq`` with a per-ROW group vector gv (M,) int32
@@ -493,6 +572,8 @@ def int4_matmul_mrq_fq_vec(x, wp, s_neg, s_pos, scale_neg, scale_pos,
     if gv is None:
         gv = jnp.zeros((M,), jnp.int32)
     gv = jnp.pad(jnp.asarray(gv, jnp.int32), (0, Mp - M)).reshape(Mp, 1)
+    ps2, bv2, nm_rows, gr_rows = _prep_fusions(
+        x, ps, nm, gr, bv, M=M, K=K, N=N, Mp=Mp, Kp=Kp, Np=Np)
     x = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kp - K)))
     wp = jnp.pad(wp, ((0, 0), (0, Np - N)))
     scale_neg = jnp.pad(scale_neg.astype(jnp.float32),
@@ -502,8 +583,13 @@ def int4_matmul_mrq_fq_vec(x, wp, s_neg, s_pos, scale_neg, scale_pos,
     bias = jnp.pad(bias.astype(jnp.float32), (0, Np - N)).reshape(1, Np)
 
     grid = (Mp // bm_, Np // bn_, nk)
+    fspecs, fargs = _fusion_specs_args(
+        has_g=False, ps=ps2, bv=bv2, nm_rows=nm_rows, gr_rows=gr_rows,
+        bm_=bm_, bk_=group_k, bn_=bn_)
     out = pl.pallas_call(
-        functools.partial(_mrq4_vec_kernel, nk=nk, bk=group_k, half=8),
+        functools.partial(_mrq4_vec_kernel, nk=nk, bk=group_k, half=8,
+                          has_ps=ps2 is not None, has_nm=nm_rows is not None,
+                          has_gr=gr_rows is not None),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm_, 1), lambda m, n, k: (m, 0)),          # gv rows
@@ -517,11 +603,11 @@ def int4_matmul_mrq_fq_vec(x, wp, s_neg, s_pos, scale_neg, scale_pos,
             pl.BlockSpec((G, 1, bn_),
                          lambda m, n, k: (0, k, n)),       # scale_pos[:, k]
             pl.BlockSpec((1, bn_), lambda m, n, k: (0, n)),          # bias
-        ],
+        ] + fspecs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(gv, x, wp, s_neg.astype(jnp.float32), s_pos.astype(jnp.float32),
-      scale_neg, scale_pos, bias)
+      scale_neg, scale_pos, bias, *fargs)
     return out[:M, :N]

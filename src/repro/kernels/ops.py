@@ -34,6 +34,17 @@ group axis — per-tensor quantizers pack as G=1 — and the timestep group
 is a traced scalar resolved inside the kernels, so ``ddpm_sample``'s
 lax.scan stays one compiled executable.
 
+Channel-balanced ops (``x_prescale`` from HO's balance search) pack like
+everything else: the balance divide folds into the kernels' quantize
+prologue (the pack stores ``x_prescale`` and the wrappers thread it as
+``ps=``) and its inverse folds into the weight codes at pack time
+(``w * ps[:, None]`` — the calibrated ``ChannelQ`` saw exactly that
+product, so the codes are unchanged). The linear wrappers additionally
+accept the adaLN ``norm_mod=(shift, scale)`` / ``gate_residual=(gate,
+residual)`` fusion seams (see ``int8_fused``), so the layernorm-modulate
+chain before a matmul and the gate-scaled residual add after it run in
+VMEM instead of round-tripping fp activations through HBM.
+
 On this CPU container the wrappers run with ``interpret=True`` (kernel
 body executed in Python for correctness); on a real TPU backend the same
 calls compile to Mosaic. ``INTERPRET`` flips automatically.
@@ -108,17 +119,47 @@ def _weight_codes(wq_q: ChannelQ, w, half: int = 128) -> Optional[tuple]:
     return codes, sw
 
 
+def _prescale_vec(qp: Dict[str, Any], w) -> Optional[jnp.ndarray]:
+    """The op's channel-balance vector as a flat (K,) f32, or None.
+
+    HO's balance search calibrated this op's quantizers on ``x / ps`` and
+    ``w * ps`` — the kernels replay the divide in their quantize prologue
+    (bitwise the fake-quant ``_q_in`` step; a multiply-by-inverse would
+    drift by ulps) and the pack builders bake the multiply into the
+    weight codes."""
+    ps = qp.get("x_prescale")
+    if ps is None:
+        return None
+    ps = jnp.asarray(ps, jnp.float32).reshape(-1)
+    w = jnp.asarray(w)
+    if w.ndim == 2 and ps.shape[0] != w.shape[0]:
+        raise ValueError(
+            f"x_prescale length {ps.shape[0]} != weight K {w.shape[0]}")
+    return ps
+
+
+def _balanced_w(w, ps: Optional[jnp.ndarray]):
+    """Fold the balance multiply into the weight the codes are built from
+    — the calibrated ``ChannelQ`` saw exactly ``w * ps``, so the codes
+    (and the pack-time per-group absmax rescale at 4 bits) match what
+    calibration measured."""
+    if ps is None:
+        return w
+    return jnp.asarray(w, jnp.float32) * ps[:, None]
+
+
 def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     """Pack one linear op for the fused int8 kernel. Accepts a per-tensor
     ``UniformQ`` or a time-grouped ``TGQ(UniformQ)`` activation quantizer
     and a ``ChannelQ`` weight quantizer. TGQ packs as stacked (G, ·)
     scale/zero/corr arrays gathered per-group inside the kernel.
     Bits-driven: 8- and 6-bit recipes pack here (byte codes, only the
-    code range differs); 4-bit goes to ``pack_int4_linear``."""
-    if qp.get("x_prescale") is not None:
-        return None       # channel-balanced ops stay on the fake-quant
-        # path: their quantizers are calibrated on x/ps and w*ps, and the
-        # kernel's quantize prologue has no prescale divide
+    code range differs); 4-bit goes to ``pack_int4_linear``.
+
+    Channel-balanced ops pack too: the quantizers were calibrated on
+    x / ps and w * ps, so the weight codes are built from ``w * ps`` (the
+    very tensor the ``ChannelQ`` saw) and the pack records ``x_prescale``
+    for the kernel's in-prologue divide — no fake-quant fallback."""
     xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
     if not isinstance(xq_q, UniformQ) or not isinstance(qp.get("w"), ChannelQ):
         return None
@@ -132,13 +173,14 @@ def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         zx = _stack_param(xq_q.zero, is_tgq)               # (G, 1)
     except ValueError:
         return None
-    cw = _weight_codes(wq_q, w, half)
+    ps = _prescale_vec(qp, w)
+    cw = _weight_codes(wq_q, _balanced_w(w, ps), half)
     if cw is None:
         return None
     codes, sw = cw
     colsum = jnp.sum(codes.astype(jnp.int32), axis=0)      # (N,)
     z_eff = jnp.round(zx).astype(jnp.int32) - half         # (G, 1)
-    return {
+    pack = {
         "wq": codes,
         "sx": sx,
         "zx": zx,
@@ -147,14 +189,18 @@ def pack_int8_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "groups": int(sx.shape[0]),
         "bits": bits,
     }
+    if ps is not None:
+        pack["x_prescale"] = ps
+    return pack
 
 
 def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     """Pack a linear whose input is MRQ-signed (post-GELU fc2) — per-tensor
     ``MRQSignedQ`` or time-grouped ``TGQ(MRQSignedQ)`` — for the
-    single-pass MRQ kernel (one W traversal, dual region accumulators)."""
-    if qp.get("x_prescale") is not None:
-        return None       # see pack_int8_linear: no prescale in the kernel
+    single-pass MRQ kernel (one W traversal, dual region accumulators).
+    Channel-balanced ops pack with the prescale folded — see
+    ``pack_int8_linear`` (the balance vector is positive, so the MRQ sign
+    split is unaffected by the in-prologue divide)."""
     xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
     if not isinstance(xq_q, MRQSignedQ) or not isinstance(
             qp.get("w"), ChannelQ):
@@ -168,11 +214,12 @@ def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         s_pos = _stack_param(xq_q.s_pos, is_tgq)           # (G, 1)
     except ValueError:
         return None
-    cw = _weight_codes(wq_q, w, 2 ** (bits - 1))
+    ps = _prescale_vec(qp, w)
+    cw = _weight_codes(wq_q, _balanced_w(w, ps), 2 ** (bits - 1))
     if cw is None:
         return None
     codes, sw = cw
-    return {
+    pack = {
         "wq": codes,
         "s_neg": s_neg,
         "s_pos": s_pos,
@@ -181,6 +228,9 @@ def pack_int8_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "groups": int(s_neg.shape[0]),
         "bits": bits,
     }
+    if ps is not None:
+        pack["x_prescale"] = ps
+    return pack
 
 
 # ---------------------------------------------------------------------------
@@ -214,9 +264,9 @@ def pack_int4_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     """Pack one linear op for ``int4_matmul_fq``: ``UniformQ`` /
     ``TGQ(UniformQ)`` activations + ``ChannelQ`` weights at 4 bits.
     Weights are nibble-packed two-per-byte; scale/corr carry the extra
-    per-K-group axis (G, nk, N)."""
-    if qp.get("x_prescale") is not None:
-        return None       # see pack_int8_linear: no prescale in the kernel
+    per-K-group axis (G, nk, N). Channel-balanced ops pack with the
+    prescale folded (see ``pack_int8_linear``); the per-K-group absmax
+    rescale runs on the balanced weight, matching calibration."""
     xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
     if not isinstance(xq_q, UniformQ) or not isinstance(qp.get("w"), ChannelQ):
         return None
@@ -228,14 +278,15 @@ def pack_int4_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         zx = _stack_param(xq_q.zero, is_tgq)               # (G, 1)
     except ValueError:
         return None
-    gc = _int4_group_codes(wq_q, w)
+    ps = _prescale_vec(qp, w)
+    gc = _int4_group_codes(wq_q, _balanced_w(w, ps))
     if gc is None:
         return None
     codes3, sw, group_k = gc
     N = codes3.shape[-1]
     colsum = jnp.sum(codes3.astype(jnp.int32), axis=1)     # (nk, N)
     z_eff = jnp.round(zx).astype(jnp.int32) - 8            # (G, 1)
-    return {
+    pack = {
         "wp": pack_int4(codes3.reshape(-1, N)),             # (Kp/2, N)
         "sx": sx,
         "zx": zx,
@@ -246,14 +297,16 @@ def pack_int4_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "k": int(jnp.asarray(w).shape[0]),
         "bits": 4,
     }
+    if ps is not None:
+        pack["x_prescale"] = ps
+    return pack
 
 
 def pack_int4_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
     """Pack an MRQ-signed-input linear (post-GELU fc2) for
     ``int4_matmul_mrq_fq``: nibble-packed weights, per-region per-K-group
-    scales (G, nk, N), no zero-point correction."""
-    if qp.get("x_prescale") is not None:
-        return None
+    scales (G, nk, N), no zero-point correction. Channel-balanced ops
+    pack with the prescale folded (see ``pack_int8_linear``)."""
     xq_q, is_tgq = _unwrap_tgq(qp.get("x"))
     if not isinstance(xq_q, MRQSignedQ) or not isinstance(
             qp.get("w"), ChannelQ):
@@ -266,12 +319,13 @@ def pack_int4_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         s_pos = _stack_param(xq_q.s_pos, is_tgq)           # (G, 1)
     except ValueError:
         return None
-    gc = _int4_group_codes(wq_q, w)
+    ps = _prescale_vec(qp, w)
+    gc = _int4_group_codes(wq_q, _balanced_w(w, ps))
     if gc is None:
         return None
     codes3, sw, group_k = gc
     N = codes3.shape[-1]
-    return {
+    pack = {
         "wp": pack_int4(codes3.reshape(-1, N)),             # (Kp/2, N)
         "s_neg": s_neg,
         "s_pos": s_pos,
@@ -282,6 +336,9 @@ def pack_int4_mrq_linear(qp: Dict[str, Any], w: np.ndarray) -> Optional[dict]:
         "k": int(jnp.asarray(w).shape[0]),
         "bits": 4,
     }
+    if ps is not None:
+        pack["x_prescale"] = ps
+    return pack
 
 
 def _broadcast_groups(*cols):
@@ -434,32 +491,69 @@ def _as_vec(g, B: int):
     return jnp.full((B,), jnp.asarray(g, jnp.int32))
 
 
-def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+def _fusion_kwargs(pack: dict, xm, norm_mod, gate_residual) -> dict:
+    """Kernel-side ``ps``/``nm``/``gr``/``bv`` operands for one linear.
+
+    ``norm_mod = (shift, scale)`` and ``gate_residual = (gate, residual)``
+    carry per-BATCH (B, ·) adaLN rows (the residual is x-shaped). Matmul
+    rows stay batch-major under ``x.reshape(-1, K)``, so the row->batch
+    map the kernels gather with is a plain repeat. The channel-balance
+    prescale rides the pack itself (``pack_int8_linear``)."""
+    kw = {}
+    ps = pack.get("x_prescale")
+    if ps is not None:
+        kw["ps"] = ps
+    if norm_mod is None and gate_residual is None:
+        return kw
+    ref_rows = norm_mod[0] if norm_mod is not None else gate_residual[0]
+    B = int(ref_rows.shape[0])
+    n_rows = int(xm.shape[0])
+    if n_rows % B != 0:
+        raise ValueError(
+            f"fusion rows: {n_rows} matmul rows not divisible by batch {B}")
+    kw["bv"] = jnp.repeat(jnp.arange(B, dtype=jnp.int32), n_rows // B)
+    if norm_mod is not None:
+        sh, sc = norm_mod
+        kw["nm"] = (jnp.asarray(sh, jnp.float32), jnp.asarray(sc, jnp.float32))
+    if gate_residual is not None:
+        gate, res = gate_residual
+        res = jnp.asarray(res, jnp.float32)
+        kw["gr"] = (jnp.asarray(gate, jnp.float32),
+                    res.reshape(-1, res.shape[-1]))
+    return kw
+
+
+def int8_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None,
+                norm_mod=None, gate_residual=None):
     """Fused quantize->matmul->dequant serving linear (TGQ-aware).
 
     ``tgroup`` may be a per-slot (B,) vector: the whole mixed-timestep
     batch then runs as ONE ``int8_matmul_fq_vec`` call — weights stream
-    once, each row gathers its own group's quant params in VMEM."""
+    once, each row gathers its own group's quant params in VMEM.
+    ``norm_mod``/``gate_residual`` fuse the surrounding adaLN elementwise
+    chains into the kernel (see ``_fusion_kwargs``)."""
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     xm = x.reshape(-1, shape[-1])
     g = _group_index(pack, tgroup)
     bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    fkw = _fusion_kwargs(pack, xm, norm_mod, gate_residual)
     if _is_vec(g):
         y = int8_matmul_fq_vec(
             xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
             pack["corr"], bias=bias_f, gv=_rows_vec(g, xm.shape[0]),
             bits=pack.get("bits", 8), out_dtype=out_dtype,
-            interpret=INTERPRET)
+            interpret=INTERPRET, **fkw)
     else:
         y = int8_matmul_fq(
             xm, pack["wq"], pack["sx"], pack["zx"], pack["scale"],
             pack["corr"], bias=bias_f, g=g, bits=pack.get("bits", 8),
-            out_dtype=out_dtype, interpret=INTERPRET)
+            out_dtype=out_dtype, interpret=INTERPRET, **fkw)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
-def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None,
+                    norm_mod=None, gate_residual=None):
     """MRQ-input serving linear: single-pass kernel (one W traversal,
     in-kernel sign masking, dual region accumulators)."""
     out_dtype = out_dtype or x.dtype
@@ -467,22 +561,24 @@ def int8_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     xm = x.reshape(-1, shape[-1])
     g = _group_index(pack, tgroup)
     bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    fkw = _fusion_kwargs(pack, xm, norm_mod, gate_residual)
     if _is_vec(g):
         y = int8_matmul_mrq_fq_vec(
             xm, pack["wq"], pack["s_neg"], pack["s_pos"],
             pack["scale_neg"], pack["scale_pos"], bias=bias_f,
             gv=_rows_vec(g, xm.shape[0]), bits=pack.get("bits", 8),
-            out_dtype=out_dtype, interpret=INTERPRET)
+            out_dtype=out_dtype, interpret=INTERPRET, **fkw)
     else:
         y = int8_matmul_mrq_fq(
             xm, pack["wq"], pack["s_neg"], pack["s_pos"],
             pack["scale_neg"], pack["scale_pos"], bias=bias_f, g=g,
             bits=pack.get("bits", 8), out_dtype=out_dtype,
-            interpret=INTERPRET)
+            interpret=INTERPRET, **fkw)
     return y.reshape(shape[:-1] + (pack["wq"].shape[1],))
 
 
-def int4_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+def int4_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None,
+                norm_mod=None, gate_residual=None):
     """Packed-int4 serving linear: nibble weights widen in the VMEM
     prologue, f32 accumulation with per-K-group dequant (TGQ-aware)."""
     out_dtype = out_dtype or x.dtype
@@ -490,21 +586,23 @@ def int4_linear(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     xm = x.reshape(-1, shape[-1])
     g = _group_index(pack, tgroup)
     bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    fkw = _fusion_kwargs(pack, xm, norm_mod, gate_residual)
     if _is_vec(g):
         y = int4_matmul_fq_vec(
             xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
             pack["corr"], bias=bias_f, gv=_rows_vec(g, xm.shape[0]),
             group_k=pack["group_k"], out_dtype=out_dtype,
-            interpret=INTERPRET)
+            interpret=INTERPRET, **fkw)
     else:
         y = int4_matmul_fq(
             xm, pack["wp"], pack["sx"], pack["zx"], pack["scale"],
             pack["corr"], bias=bias_f, g=g, group_k=pack["group_k"],
-            out_dtype=out_dtype, interpret=INTERPRET)
+            out_dtype=out_dtype, interpret=INTERPRET, **fkw)
     return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
 
 
-def int4_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
+def int4_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None,
+                    norm_mod=None, gate_residual=None):
     """Packed-int4 MRQ-input serving linear (one nibble-weight traversal,
     dual region dots, per-K-group dequant)."""
     out_dtype = out_dtype or x.dtype
@@ -512,18 +610,19 @@ def int4_linear_mrq(x, pack: dict, bias=None, out_dtype=None, tgroup=None):
     xm = x.reshape(-1, shape[-1])
     g = _group_index(pack, tgroup)
     bias_f = None if bias is None else jnp.asarray(bias, jnp.float32)
+    fkw = _fusion_kwargs(pack, xm, norm_mod, gate_residual)
     if _is_vec(g):
         y = int4_matmul_mrq_fq_vec(
             xm, pack["wp"], pack["s_neg"], pack["s_pos"],
             pack["scale_neg"], pack["scale_pos"], bias=bias_f,
             gv=_rows_vec(g, xm.shape[0]), group_k=pack["group_k"],
-            out_dtype=out_dtype, interpret=INTERPRET)
+            out_dtype=out_dtype, interpret=INTERPRET, **fkw)
     else:
         y = int4_matmul_mrq_fq(
             xm, pack["wp"], pack["s_neg"], pack["s_pos"],
             pack["scale_neg"], pack["scale_pos"], bias=bias_f, g=g,
             group_k=pack["group_k"], out_dtype=out_dtype,
-            interpret=INTERPRET)
+            interpret=INTERPRET, **fkw)
     return y.reshape(shape[:-1] + (pack["wp"].shape[1],))
 
 

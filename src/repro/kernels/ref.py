@@ -163,6 +163,131 @@ def int8_matmul_mrq_fq_ref(x, wq, s_neg, s_pos, scale_neg, scale_pos,
     return y.astype(out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# prologue/epilogue fusion oracles (adaLN norm-modulate, channel-balance
+# prescale, gate+residual) — see ``int8_fused``'s fusion contract
+# ---------------------------------------------------------------------------
+def fused_prologue_ref(x, nm=None, ps=None, bv=None, eps: float = 1e-6):
+    """What the kernels' VMEM prologue computes before quantizing.
+
+    ``nm = (shift, scale)`` per-batch (B, K) adaLN rows with ``bv`` the
+    (M,) row->batch map: non-affine layernorm (mean, var, ``rsqrt(var +
+    eps)``) then ``y * (1 + scale[bv]) + shift[bv]``. ``ps`` is the (K,)
+    channel-balance vector, applied as a DIVIDE after the modulate (the
+    fake-quant ``_q_in`` order). x: (M, K) rows."""
+    x = x.astype(jnp.float32)
+    if nm is not None:
+        sh, sc = nm
+        bv = jnp.asarray(bv, jnp.int32)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+        x = (x * (1.0 + jnp.take(jnp.asarray(sc, jnp.float32), bv, axis=0))
+             + jnp.take(jnp.asarray(sh, jnp.float32), bv, axis=0))
+    if ps is not None:
+        x = x / jnp.asarray(ps, jnp.float32)[None, :]
+    return x
+
+
+def fused_epilogue_ref(y, gr=None, bv=None):
+    """What the kernels' dequant epilogue computes after the bias add:
+    ``gr = (gate, residual)`` with gate (B, N) rows, residual (M, N), and
+    ``bv`` the (M,) row->batch map — ``residual + gate[bv] * y``."""
+    if gr is not None:
+        gate, res = gr
+        bv = jnp.asarray(bv, jnp.int32)
+        y = (jnp.asarray(res, jnp.float32)
+             + jnp.take(jnp.asarray(gate, jnp.float32), bv, axis=0) * y)
+    return y
+
+
+def int8_matmul_fq_fused_ref(x, wq, sx, zx, scale, corr, bias=None, g=0,
+                             ps=None, nm=None, gr=None, bv=None,
+                             bits: int = 8, out_dtype=jnp.float32):
+    """``int8_matmul_fq`` with fusions: prologue -> fq oracle -> epilogue."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int8_matmul_fq_ref(xf, wq, sx, zx, scale, corr, bias=bias, g=g,
+                           bits=bits)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int8_matmul_mrq_fq_fused_ref(x, wq, s_neg, s_pos, scale_neg, scale_pos,
+                                 bias=None, g=0, ps=None, nm=None, gr=None,
+                                 bv=None, bits: int = 8,
+                                 out_dtype=jnp.float32):
+    """``int8_matmul_mrq_fq`` with fusions (prologue before the sign
+    split — the balance vector is positive, so regions are unchanged)."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int8_matmul_mrq_fq_ref(xf, wq, s_neg, s_pos, scale_neg, scale_pos,
+                               bias=bias, g=g, bits=bits)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int4_matmul_fq_fused_ref(x, wp, sx, zx, scale, corr, bias=None, g=0,
+                             ps=None, nm=None, gr=None, bv=None,
+                             group_k: int = 256, out_dtype=jnp.float32):
+    """``int4_matmul_fq`` with fusions."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int4_matmul_fq_ref(xf, wp, sx, zx, scale, corr, bias=bias, g=g,
+                           group_k=group_k)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int4_matmul_mrq_fq_fused_ref(x, wp, s_neg, s_pos, scale_neg, scale_pos,
+                                 bias=None, g=0, ps=None, nm=None, gr=None,
+                                 bv=None, group_k: int = 256,
+                                 out_dtype=jnp.float32):
+    """``int4_matmul_mrq_fq`` with fusions."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int4_matmul_mrq_fq_ref(xf, wp, s_neg, s_pos, scale_neg, scale_pos,
+                               bias=bias, g=g, group_k=group_k)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int8_matmul_fq_vec_fused_ref(x, wq, sx, zx, scale, corr, bias=None,
+                                 gv=None, ps=None, nm=None, gr=None, bv=None,
+                                 bits: int = 8, out_dtype=jnp.float32):
+    """Vector-tgroup sibling of ``int8_matmul_fq_fused_ref``."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int8_matmul_fq_vec_ref(xf, wq, sx, zx, scale, corr, bias=bias,
+                               gv=gv, bits=bits)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int8_matmul_mrq_fq_vec_fused_ref(x, wq, s_neg, s_pos, scale_neg,
+                                     scale_pos, bias=None, gv=None, ps=None,
+                                     nm=None, gr=None, bv=None,
+                                     bits: int = 8, out_dtype=jnp.float32):
+    """Vector-tgroup sibling of ``int8_matmul_mrq_fq_fused_ref``."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int8_matmul_mrq_fq_vec_ref(xf, wq, s_neg, s_pos, scale_neg,
+                                   scale_pos, bias=bias, gv=gv, bits=bits)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int4_matmul_fq_vec_fused_ref(x, wp, sx, zx, scale, corr, bias=None,
+                                 gv=None, ps=None, nm=None, gr=None, bv=None,
+                                 group_k: int = 256, out_dtype=jnp.float32):
+    """Vector-tgroup sibling of ``int4_matmul_fq_fused_ref``."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int4_matmul_fq_vec_ref(xf, wp, sx, zx, scale, corr, bias=bias,
+                               gv=gv, group_k=group_k)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
+def int4_matmul_mrq_fq_vec_fused_ref(x, wp, s_neg, s_pos, scale_neg,
+                                     scale_pos, bias=None, gv=None, ps=None,
+                                     nm=None, gr=None, bv=None,
+                                     group_k: int = 256,
+                                     out_dtype=jnp.float32):
+    """Vector-tgroup sibling of ``int4_matmul_mrq_fq_fused_ref``."""
+    xf = fused_prologue_ref(x, nm=nm, ps=ps, bv=bv)
+    y = int4_matmul_mrq_fq_vec_ref(xf, wp, s_neg, s_pos, scale_neg,
+                                   scale_pos, bias=bias, gv=gv,
+                                   group_k=group_k)
+    return fused_epilogue_ref(y, gr=gr, bv=bv).astype(out_dtype)
+
+
 def softmax_mrq_ref(scores, s1, bits: int, out_dtype=jnp.float32):
     """Row softmax (last axis, f32 accumulation) then MRQ two-region
     quant-dequant (§III-C)."""

@@ -42,22 +42,39 @@ import warnings
 
 
 def fake_quant_fallback_warning(artifact) -> "str | None":
-    """The message served when a quantized artifact CANNOT lower onto the
-    Pallas kernels (no packs — e.g. channel-balanced HO ops, or an
-    artifact from an older writer), or None when the kernel path is
-    active. A named helper so the no-silent-fallback contract is testable
-    without spinning up an engine: every --quantize/--load-artifact serve
-    either runs the packed kernels or says out loud that it does not.
+    """The message served when a quantized artifact cannot lower (fully)
+    onto the Pallas kernels, or None when every quantized matmul runs a
+    kernel. Two shapes of failure, both said out loud:
+
+    - no packs at all (an artifact from an older writer): the whole
+      serve is fake-quant;
+    - PARTIAL packs: ``artifact.fallback_ops()`` is non-empty — the
+      message names exactly which op ids fell back and how many, so a
+      deploy log never hides a per-op fp island. Since prescale folding
+      landed, ``channel_balance=True`` recipes pack everything and this
+      returns None.
+
+    A named helper so the no-silent-fallback contract is testable
+    without spinning up an engine: every --quantize/--load-artifact
+    serve either runs the packed kernels or says which ops do not.
     """
-    if artifact.has_kernel_packs:
+    if not artifact.has_kernel_packs:
+        return (
+            f"artifact {artifact.recipe.bits}/{artifact.recipe.method} "
+            "carries no kernel packs: serving falls back to the FAKE-QUANT "
+            "path (simulated quant-dequant in fp32 — no int8/int4 Pallas "
+            "kernels, no weight-traffic win). Re-quantize with a "
+            "kernel-deployable recipe (w8a8/w6a6 -> fused int8 kernels, "
+            "w4a4 -> packed int4) for the deployment path.")
+    fb = artifact.fallback_ops()
+    if not fb:
         return None
+    shown = ", ".join(fb[:8]) + (", ..." if len(fb) > 8 else "")
     return (
-        f"artifact {artifact.recipe.bits}/{artifact.recipe.method} carries "
-        "no kernel packs: serving falls back to the FAKE-QUANT path "
-        "(simulated quant-dequant in fp32 — no int8/int4 Pallas kernels, "
-        "no weight-traffic win). Re-quantize with a kernel-deployable "
-        "recipe (w8a8/w6a6 -> fused int8 kernels, w4a4 -> packed int4) "
-        "for the deployment path.")
+        f"artifact {artifact.recipe.bits}/{artifact.recipe.method}: "
+        f"{len(fb)} quantized op(s) carry no kernel pack and fall back to "
+        f"the FAKE-QUANT path: {shown}. Every other op runs the Pallas "
+        "kernels; re-quantize to clear the residue.")
 
 
 def _warn_if_fake_quant(artifact) -> None:

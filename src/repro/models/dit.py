@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.nn import initializers as init
 from repro.nn.ctx import FPContext
 from repro.nn.layers import (
-    layernorm_apply, linear_init, sincos_2d, timestep_embedding,
+    linear_init, sincos_2d, timestep_embedding,
     embedding_init, embedding_apply,
 )
 
@@ -135,20 +135,24 @@ def unpatchify(x, patch, img_size, ch):
 # ---------------------------------------------------------------------------
 # block
 # ---------------------------------------------------------------------------
-def _modulate(x, shift, scale):
-    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
-
-
 def dit_block_apply(p, cfg: DiTCfg, x, c, *, ctx=_FP, name="blk"):
-    """x: (B,N,d); c: (B,d) conditioning. adaLN-Zero MHSA + MLP."""
+    """x: (B,N,d); c: (B,d) conditioning. adaLN-Zero MHSA + MLP.
+
+    The adaLN elementwise chains ride the ``ctx.linear`` fusion seams
+    instead of being computed here: ``norm_mod=(shift, scale)`` hands the
+    layernorm-modulate chain to the qkv/fc1 matmul (fused into the
+    kernel's quantize prologue under ``QuantContext(kernel=True)``) and
+    ``gate_residual=(gate, x)`` hands the ``x + g * o`` residual add to
+    the proj/fc2 matmul's epilogue — no normalized or pre-gate fp tensor
+    round-trips HBM on the kernel path."""
     B, N, d = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
     mod = ctx.linear(f"{name}/ada", jax.nn.silu(c), p["ada"]["w"], p["ada"]["b"])
     sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
 
     # --- MHSA ---------------------------------------------------------------
-    h = _modulate(layernorm_apply({}, x), sh1, sc1)
-    qkv = ctx.linear(f"{name}/qkv", h, p["qkv"]["w"], p["qkv"]["b"])
+    qkv = ctx.linear(f"{name}/qkv", x, p["qkv"]["w"], p["qkv"]["b"],
+                     norm_mod=(sh1, sc1))
     q, k, v = jnp.split(qkv.reshape(B, N, 3, H, hd), 3, axis=2)
     q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]          # (B,N,H,hd)
     # GQA-general layout with one query per kv head (G=1): the attention
@@ -157,17 +161,16 @@ def dit_block_apply(p, cfg: DiTCfg, x, c, *, ctx=_FP, name="blk"):
     # QuantContext(kernel=True). Op names stay {name}/attn/{qk,probs,pv}.
     o = ctx.attention(f"{name}/attn", q.reshape(B, N, H, 1, hd), k, v,
                       scale=hd ** -0.5)
-    o = ctx.linear(f"{name}/proj", o.reshape(B, N, d), p["proj"]["w"],
-                   p["proj"]["b"])
-    x = x + g1[:, None, :] * o
+    x = ctx.linear(f"{name}/proj", o.reshape(B, N, d), p["proj"]["w"],
+                   p["proj"]["b"], gate_residual=(g1, x))
 
     # --- MLP ------------------------------------------------------------------
-    h = _modulate(layernorm_apply({}, x), sh2, sc2)
-    h = ctx.linear(f"{name}/fc1", h, p["fc1"]["w"], p["fc1"]["b"])
+    h = ctx.linear(f"{name}/fc1", x, p["fc1"]["w"], p["fc1"]["b"],
+                   norm_mod=(sh2, sc2))
     h = jax.nn.gelu(h, approximate=True)
     h = ctx.act(f"{name}/gelu", h, "post_gelu")
-    h = ctx.linear(f"{name}/fc2", h, p["fc2"]["w"], p["fc2"]["b"])
-    x = x + g2[:, None, :] * h
+    x = ctx.linear(f"{name}/fc2", h, p["fc2"]["w"], p["fc2"]["b"],
+                   gate_residual=(g2, x))
     return x
 
 
@@ -205,8 +208,8 @@ def dit_apply(p, cfg: DiTCfg, x, t, y, *, ctx=_FP):
     mod = ctx.linear("final_ada", jax.nn.silu(c), p["final_ada"]["w"],
                      p["final_ada"]["b"])
     sh, sc = jnp.split(mod, 2, axis=-1)
-    h = _modulate(layernorm_apply({}, h), sh, sc)
-    out = ctx.linear("final", h, p["final"]["w"], p["final"]["b"])
+    out = ctx.linear("final", h, p["final"]["w"], p["final"]["b"],
+                     norm_mod=(sh, sc))
     return unpatchify(out, cfg.patch, cfg.img_size, cfg.in_ch)
 
 

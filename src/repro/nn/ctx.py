@@ -48,6 +48,39 @@ import jax.numpy as jnp
 NEG_INF = -1e9          # additive mask value for attention scores
 
 
+def apply_norm_mod(x, norm_mod, eps: float = 1e-6):
+    """Reference adaLN norm-modulate chain for the ``ctx.linear`` seam.
+
+    ``norm_mod = (shift, scale)`` with per-BATCH (B, K) rows; x carries a
+    leading batch axis. Computes the non-affine layernorm (the exact op
+    sequence of ``layers.layernorm_apply`` — mean, var, ``lax.rsqrt(var +
+    eps)``) followed by ``y * (1 + scale) + shift``. Contexts that do NOT
+    lower to kernels run this in fp; ``QuantContext(kernel=True)`` passes
+    the rows to the fused kernels, whose VMEM prologue replays the same
+    ops (bit-identical — asserted by the conformance suite)."""
+    if norm_mod is None:
+        return x
+    shift, scale = norm_mod
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    bshape = (shift.shape[0],) + (1,) * (x.ndim - 2) + (shift.shape[-1],)
+    return y * (1.0 + scale.reshape(bshape)) + shift.reshape(bshape)
+
+
+def apply_gate_residual(y, gate_residual):
+    """Reference adaLN gate + residual epilogue for ``ctx.linear``.
+
+    ``gate_residual = (gate, residual)`` with gate (B, N) rows and a
+    y-shaped residual: returns ``residual + gate * y``. The kernel path
+    fuses this into the dequant epilogue ahead of the single HBM write."""
+    if gate_residual is None:
+        return y
+    gate, res = gate_residual
+    bshape = (gate.shape[0],) + (1,) * (y.ndim - 2) + (gate.shape[-1],)
+    return res + gate.reshape(bshape) * y
+
+
 @dataclasses.dataclass
 class OpContext:
     """Base class. ``tgroup`` is the TGQ timestep-group index — a traced
@@ -68,7 +101,15 @@ class OpContext:
         return dataclasses.replace(self, tgroup=tgroup)
 
     # -- op seams ----------------------------------------------------------
-    def linear(self, name: str, x, w, b=None):
+    def linear(self, name: str, x, w, b=None, norm_mod=None,
+               gate_residual=None):
+        """Projection seam. ``norm_mod=(shift, scale)`` asks the context
+        to apply the adaLN layernorm-modulate chain to x first;
+        ``gate_residual=(gate, residual)`` asks it to finish with
+        ``residual + gate * y``. Passing them through the seam (instead
+        of computing them in the model) lets kernel-lowering contexts
+        fuse both into the matmul's VMEM prologue/epilogue; every other
+        context applies the fp reference helpers above."""
         raise NotImplementedError
 
     def einsum(self, name: str, spec: str, a, b, b_is_weight: bool = False):
@@ -106,11 +147,12 @@ class OpContext:
 class FPContext(OpContext):
     """Full-precision passthrough (the default for training and FP eval)."""
 
-    def linear(self, name, x, w, b=None):
+    def linear(self, name, x, w, b=None, norm_mod=None, gate_residual=None):
+        x = apply_norm_mod(x, norm_mod)
         y = x @ w
         if b is not None:
             y = y + b
-        return y
+        return apply_gate_residual(y, gate_residual)
 
     def einsum(self, name, spec, a, b, b_is_weight=False):
         return jnp.einsum(spec, a, b)

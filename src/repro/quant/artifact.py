@@ -125,6 +125,29 @@ class QuantArtifact:
                                          "int4_mrq", "int8_qk", "int8_pv"))
                    for qp in self.qparams.values())
 
+    def fallback_ops(self) -> List[str]:
+        """Op names that would take the fake-quant path under
+        ``context(kernel=True)`` — quantized matmul ops whose qparams
+        carry NO kernel pack. Empty list == every quantized matmul in
+        the artifact lowers onto a Pallas kernel (the zero-fallback
+        deployment contract; ``launch.serve`` names these ops in its
+        fallback warning). Activation-only entries (softmax/GELU hooks)
+        are not matmuls and are never counted."""
+        out: List[str] = []
+        for name in sorted(self.qparams):
+            qp = self.qparams[name]
+            if name.endswith("/qk"):
+                if "int8_qk" not in qp:
+                    out.append(name)
+            elif name.endswith("/pv"):
+                if "int8_pv" not in qp:
+                    out.append(name)
+            elif "w" in qp and not any(
+                    p in qp for p in ("int8", "int8_mrq", "int4",
+                                      "int4_mrq")):
+                out.append(name)
+        return out
+
     def context(self, kernel: Optional[bool] = None,
                 attn_impl: Optional[str] = None):
         """The op context serving this artifact — replaces

@@ -37,6 +37,13 @@ Tolerance registry — the documented per-path numeric contract:
     to the per-row ``*_vec_ref`` jitted oracles at the parent family's
     tolerance, and the ops wrappers' batched dispatch is asserted
     bit-identical to stacking per-slot scalar-tgroup calls.
+  - Prologue/epilogue fusions (channel-balance prescale, adaLN
+    norm-modulate, gate+residual — each alone and all three combined):
+    the fused kernels inherit the parent family's tolerance against the
+    ``*_fused_ref`` jitted oracles — BIT-IDENTICAL for the byte-code
+    linears (the prologue/epilogue run in the same f32 op order the
+    oracle jits), atol 1e-4 for the packed-int4 family (per-K-group f32
+    accumulation, observed ~2e-6).
 """
 import functools
 
@@ -94,6 +101,14 @@ TOLERANCES = {
     "attn_codes_vec": 0.0,
     "attn_pv_vec": 0.0,
     "flash_vec": 1e-5,
+    "linear_fused": 0.0,        # prologue/epilogue fusions: byte-code
+    "linear_mrq_fused": 0.0,    # linears stay bit-identical
+    "int4_linear_fused": 1e-4,
+    "int4_linear_mrq_fused": 1e-4,
+    "linear_fused_vec": 0.0,
+    "linear_mrq_fused_vec": 0.0,
+    "int4_linear_fused_vec": 1e-4,
+    "int4_linear_mrq_fused_vec": 1e-4,
 }
 
 
@@ -224,6 +239,133 @@ def test_linear_mrq_conformance(bname, shape):
                                pack["scale_neg"], pack["scale_pos"], bias,
                                g=g)
                 _assert_conforms("linear_mrq", got, want)
+
+
+# ---------------------------------------------------------------------------
+# prologue/epilogue fusions on the linear families: channel-balance
+# prescale (ps), adaLN norm-modulate (nm), gate+residual (gr)
+# ---------------------------------------------------------------------------
+FUSION_SHAPES = [(8, 16, 8), (7, 13, 5), (130, 257, 129), (64, 512, 96)]
+
+
+def _fusion_operands(M, K, N, seed):
+    """Per-batch adaLN rows + a positive channel-balance vector. B is a
+    proper divisor of M so the row->batch map exercises row grouping
+    (M=7 makes every row its own batch)."""
+    B = next(b for b in (4, 3, 2, 7, 1) if M % b == 0)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 101), 5)
+    ps = jnp.exp(jax.random.uniform(ks[0], (K,), minval=-1.0, maxval=1.0))
+    nm = (jax.random.normal(ks[1], (B, K)) * 0.5,
+          jax.random.normal(ks[2], (B, K)) * 0.2)
+    gr = (jax.random.normal(ks[3], (B, N)) * 0.8,
+          jax.random.normal(ks[4], (M, N)))
+    bv = jnp.repeat(jnp.arange(B, dtype=jnp.int32), M // B)
+    return ps, nm, gr, bv
+
+
+_FUSION_COMBOS = ("ps", "nm", "gr", "all")     # each alone + all three
+
+
+@pytest.mark.parametrize("shape", FUSION_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_fusion_conformance(bname, shape):
+    """Fused-prologue/epilogue uniform linears through the ops dispatch
+    (pack built WITH ``x_prescale`` for the ps combos) vs the
+    ``*_fused_ref`` jitted oracles, scalar-prefetch and mixed-vector
+    tgroup paths."""
+    bits = BITS[bname]
+    M, K, N = shape
+    ps, nm, gr, bv = _fusion_operands(M, K, N, seed=M + K + N)
+    for G in GROUPS:
+        x, w, bias, qp = _uniform_linear_case(M, K, N, G, bits,
+                                              seed=M * K + N + G)
+        qp_ps = dict(qp, x_prescale=ps)
+        if bits == 4:
+            pack = ops.pack_int4_linear(qp, w)
+            pack_ps = ops.pack_int4_linear(qp_ps, w)
+            lin, path = ops.int4_linear, "int4_linear_fused"
+            want_fn = _jit_ref(ref.int4_matmul_fq_fused_ref,
+                               group_k=pack["group_k"])
+            vec_fn = _jit_ref(ref.int4_matmul_fq_vec_fused_ref,
+                              group_k=pack["group_k"])
+            wargs = ("wp", "sx", "zx", "scale", "corr")
+        else:
+            pack = ops.pack_int8_linear(qp, w)
+            pack_ps = ops.pack_int8_linear(qp_ps, w)
+            lin, path = ops.int8_linear, "linear_fused"
+            want_fn = _jit_ref(ref.int8_matmul_fq_fused_ref, bits=bits)
+            vec_fn = _jit_ref(ref.int8_matmul_fq_vec_fused_ref, bits=bits)
+            wargs = ("wq", "sx", "zx", "scale", "corr")
+        np.testing.assert_array_equal(np.asarray(pack_ps["x_prescale"]),
+                                      np.asarray(ps))
+        g = G - 1
+        for combo in _FUSION_COMBOS:
+            p = pack_ps if combo in ("ps", "all") else pack
+            nm_i = nm if combo in ("nm", "all") else None
+            gr_i = gr if combo in ("gr", "all") else None
+            got = lin(x, p, bias=bias, tgroup=g, norm_mod=nm_i,
+                      gate_residual=gr_i)
+            want = want_fn(x, *(p[a] for a in wargs), bias, g=g,
+                           ps=p.get("x_prescale"), nm=nm_i, gr=gr_i, bv=bv)
+            _assert_conforms(path, got, want)
+        if G > 1:
+            gv = _mix_rows(M, G)
+            got = lin(x, pack_ps, bias=bias, tgroup=gv, norm_mod=nm,
+                      gate_residual=gr)
+            want = vec_fn(x, *(pack_ps[a] for a in wargs), bias, gv=gv,
+                          ps=ps, nm=nm, gr=gr, bv=bv)
+            _assert_conforms(path + "_vec", got, want)
+
+
+@pytest.mark.parametrize("shape", FUSION_SHAPES, ids=lambda s: "x".join(map(
+    str, s)))
+@pytest.mark.parametrize("bname", sorted(BITS))
+def test_linear_mrq_fusion_conformance(bname, shape):
+    """Same fusion sweep on the single-pass MRQ linears — the prologue
+    runs BEFORE the sign split (the balance vector is positive, so the
+    region assignment is untouched)."""
+    bits = BITS[bname]
+    M, K, N = shape
+    ps, nm, gr, bv = _fusion_operands(M, K, N, seed=M * 2 + K + N)
+    for G in GROUPS:
+        x, w, bias, qp = _mrq_linear_case(M, K, N, G, bits,
+                                          seed=M + K * N + G)
+        qp_ps = dict(qp, x_prescale=ps)
+        if bits == 4:
+            pack = ops.pack_int4_mrq_linear(qp, w)
+            pack_ps = ops.pack_int4_mrq_linear(qp_ps, w)
+            lin, path = ops.int4_linear_mrq, "int4_linear_mrq_fused"
+            want_fn = _jit_ref(ref.int4_matmul_mrq_fq_fused_ref,
+                               group_k=pack["group_k"])
+            vec_fn = _jit_ref(ref.int4_matmul_mrq_fq_vec_fused_ref,
+                              group_k=pack["group_k"])
+            wargs = ("wp", "s_neg", "s_pos", "scale_neg", "scale_pos")
+        else:
+            pack = ops.pack_int8_mrq_linear(qp, w)
+            pack_ps = ops.pack_int8_mrq_linear(qp_ps, w)
+            lin, path = ops.int8_linear_mrq, "linear_mrq_fused"
+            want_fn = _jit_ref(ref.int8_matmul_mrq_fq_fused_ref, bits=bits)
+            vec_fn = _jit_ref(ref.int8_matmul_mrq_fq_vec_fused_ref,
+                              bits=bits)
+            wargs = ("wq", "s_neg", "s_pos", "scale_neg", "scale_pos")
+        g = G - 1
+        for combo in _FUSION_COMBOS:
+            p = pack_ps if combo in ("ps", "all") else pack
+            nm_i = nm if combo in ("nm", "all") else None
+            gr_i = gr if combo in ("gr", "all") else None
+            got = lin(x, p, bias=bias, tgroup=g, norm_mod=nm_i,
+                      gate_residual=gr_i)
+            want = want_fn(x, *(p[a] for a in wargs), bias, g=g,
+                           ps=p.get("x_prescale"), nm=nm_i, gr=gr_i, bv=bv)
+            _assert_conforms(path, got, want)
+        if G > 1:
+            gv = _mix_rows(M, G)
+            got = lin(x, pack_ps, bias=bias, tgroup=gv, norm_mod=nm,
+                      gate_residual=gr)
+            want = vec_fn(x, *(pack_ps[a] for a in wargs), bias, gv=gv,
+                          ps=ps, nm=nm, gr=gr, bv=bv)
+            _assert_conforms(path + "_vec", got, want)
 
 
 # ---------------------------------------------------------------------------

@@ -171,10 +171,12 @@ def test_tgq_mrq_routes_through_kernel():
                                rtol=1e-3, atol=2e-3)
 
 
-def test_channel_balanced_ops_not_packed():
-    """Ops with an x_prescale (PTQ4DiT-style channel balancing) must stay
-    on the fake-quant path: their quantizers are calibrated on x/ps and
-    w*ps, and the kernel's quantize prologue has no prescale divide."""
+def test_channel_balanced_ops_pack_with_prescale_folded():
+    """Ops with an x_prescale (PTQ4DiT-style channel balancing) pack like
+    everything else: the balance divide runs in the kernel's quantize
+    prologue (``pack["x_prescale"]``) and its inverse is baked into the
+    weight codes (built from w*ps — exactly the tensor the calibrated
+    ``ChannelQ`` saw). Kernel path ≡ fake-quant path bit-for-bit."""
     K, N = 24, 16
     w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05)
     x = jax.random.normal(jax.random.PRNGKey(1), (5, K))
@@ -186,11 +188,20 @@ def test_channel_balanced_ops_not_packed():
         "w": ChannelQ(channel_scale_from_absmax(weight_absmax(ws), 8), 8),
         "x_prescale": ps}}
     out = ops.convert_for_kernels(qp, {"lin": w})
-    assert "int8" not in out["lin"] and "int8_mrq" not in out["lin"]
+    assert "int8" in out["lin"], "channel-balanced op must pack"
+    np.testing.assert_array_equal(np.asarray(out["lin"]["int8"]["x_prescale"]),
+                                  np.asarray(ps, np.float32))
+    # the packed codes must be the codes calibration measured (on w*ps)
+    codes_cal = np.asarray(jnp.clip(
+        jnp.round(ws / qp["lin"]["w"].scale.reshape(1, -1)), -127, 127),
+        np.int8)
+    np.testing.assert_array_equal(np.asarray(out["lin"]["int8"]["wq"]),
+                                  codes_cal)
     y_fake = QuantContext(qparams=out).linear("lin", x, jnp.asarray(w))
     y_kern = QuantContext(qparams=out, kernel=True).linear(
         "lin", x, jnp.asarray(w))
-    np.testing.assert_array_equal(np.asarray(y_fake), np.asarray(y_kern))
+    np.testing.assert_allclose(np.asarray(y_fake), np.asarray(y_kern),
+                               rtol=0, atol=1e-5)
 
 
 def test_per_tensor_pack_still_works():
@@ -223,6 +234,31 @@ def test_traffic_model_floors():
     t = traffic_int8_linear(M, K, N)
     assert t["unfused"] - t["fused"] >= M * K * 1 + M * K * 4
     assert t["fused"] == M * K * 4 + K * N + M * N * 4
+
+
+def test_fusion_residue_traffic_model():
+    """The adaLN prologue/epilogue fusions: every chain byte in the XL/2
+    block is served by a fusion (zero uncharged residue), the charged
+    fused-operand bytes are strictly below the eliminated chain bytes at
+    every fused site, and the block aggregate clears the >=1.15x CI gate
+    vs the pre-fusion baseline."""
+    from benchmarks.kernel_micro import (
+        fused_block_traffic, traffic_gate_residual_fusion,
+        traffic_norm_mod_fusion)
+    t = fused_block_traffic()
+    assert t["residue_adaln_residual"] == 0
+    assert t["unfused"] / t["fused"] >= 1.15
+    for name, fusion, ts in t["sites"]:
+        if fusion is not None:
+            assert ts["charged_bytes"] < ts["chain_bytes"], name
+            assert ts["fused"] < ts["unfused"], name
+    # per-site models at the fc2 shape: the gate+residual epilogue saves
+    # the full 12B/elt output chain minus the streamed residual + gate
+    M, B, K, N = 1024, 4, 4608, 1152
+    tg = traffic_gate_residual_fusion(M, B, K, N)
+    assert tg["unfused"] - tg["fused"] == 8 * M * N - 4 * B * N
+    tn = traffic_norm_mod_fusion(M, B, N, K)
+    assert tn["unfused"] - tn["fused"] == 4 * M * N - 16 * M - 8 * B * N
 
 
 # ---------------------------------------------------------------------------
@@ -271,3 +307,79 @@ def test_ddpm_sample_kernel_path_compiles_once(monkeypatch):
     assert len(kernel_calls) == n_kernel_first
     assert bool(jnp.all(jnp.isfinite(out1))) and bool(
         jnp.all(jnp.isfinite(out2)))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: channel-balanced w8a8 serves fully on kernels (zero
+# fallback packs), fused adaLN prologues/epilogues active, compiled once
+# ---------------------------------------------------------------------------
+def test_engine_w8a8_channel_balance_zero_fallback_fused_serve(
+        tiny_dit, monkeypatch):
+    """The prescale-fold regression: a ``channel_balance=True`` HO w8a8
+    artifact packs EVERY quantized matmul — ``fallback_ops()`` is empty,
+    the serve-CLI fallback warning is None, the balance vectors ride the
+    packs — and the engine serves it through the fused int8 kernels with
+    the adaLN norm-modulate/gate-residual fusions live, tracing ONCE.
+    The kernel samples agree with the same artifact's fake-quant oracle
+    (which runs the identical chains UNFUSED in fp via the ctx helpers),
+    so this is also the engine-level fused == unfused contract. Edge
+    projections (x_proj / final) must be packed too."""
+    import functools
+    from repro.diffusion import DiffusionCfg, make_schedule
+    from repro.kernels import ops as kops
+    from repro.launch.serve import fake_quant_fallback_warning
+    from repro.models import dit_apply
+    from repro.quant import QuantRecipe, quantize
+    from repro.serving import GenRequest, ServeEngine
+
+    cfg, p = tiny_dit
+    dif = DiffusionCfg(T=40, tgq_groups=4)
+    sched = make_schedule(dif)
+    art = quantize(p, cfg, dif, QuantRecipe(
+        bits="w8a8", method="ho", rounds=1, n_alpha=4, n_per_group=2,
+        calib_batch=2, channel_balance=True))
+    assert art.has_kernel_packs
+    assert art.fallback_ops() == [], \
+        "channel-balanced ops must pack (prescale folds into the kernel)"
+    assert fake_quant_fallback_warning(art) is None
+    balanced = [n for n, qp in art.qparams.items() if "x_prescale" in qp]
+    assert balanced, "channel_balance=True produced no balance vectors"
+    for n in balanced:
+        pack = art.qparams[n].get("int8") or art.qparams[n].get("int8_mrq")
+        assert pack is not None and "x_prescale" in pack, n
+    for n in ("x_proj", "final"):
+        assert any(k in art.qparams.get(n, {})
+                   for k in ("int8", "int8_mrq")), \
+            f"edge projection {n} must serve quantized"
+
+    calls = {"n": 0}
+    for fname in ("int8_matmul_fq", "int8_matmul_mrq_fq"):
+        orig = getattr(kops, fname)
+        monkeypatch.setattr(kops, fname, functools.partial(
+            lambda orig, *a, **kw: (calls.__setitem__("n", calls["n"] + 1),
+                                    orig(*a, **kw))[1], orig))
+    traces = []
+    orig_apply = dit_apply
+
+    def traced_apply(*a, **kw):
+        traces.append(1)
+        return orig_apply(*a, **kw)
+
+    import repro.serving.engine as eng_mod
+    monkeypatch.setattr(eng_mod, "dit_apply", traced_apply)
+
+    reqs = [GenRequest(request_id=i, label=i % cfg.n_classes, steps=4,
+                       cfg_scale=1.5, seed=60 + i) for i in range(2)]
+    eng = ServeEngine(p, cfg, dif, sched, ctx=art.context(), microbatch=2,
+                      step_buckets=(4,))
+    res = eng.serve(reqs)
+    assert len(traces) == 1, \
+        "fused prologues broke the compile-once contract"
+    assert calls["n"] > 0, "int8 kernels never fired"
+    kern = np.stack([res[i].sample for i in range(2)])
+    assert np.isfinite(kern).all()
+
+    eng_fake = ServeEngine(p, cfg, dif, sched, ctx=art.context(kernel=False),
+                           microbatch=2, step_buckets=(4,))
+    fake = np.stack([eng_fake.serve(reqs)[i].sample for i in range(2)])
+    np.testing.assert_allclose(kern, fake, rtol=0, atol=1e-4)
